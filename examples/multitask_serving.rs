@@ -1,0 +1,96 @@
+//! Multi-task serving correctness demo: prove that a MIXED batch through
+//! the coordinator returns exactly the same logits as serving each task
+//! alone — the §3.1 claim that per-task state can be stacked in a batch.
+//!
+//!     cargo run --release --example multitask_serving
+
+use std::collections::BTreeMap;
+
+use aotpt::config::Manifest;
+use aotpt::coordinator::{Coordinator, CoordinatorConfig, Request, TaskRegistry};
+use aotpt::runtime::{Runtime, WeightCache};
+use aotpt::tensor::Tensor;
+use aotpt::util::Pcg64;
+
+fn main() -> aotpt::Result<()> {
+    let manifest = Manifest::load(&aotpt::artifacts_dir())?;
+    let runtime = Runtime::new()?;
+    let model = manifest.model("small")?;
+    let weights = WeightCache::from_ckpt(
+        &runtime,
+        &aotpt::artifacts_dir().join("backbone_small.aotckpt"),
+    )?;
+    let emb = weights.host("emb_tok")?.clone();
+
+    let mut registry = TaskRegistry::new(
+        model.n_layers,
+        model.vocab_size,
+        model.d_model,
+        manifest.multitask_classes,
+    );
+    let mut rng = Pcg64::new(11);
+    let task_names = ["alpha", "beta", "gamma"];
+    for task in task_names {
+        let (l, d, r) = (model.n_layers, model.d_model, 16);
+        let mut tr = BTreeMap::new();
+        tr.insert("t.fc.w1".into(), Tensor::from_f32(&[l, d, r], rng.normal_vec(l * d * r, 0.05)));
+        tr.insert("t.fc.b1".into(), Tensor::from_f32(&[l, r], rng.normal_vec(l * r, 0.02)));
+        tr.insert("t.fc.w2".into(), Tensor::from_f32(&[l, r, d], rng.normal_vec(l * r * d, 0.05)));
+        tr.insert("t.fc.b2".into(), Tensor::from_f32(&[l, d], rng.normal_vec(l * d, 0.02)));
+        tr.insert("t.head_w".into(), Tensor::from_f32(&[d, 3], rng.normal_vec(d * 3, 0.05)));
+        tr.insert("t.head_b".into(), Tensor::from_f32(&[3], rng.normal_vec(3, 0.05)));
+        registry.register_fc(task, &emb, &tr)?;
+    }
+
+    let coordinator = Coordinator::new(
+        runtime,
+        &manifest,
+        registry,
+        CoordinatorConfig { model: "small".into(), linger_ms: 5, signature: "aot".into() },
+    )?;
+
+    // One fixed input per task.
+    let inputs: Vec<Vec<i32>> = (0..task_names.len())
+        .map(|i| {
+            let mut ids = vec![aotpt::tokenizer::CLS];
+            let mut r = Pcg64::new(100 + i as u64);
+            for _ in 0..10 {
+                ids.push(r.range(5, model.vocab_size as i64) as i32);
+            }
+            ids
+        })
+        .collect();
+
+    // Solo: one request at a time (forced batch of 1..padded bucket).
+    let mut solo = Vec::new();
+    for (task, ids) in task_names.iter().zip(&inputs) {
+        let resp = coordinator.classify(task, ids.clone())?;
+        solo.push(resp.logits);
+    }
+
+    // Mixed: all three tasks submitted together -> one shared invocation.
+    let mut rxs = Vec::new();
+    for (task, ids) in task_names.iter().zip(&inputs) {
+        rxs.push(coordinator.submit(Request { task: task.to_string(), ids: ids.clone() })?);
+    }
+    let mut mixed = Vec::new();
+    let mut batch_sizes = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap()?;
+        batch_sizes.push(resp.batch_size);
+        mixed.push(resp.logits);
+    }
+
+    println!("mixed batch sizes: {batch_sizes:?}");
+    for ((task, s), m) in task_names.iter().zip(&solo).zip(&mixed) {
+        let max_delta = s
+            .iter()
+            .zip(m)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("{task}: solo {s:?} vs mixed {m:?} (max delta {max_delta:.2e})");
+        assert!(max_delta < 1e-4, "multi-task batching changed the answer!");
+    }
+    println!("OK: mixed-task batching is exact — the paper's §3.1 claim holds end-to-end.");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quick per-method inference-speed comparison (a pocket Figure 3).
+//!
+//!     cargo run --release --example speed_comparison [-- --model base --seq 128]
+//!
+//! For the full paper grids use `aotpt exp fig3|fig8|fig9`.
+
+use aotpt::config::Manifest;
+use aotpt::experiments::speed;
+use aotpt::model::predicted_overhead;
+use aotpt::runtime::Runtime;
+
+fn main() -> aotpt::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, default: &str| -> String {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1).cloned())
+            .unwrap_or_else(|| default.to_string())
+    };
+    let model = get("--model", "base");
+    let seq: usize = get("--seq", "128").parse()?;
+    let batch: usize = get("--batch", "16").parse()?;
+
+    let manifest = Manifest::load(&aotpt::artifacts_dir())?;
+    let runtime = Runtime::new()?;
+    let cells = speed::run_grid(&runtime, &manifest, &model, &[(batch, seq)], 5.0)?;
+
+    let info = manifest.model(&model)?;
+    println!("\n{model} @ batch {batch}, seq {seq} — measured vs analytic FLOPs model:");
+    for c in &cells {
+        let predicted = predicted_overhead(info, &c.method, batch, seq, 16, 20);
+        println!(
+            "  {:<12} measured {:.3} predicted {:.3}  ({:.2} ms)",
+            c.method,
+            c.ratio,
+            predicted,
+            c.measurement.mean_secs * 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,644 @@
+"""AOT pipeline: lower every (model, method, bucket) graph to HLO text.
+
+Python runs ONCE, at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.  Interchange is **HLO text**, not serialized
+``HloModuleProto`` — jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects, while the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+
+* ``<stem>.hlo.txt``        — one per artifact (see DESIGN.md §8)
+* ``backbone_<shape>.aotckpt`` — deterministic synthetic backbone weights
+* ``golden_<name>.aotckpt`` — input/output pairs for Rust integration tests
+* ``manifest.json``         — every artifact's positional input/output
+  signature, trainable-init specs, model geometry, method properties;
+  the single source of truth the Rust loader builds against.
+
+Usage:
+    python -m compile.aot --out ../artifacts            # default set
+    python -m compile.aot --out ../artifacts --quick    # tiny/small only
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ckpt
+from .configs import (
+    MODEL_CONFIGS,
+    MULTITASK_CLASSES,
+    PAPER_ANALOG,
+    TRAIN_BUCKET,
+    TRAIN_STEPS_PER_CALL,
+    Bucket,
+    ModelConfig,
+    artifact_name,
+    kron_factors,
+)
+from .kernels import ref
+from .kernels.aot_bias import aot_bias
+from .kernels.attention import attention
+from .kernels.kron import kron_fuse
+from .model import (
+    backbone_order,
+    backbone_shapes,
+    forward_serve,
+    init_backbone,
+    serve_input_shapes,
+)
+from .peft import MethodHP, METHOD_PROPERTIES, init_spec, trainable_param_order
+from .train import make_eval_fn, make_mlm_fn, make_train_fn
+
+# Serving methods measured in the Figure 3/8/9 overhead study.
+SPEED_METHODS = [
+    "fine-tune",  # the normalization baseline (= fused LoRA = vanilla)
+    "bitfit",
+    "lora",
+    "adapters",
+    "pt1",
+    "pt2",
+    "aot",
+    "aot-unfused",
+]
+
+# Trainable methods for the quality tables (Table 2 / Appendix Table 3).
+TRAIN_METHODS = [
+    "fine-tune", "bitfit", "lora", "adapters", "pt1", "pt2", "aot-kron", "aot-fc",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+class Builder:
+    """Accumulates artifacts + manifest entries."""
+
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out = out_dir
+        self.force = force
+        os.makedirs(out_dir, exist_ok=True)
+        self.manifest: Dict = {
+            "version": 1,
+            "vocab_size": None,
+            "multitask_classes": MULTITASK_CLASSES,
+            "models": {},
+            "method_properties": {
+                m: {
+                    "parameter_efficient": p[0],
+                    "zero_cost": p[1],
+                    "multi_task": p[2],
+                }
+                for m, p in METHOD_PROPERTIES.items()
+            },
+            "paper_analog": PAPER_ANALOG,
+            "artifacts": {},
+        }
+
+    def note_model(self, cfg: ModelConfig):
+        a, bf = kron_factors(cfg.vocab_size)
+        self.manifest["vocab_size"] = cfg.vocab_size
+        self.manifest["models"][cfg.name] = {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "vocab_size": cfg.vocab_size,
+            "max_positions": cfg.max_positions,
+            "params": cfg.param_count(),
+            "kron_a": a,
+            "kron_b": bf,
+        }
+
+    def add(
+        self,
+        stem: str,
+        fn: Callable,
+        inputs: Sequence[Tuple[str, tuple, str]],
+        outputs: Sequence[str],
+        meta: Dict,
+        force: bool = False,
+    ):
+        """Lower ``fn(*flat_inputs)`` and record its signature."""
+        path = os.path.join(self.out, f"{stem}.hlo.txt")
+        entry = {
+            "file": f"{stem}.hlo.txt",
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs
+            ],
+            "outputs": list(outputs),
+            **meta,
+        }
+        self.manifest["artifacts"][stem] = entry
+        if os.path.exists(path) and not (force or self.force):
+            return  # cached from a previous make; manifest still re-recorded
+        t0 = time.time()
+        specs = [jax.ShapeDtypeStruct(s, _DTYPE[d]) for _, s, d in inputs]
+        # keep_unused=True: the manifest promises the full positional
+        # signature; jit must not drop inputs that a given method ignores
+        # (e.g. `in.seed` for methods without dropout).
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [{time.time() - t0:6.2f}s] {stem} ({len(text) // 1024} KiB)")
+
+    def save_manifest(self):
+        path = os.path.join(self.out, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts -> {path}")
+
+
+# ---------------------------------------------------------------------------
+# Flat wrappers (positional flattening is THE contract with Rust)
+# ---------------------------------------------------------------------------
+
+def weight_inputs(cfg: ModelConfig) -> List[Tuple[str, tuple, str]]:
+    return [("w." + n, s, "f32") for n, s in backbone_shapes(cfg).items()]
+
+
+def serve_artifact(cfg: ModelConfig, method: str, bucket: Bucket, hp: MethodHP):
+    """(inputs, fn, outputs) for one serving artifact."""
+    sig_method = {"fine-tune": "fine-tune"}.get(method, method)
+    sv_shapes = serve_input_shapes(cfg, sig_method, bucket.batch, bucket.seq, hp)
+    bb_names = backbone_order(cfg)
+    w_in = weight_inputs(cfg)
+    if method == "aot-gather":
+        w_in = w_in + [("w.P", (cfg.n_layers, cfg.vocab_size, cfg.d_model), "f32")]
+    sv_in = [
+        (n, s, "i32" if n == "in.ids" else "f32") for n, s in sv_shapes.items()
+    ]
+    nw = len(w_in)
+
+    def fn(*args):
+        bb = dict(zip(bb_names, args[:len(bb_names)]))
+        if method == "aot-gather":
+            bb["P"] = args[len(bb_names)]
+        sp = dict(zip(sv_shapes.keys(), args[nw:]))
+        return forward_serve(cfg, bb, sp, sig_method, hp)
+
+    return w_in + sv_in, fn, ["logits"]
+
+
+def train_artifact(
+    cfg: ModelConfig, method: str, hp: MethodHP, bucket: Bucket, steps: int,
+    loss_type: str,
+):
+    order = trainable_param_order(cfg, method, hp)
+    specs = {e["name"]: tuple(e["shape"]) for e in init_spec(cfg, method, hp)}
+    bb_names = backbone_order(cfg)
+    w_in = weight_inputs(cfg)
+    t_in = [("t." + n, specs[n], "f32") for n in order]
+    m_in = [("m." + n, specs[n], "f32") for n in order]
+    v_in = [("v." + n, specs[n], "f32") for n in order]
+    k, b, n = steps, bucket.batch, bucket.seq
+    data_in = [
+        ("in.step", (), "i32"),
+        ("in.ids", (k, b, n), "i32"),
+        ("in.mask", (k, b, n), "f32"),
+        ("in.labels", (k, b), "f32"),
+        ("in.lr", (), "f32"),
+        ("in.seed", (), "i32"),
+    ]
+    train_fn = make_train_fn(cfg, method, hp, order, loss_type)
+    nb, nt = len(w_in), len(order)
+
+    def fn(*args):
+        bb = dict(zip(bb_names, args[:nb]))
+        tr = args[nb:nb + nt]
+        m = args[nb + nt:nb + 2 * nt]
+        v = args[nb + 2 * nt:nb + 3 * nt]
+        step, ids, mask, labels, lr, seed = args[nb + 3 * nt:]
+        return train_fn(bb, tr, m, v, step, ids, mask, labels, lr, seed)
+
+    outputs = (
+        ["t." + n for n in order]
+        + ["m." + n for n in order]
+        + ["v." + n for n in order]
+        + ["step", "loss"]
+    )
+    return w_in + t_in + m_in + v_in + data_in, fn, outputs, order
+
+
+def eval_artifact(cfg: ModelConfig, method: str, hp: MethodHP, bucket: Bucket):
+    order = trainable_param_order(cfg, method, hp)
+    specs = {e["name"]: tuple(e["shape"]) for e in init_spec(cfg, method, hp)}
+    bb_names = backbone_order(cfg)
+    w_in = weight_inputs(cfg)
+    t_in = [("t." + n, specs[n], "f32") for n in order]
+    data_in = [
+        ("in.ids", (bucket.batch, bucket.seq), "i32"),
+        ("in.mask", (bucket.batch, bucket.seq), "f32"),
+    ]
+    eval_fn = make_eval_fn(cfg, method, hp, order)
+    nb, nt = len(w_in), len(order)
+
+    def fn(*args):
+        bb = dict(zip(bb_names, args[:nb]))
+        tr = args[nb:nb + nt]
+        ids, mask = args[nb + nt:]
+        return eval_fn(bb, tr, ids, mask)
+
+    return w_in + t_in + data_in, fn, ["logits"]
+
+
+def fuse_fc_artifact(cfg: ModelConfig, rank: int):
+    l, v, d = cfg.n_layers, cfg.vocab_size, cfg.d_model
+    inputs = [
+        ("w.emb_tok", (v, d), "f32"),
+        ("t.fc.w1", (l, d, rank), "f32"),
+        ("t.fc.b1", (l, rank), "f32"),
+        ("t.fc.w2", (l, rank, d), "f32"),
+        ("t.fc.b2", (l, d), "f32"),
+    ]
+
+    def fn(e, w1, b1, w2, b2):
+        return jax.vmap(lambda a, b, c, dd: ref.fc_fuse_ref(e, a, b, c, dd))(
+            w1, b1, w2, b2
+        )
+
+    return inputs, fn, ["P"]
+
+
+def fuse_kron_artifact(cfg: ModelConfig, rank: int):
+    l, v, d = cfg.n_layers, cfg.vocab_size, cfg.d_model
+    a, bf = kron_factors(v)
+    inputs = [
+        ("t.kron.wl", (l, a, rank), "f32"),
+        ("t.kron.wm", (l, bf, rank), "f32"),
+        ("t.kron.wr", (l, rank * rank, d), "f32"),
+    ]
+
+    def fn(wl, wm, wr):
+        return jax.vmap(lambda x, y, z: ref.kron_fuse_ref(x, y, z, v))(wl, wm, wr)
+
+    return inputs, fn, ["P"]
+
+
+def mlm_artifact(cfg: ModelConfig, bucket: Bucket, steps: int):
+    bb_names = backbone_order(cfg)
+    shapes = backbone_shapes(cfg)
+    t_in = [("t." + n, shapes[n], "f32") for n in bb_names]
+    m_in = [("m." + n, shapes[n], "f32") for n in bb_names]
+    v_in = [("v." + n, shapes[n], "f32") for n in bb_names]
+    k, b, n = steps, bucket.batch, bucket.seq
+    data_in = [
+        ("in.step", (), "i32"),
+        ("in.ids", (k, b, n), "i32"),
+        ("in.mask", (k, b, n), "f32"),
+        ("in.labels", (k, b, n), "f32"),
+        ("in.lr", (), "f32"),
+    ]
+    train_fn = make_mlm_fn(cfg, bb_names)
+    nt = len(bb_names)
+
+    def fn(*args):
+        bb = args[:nt]
+        m = args[nt:2 * nt]
+        v = args[2 * nt:3 * nt]
+        step, ids, mask, labels, lr = args[3 * nt:]
+        return train_fn(bb, m, v, step, ids, mask, labels, lr)
+
+    outputs = (
+        ["t." + n for n in bb_names]
+        + ["m." + n for n in bb_names]
+        + ["v." + n for n in bb_names]
+        + ["step", "loss"]
+    )
+    return t_in + m_in + v_in + data_in, fn, outputs
+
+
+# ---------------------------------------------------------------------------
+# Kernel artifacts (L1 -> L3 composition proofs)
+# ---------------------------------------------------------------------------
+
+def kernel_artifacts(builder: Builder):
+    """Standalone Pallas-kernel artifacts executed by Rust integration
+    tests: prove interpret-mode Pallas survives the full AOT round trip."""
+    b, n, d, v = 2, 32, 16, 128
+
+    def aot_bias_fn(h, p, ids):
+        return aot_bias(h, p, ids, block_n=16)
+
+    builder.add(
+        "kernel_aot_bias",
+        aot_bias_fn,
+        [("in.h", (b, n, d), "f32"), ("in.p", (v, d), "f32"), ("in.ids", (b, n), "i32")],
+        ["out"],
+        {"kind": "kernel", "model": "tiny", "method": "aot", "batch": b, "seq": n},
+    )
+
+    h_, dh = 2, 8
+
+    def attn_fn(q, k, v_, mask):
+        return attention(q, k, v_, mask, block_q=16, block_k=16)
+
+    builder.add(
+        "kernel_attention",
+        attn_fn,
+        [
+            ("in.q", (b, h_, n, dh), "f32"),
+            ("in.k", (b, h_, n, dh), "f32"),
+            ("in.v", (b, h_, n, dh), "f32"),
+            ("in.mask", (b, n), "f32"),
+        ],
+        ["out"],
+        {"kind": "kernel", "model": "tiny", "method": "attention", "batch": b, "seq": n},
+    )
+
+    a, bf, r = 16, 8, 4
+
+    def kron_fn(wl, wm, wr):
+        return kron_fuse(wl, wm, wr, vocab=v, block_a=8)
+
+    builder.add(
+        "kernel_kron_fuse",
+        kron_fn,
+        [
+            ("in.wl", (a, r), "f32"),
+            ("in.wm", (bf, r), "f32"),
+            ("in.wr", (r * r, d), "f32"),
+        ],
+        ["out"],
+        {"kind": "kernel", "model": "tiny", "method": "aot-kron", "batch": 1, "seq": n},
+    )
+
+    # Golden inputs/outputs for the Rust side.
+    rng = np.random.default_rng(1234)
+    h = rng.standard_normal((b, n, d), dtype=np.float32)
+    p = rng.standard_normal((v, d), dtype=np.float32)
+    ids = rng.integers(0, v, (b, n)).astype(np.int32)
+    out = np.asarray(aot_bias_fn(jnp.asarray(h), jnp.asarray(p), jnp.asarray(ids)))
+    ckpt.save(
+        os.path.join(builder.out, "golden_kernel_aot_bias.aotckpt"),
+        {"in.h": h, "in.p": p, "in.ids": ids, "out": out},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Default artifact set
+# ---------------------------------------------------------------------------
+
+def default_hp(classes: int = MULTITASK_CLASSES) -> MethodHP:
+    return MethodHP(rank=16, prefix=20, classes=classes)
+
+
+def build_serving(builder: Builder, shapes: List[str], buckets: List[Bucket]):
+    hp = default_hp()
+    for shape in shapes:
+        cfg = MODEL_CONFIGS[shape]
+        builder.note_model(cfg)
+        for bucket in buckets:
+            if bucket.seq > cfg.max_positions - hp.prefix:
+                continue
+            for method in SPEED_METHODS:
+                stem = artifact_name("fwd", shape, method, bucket)
+                inputs, fn, outputs = serve_artifact(cfg, method, bucket, hp)
+                builder.add(
+                    stem, fn, inputs, outputs,
+                    {
+                        "kind": "fwd", "model": shape, "method": method,
+                        "batch": bucket.batch, "seq": bucket.seq,
+                        "rank": hp.rank, "prefix": hp.prefix,
+                        "classes": hp.classes,
+                    },
+                )
+
+
+def build_training(
+    builder: Builder,
+    shapes: List[str],
+    methods: List[str],
+    hps: Dict[str, List[MethodHP]],
+    bucket: Bucket = TRAIN_BUCKET,
+    steps: int = TRAIN_STEPS_PER_CALL,
+):
+    for shape in shapes:
+        cfg = MODEL_CONFIGS[shape]
+        builder.note_model(cfg)
+        for method in methods:
+            for hp in hps.get(method, [default_hp(2)]):
+                extra = {}
+                if method in ("lora", "adapters", "aot-kron", "aot-fc"):
+                    extra["r"] = hp.rank
+                if method in ("pt1", "pt2"):
+                    extra["p"] = hp.prefix
+                for loss_type in ["ce"]:
+                    stem = artifact_name(
+                        "train", shape, method, bucket, c=hp.classes, **extra
+                    )
+                    inputs, fn, outputs, order = train_artifact(
+                        cfg, method, hp, bucket, steps, loss_type
+                    )
+                    builder.add(
+                        stem, fn, inputs, outputs,
+                        {
+                            "kind": "train", "model": shape, "method": method,
+                            "batch": bucket.batch, "seq": bucket.seq,
+                            "rank": hp.rank, "prefix": hp.prefix,
+                            "classes": hp.classes, "steps_per_call": steps,
+                            "loss": loss_type,
+                            "trainable_order": order,
+                            "init": init_spec(cfg, method, hp),
+                        },
+                    )
+                # Eval at a larger batch so dev-set scoring is cheap.
+                ev_bucket = Bucket(batch=64, seq=bucket.seq)
+                stem = artifact_name("eval", shape, method, ev_bucket, c=hp.classes, **extra)
+                inputs, fn, outputs = eval_artifact(cfg, method, hp, ev_bucket)
+                builder.add(
+                    stem, fn, inputs, outputs,
+                    {
+                        "kind": "eval", "model": shape, "method": method,
+                        "batch": ev_bucket.batch, "seq": ev_bucket.seq,
+                        "rank": hp.rank, "prefix": hp.prefix,
+                        "classes": hp.classes,
+                    },
+                )
+
+
+def build_fuse(builder: Builder, shapes: List[str], ranks: Dict[str, List[int]]):
+    for shape in shapes:
+        cfg = MODEL_CONFIGS[shape]
+        for r in ranks.get("aot-fc", [16]):
+            inputs, fn, outputs = fuse_fc_artifact(cfg, r)
+            builder.add(
+                f"fuse_fc_{shape}_r{r}", fn, inputs, outputs,
+                {"kind": "fuse", "model": shape, "method": "aot-fc", "rank": r,
+                 "batch": 1, "seq": 0},
+            )
+        for r in ranks.get("aot-kron", [16]):
+            inputs, fn, outputs = fuse_kron_artifact(cfg, r)
+            builder.add(
+                f"fuse_kron_{shape}_r{r}", fn, inputs, outputs,
+                {"kind": "fuse", "model": shape, "method": "aot-kron", "rank": r,
+                 "batch": 1, "seq": 0},
+            )
+
+
+def build_backbones(builder: Builder, shapes: List[str]):
+    for shape in shapes:
+        cfg = MODEL_CONFIGS[shape]
+        builder.note_model(cfg)
+        path = os.path.join(builder.out, f"backbone_{shape}.aotckpt")
+        if os.path.exists(path) and not builder.force:
+            continue
+        t0 = time.time()
+        bb = init_backbone(cfg, jax.random.PRNGKey(20230517))  # paper-id seed
+        ckpt.save(path, {k: np.asarray(v) for k, v in bb.items()})
+        print(f"  [{time.time() - t0:6.2f}s] backbone_{shape}.aotckpt")
+
+
+def build_golden_fwd(builder: Builder):
+    """Golden end-to-end forward for Rust integration tests (tiny, aot)."""
+    cfg = MODEL_CONFIGS["tiny"]
+    hp = default_hp()
+    bucket = Bucket(batch=2, seq=16)
+    stem = artifact_name("fwd", "tiny", "aot", bucket)
+    # ensure the artifact exists
+    inputs, fn, outputs = serve_artifact(cfg, "aot", bucket, hp)
+    builder.add(
+        stem, fn, inputs, outputs,
+        {"kind": "fwd", "model": "tiny", "method": "aot",
+         "batch": bucket.batch, "seq": bucket.seq, "rank": hp.rank,
+         "prefix": hp.prefix, "classes": hp.classes},
+    )
+    bb = init_backbone(cfg, jax.random.PRNGKey(20230517))
+    rng = np.random.default_rng(99)
+    golden: Dict[str, np.ndarray] = {}
+    sv = serve_input_shapes(cfg, "aot", bucket.batch, bucket.seq, hp)
+    args = []
+    for name in backbone_order(cfg):
+        args.append(bb[name])
+    for name, shape in sv.items():
+        if name == "in.ids":
+            arr = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+        elif name == "in.mask":
+            arr = np.ones(shape, np.float32)
+        else:
+            arr = rng.standard_normal(shape).astype(np.float32) * 0.05
+        golden[name] = arr
+        args.append(jnp.asarray(arr))
+    logits = np.asarray(fn(*args))
+    golden["logits"] = logits
+    ckpt.save(os.path.join(builder.out, "golden_fwd_tiny_aot.aotckpt"), golden)
+    print("  golden_fwd_tiny_aot.aotckpt")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny/small only")
+    ap.add_argument("--force", action="store_true", help="regenerate cached files")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    builder = Builder(args.out, force=args.force)
+
+    # Buckets for the speed study (paper §4.4 grid) + coordinator serving.
+    speed_buckets = [
+        Bucket(b, n) for b in (1, 16, 64) for n in (16, 64, 128, 384)
+    ]
+    serve_shapes = ["tiny", "small"] if args.quick else ["tiny", "small", "base", "large"]
+    train_shapes = ["tiny", "small"] if args.quick else ["tiny", "small", "base"]
+    bb_shapes = serve_shapes
+
+    print("== backbones ==")
+    build_backbones(builder, bb_shapes)
+
+    print("== kernels ==")
+    kernel_artifacts(builder)
+
+    print("== serving ==")
+    # tiny/small get the full bucket grid; larger shapes trim the cells that
+    # are too slow for one CPU core (documented in EXPERIMENTS.md).
+    per_shape_buckets = {
+        "tiny": [Bucket(2, 16), Bucket(1, 64), Bucket(16, 64)],
+        "small": speed_buckets,
+        "base": speed_buckets,
+        "large": [Bucket(1, 16), Bucket(1, 64), Bucket(1, 128), Bucket(1, 384),
+                  Bucket(16, 16), Bucket(16, 64), Bucket(16, 128), Bucket(16, 384),
+                  Bucket(64, 16), Bucket(64, 64)],
+    }
+    for shape in serve_shapes:
+        build_serving(builder, [shape], per_shape_buckets[shape])
+
+    # Device-gather AoT artifact (L1 kernel on the serving path), tiny+small.
+    hp = default_hp()
+    for shape in ["tiny", "small"]:
+        cfg = MODEL_CONFIGS[shape]
+        bucket = Bucket(4, 64) if shape == "small" else Bucket(2, 16)
+        inputs, fn, outputs = serve_artifact(cfg, "aot-gather", bucket, hp)
+        builder.add(
+            artifact_name("fwd", shape, "aot-gather", bucket), fn, inputs, outputs,
+            {"kind": "fwd", "model": shape, "method": "aot-gather",
+             "batch": bucket.batch, "seq": bucket.seq, "rank": hp.rank,
+             "prefix": hp.prefix, "classes": hp.classes},
+        )
+
+    print("== training ==")
+    # Hyperparameter grids (config-scaled analog of Appendix Table 4).
+    grid = {
+        "fine-tune": [MethodHP(classes=2)],
+        "bitfit": [MethodHP(classes=2)],
+        "lora": [MethodHP(rank=r, classes=2) for r in (4, 16)],
+        "adapters": [MethodHP(rank=r, classes=2) for r in (16, 64)],
+        "pt1": [MethodHP(prefix=p, classes=2) for p in (5, 20)],
+        "pt2": [MethodHP(prefix=p, classes=2) for p in (5, 20)],
+        "aot-kron": [MethodHP(rank=r, classes=2) for r in (5, 25)],
+        "aot-fc": [MethodHP(rank=r, classes=2) for r in (32, 128)],
+    }
+    grid3 = {
+        m: [MethodHP(rank=h.rank, prefix=h.prefix, classes=3) for h in hs]
+        for m, hs in grid.items()
+    }
+    build_training(builder, train_shapes, TRAIN_METHODS, grid)
+    # 3-class variants (CB/MNLI-analog tasks) for tiny/small only.
+    build_training(builder, ["tiny", "small"], TRAIN_METHODS, grid3)
+
+    print("== fuse ==")
+    build_fuse(
+        builder, train_shapes,
+        {"aot-fc": [32, 128], "aot-kron": [5, 25]},
+    )
+
+    print("== mlm pretrain ==")
+    for shape in (["tiny"] if args.quick else ["tiny", "small"]):
+        cfg = MODEL_CONFIGS[shape]
+        inputs, fn, outputs = mlm_artifact(cfg, TRAIN_BUCKET, TRAIN_STEPS_PER_CALL)
+        builder.add(
+            artifact_name("pretrain", shape, "mlm", TRAIN_BUCKET), fn, inputs, outputs,
+            {"kind": "pretrain", "model": shape, "method": "mlm",
+             "batch": TRAIN_BUCKET.batch, "seq": TRAIN_BUCKET.seq,
+             "steps_per_call": TRAIN_STEPS_PER_CALL},
+        )
+
+    print("== golden ==")
+    build_golden_fwd(builder)
+
+    builder.save_manifest()
+    print(f"total: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The `aotckpt` binary tensor-checkpoint format, shared with Rust.
+
+Little-endian layout (mirrored by ``rust/src/tensor/ckpt.rs``):
+
+    magic   b"ACKP"
+    u32     version (1)
+    u32     tensor count
+    per tensor:
+        u16   name length, then UTF-8 name bytes
+        u8    dtype: 0 = f32, 1 = i32, 2 = i64
+        u8    ndim
+        u32   dims[ndim]
+        u64   payload byte length
+        raw   payload (row-major)
+
+Used for: synthetic pre-trained backbones (written here), trained task state
+and fused P matrices (written by the Rust training driver), and golden
+outputs for integration tests.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"ACKP"
+VERSION = 1
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.int64): 2}
+_DTYPES_INV = {0: np.float32, 1: np.int32, 2: np.int64}
+
+
+def save(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            raw = arr.tobytes()
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: not an aotckpt file")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dtype_code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(nbytes), dtype=_DTYPES_INV[dtype_code])
+            out[name] = arr.reshape(dims)
+    return out

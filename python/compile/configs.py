@@ -1,0 +1,156 @@
+"""Model shape families and artifact buckets for the AoT pipeline.
+
+The paper evaluates RoBERTa-Base/Large and DeBERTa-XL.  Offline, we build
+matched *shape families* (same geometry, scaled dims; see DESIGN.md §5) and
+treat `base`/`large`/`xl` as the stand-ins for the paper's three backbones.
+
+Everything here is consumed both by the JAX model (L2) and serialized into
+``artifacts/manifest.json`` so the Rust coordinator (L3) agrees on every
+shape without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+VOCAB_SIZE = 8192
+MAX_POSITIONS = 512
+# Fixed number of classes for multi-task (batched-head) serving artifacts.
+# Single-task training artifacts use the task's true class count.
+MULTITASK_CLASSES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of one backbone shape family (RoBERTa-style encoder)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int = VOCAB_SIZE
+    max_positions: int = MAX_POSITIONS
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Approximate backbone parameter count (embeddings included)."""
+        d, l, ff, v = self.d_model, self.n_layers, self.d_ff, self.vocab_size
+        emb = v * d + self.max_positions * d + 2 * d  # tok + pos + emb LN
+        per_layer = (
+            4 * (d * d + d)  # q, k, v, o projections
+            + d * ff + ff + ff * d + d  # FFN
+            + 4 * d  # two LayerNorms
+        )
+        return emb + l * per_layer
+
+
+MODEL_CONFIGS: Dict[str, ModelConfig] = {
+    # name                      d     l   h   ff
+    "tiny": ModelConfig("tiny", 64, 2, 2, 256),
+    "small": ModelConfig("small", 128, 4, 4, 512),
+    "base": ModelConfig("base", 256, 6, 8, 1024),
+    "large": ModelConfig("large", 512, 12, 8, 2048),
+    "xl": ModelConfig("xl", 768, 16, 12, 3072),
+}
+
+# Which paper backbone each family stands in for (documentation + manifest).
+# Shifted one tier down for the single-CPU-core testbed (DESIGN.md §5).
+PAPER_ANALOG = {
+    "small": "RoBERTa-Base",
+    "base": "RoBERTa-Large",
+    "large": "DeBERTa-XL",
+}
+
+
+def kron_factors(vocab_size: int) -> Tuple[int, int]:
+    """Pick (a, b) with a*b >= vocab_size, as balanced as possible.
+
+    Implements the paper's footnote-1 trick: |V| often factorizes badly
+    (50265 = 1117 * 3^2 * 5), so P is factorized *slightly larger* than the
+    vocabulary and the excess rows are ignored.
+    """
+    a = int(math.isqrt(vocab_size))
+    # Search near sqrt(V) for the pair minimizing a*b - V, preferring
+    # balanced factors (parameter efficiency: params ~ (a + b) * r).
+    best = None
+    for cand_a in range(max(2, a - 64), a + 65):
+        cand_b = (vocab_size + cand_a - 1) // cand_a
+        waste = cand_a * cand_b - vocab_size
+        key = (waste, abs(cand_a - cand_b))
+        if best is None or key < best[0]:
+            best = (key, (cand_a, cand_b))
+    return best[1]
+
+
+# ---------------------------------------------------------------------------
+# Methods
+# ---------------------------------------------------------------------------
+
+# Every fine-tuning method in the paper (Table 1).  ``lora-fused`` shares the
+# vanilla forward artifact (weights are fused per task), so it has no
+# separate serving signature.
+METHODS = [
+    "fine-tune",
+    "bitfit",
+    "lora",        # unfused: batched low-rank factors as inputs
+    "lora-fused",
+    "adapters",
+    "pt1",
+    "pt2",
+    "aot-kron",
+    "aot-fc",
+]
+
+# Methods that can serve many tasks from one backbone invocation.
+MULTITASK_METHODS = ["bitfit", "lora", "adapters", "pt1", "pt2", "aot-kron", "aot-fc"]
+
+# Methods whose trained weights fuse to a per-task P (serving artifact is the
+# shared "aot" signature: bias rows gathered ahead of time).
+AOT_METHODS = ["aot-kron", "aot-fc"]
+
+DEFAULT_RANKS = {
+    "lora": 8,
+    "adapters": 32,
+    "aot-kron": 16,
+    "aot-fc": 64,
+}
+DEFAULT_PREFIX_LEN = 20  # p for pt1 / pt2
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A static (batch, seq) instantiation of an artifact."""
+
+    batch: int
+    seq: int
+
+    def tag(self) -> str:
+        return f"b{self.batch}n{self.seq}"
+
+
+# Serving buckets cover the paper's speed grid (§4.4): batch ∈ {1, 16, 64},
+# seq ∈ {16, 64, 128, 384}.  Training buckets are fixed-seq.
+SPEED_BATCHES = [1, 16, 64]
+SPEED_SEQS = [16, 64, 128, 384]
+
+TRAIN_BUCKET = Bucket(batch=16, seq=64)
+TRAIN_STEPS_PER_CALL = 8  # scan this many optimizer steps inside one call
+
+
+def serving_buckets() -> List[Bucket]:
+    return [Bucket(b, n) for b in SPEED_BATCHES for n in SPEED_SEQS]
+
+
+def artifact_name(kind: str, model: str, method: str, bucket: Bucket, **extra) -> str:
+    """Canonical artifact file stem, shared with the Rust loader."""
+    parts = [kind, model, method, bucket.tag()]
+    for key in sorted(extra):
+        parts.append(f"{key}{extra[key]}")
+    return "_".join(parts)

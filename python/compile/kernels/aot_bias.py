@@ -1,0 +1,100 @@
+"""Pallas kernel for the AoT P-Tuning hot-spot: ``H' = H + P[ids]``.
+
+This is the operation the paper is named after (Equation 1): before every
+Transformer layer, rows of a fused per-layer prompt table ``P ∈ R^{V×d}``
+are looked up for the tokens of the input sequence and added to the hidden
+states.
+
+TPU mapping (DESIGN.md §3): ``P`` is far larger than VMEM (V×d, ~16–100 MB),
+so it stays in HBM (``memory_space=ANY``) and the kernel performs dynamic
+row gathers while streaming ``(block_n, d)`` tiles of ``H`` through VMEM.
+The grid iterates ``(batch, n // block_n)``; token ids for the tile ride
+along as a VMEM int32 vector.  The gather is bandwidth-bound: bytes moved
+are ``3·n·d·4`` per layer (H in, P rows in, H' out), which is why the paper
+measures the op as near-zero-cost next to the layer's matmuls.
+
+The kernel MUST run with ``interpret=True`` on this CPU-only setup: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _aot_bias_kernel(ids_ref, h_ref, p_ref, out_ref, *, block_n: int):
+    """One (batch row, seq tile): out = h + P[ids], gathering rows from HBM.
+
+    ids_ref: [block_n]      int32, VMEM
+    h_ref:   [block_n, d]   f32,   VMEM
+    p_ref:   [V, d]         f32,   ANY (HBM-resident table)
+    out_ref: [block_n, d]   f32,   VMEM
+    """
+    d = h_ref.shape[-1]
+
+    def body(i, _):
+        tok = ids_ref[i]
+        # Dynamic single-row gather from the HBM table.  On TPU this is the
+        # HBM→VMEM DMA the BlockSpec schedule double-buffers; in interpret
+        # mode it is a plain dynamic slice.
+        row = pl.load(p_ref, (pl.dslice(tok, 1), pl.dslice(0, d)))
+        cur = pl.load(h_ref, (pl.dslice(i, 1), pl.dslice(0, d)))
+        pl.store(out_ref, (pl.dslice(i, 1), pl.dslice(0, d)), cur + row)
+        return 0
+
+    jax.lax.fori_loop(0, block_n, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def aot_bias(
+    h: jnp.ndarray,
+    p: jnp.ndarray,
+    ids: jnp.ndarray,
+    *,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas-accelerated ``h + p[ids]``.
+
+    h:   [b, n, d] float32
+    p:   [V, d]    float32 fused prompt table
+    ids: [b, n]    int32
+    """
+    b, n, d = h.shape
+    block_n = min(block_n, n)
+    # Pad n up to a multiple of block_n; padded ids point at row 0 but the
+    # padded tail of the output is sliced away below.
+    pad = (-n) % block_n
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        ids = jnp.pad(ids, ((0, 0), (0, pad)))
+    n_pad = n + pad
+
+    grid = (b, n_pad // block_n)
+    out = pl.pallas_call(
+        functools.partial(_aot_bias_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_n), lambda bi, ni: (bi, ni)),
+            pl.BlockSpec((None, block_n, d), lambda bi, ni: (bi, ni, 0)),
+            # Full table visible to every program instance: stays in HBM.
+            pl.BlockSpec(p.shape, lambda bi, ni: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_n, d), lambda bi, ni: (bi, ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad, d), h.dtype),
+        interpret=interpret,
+    )(ids, h, p)
+    return out[:, :n, :]
+
+
+def vmem_bytes(block_n: int, d: int) -> int:
+    """Analytic VMEM footprint of one program instance (f32)."""
+    ids = block_n * 4
+    h_tile = block_n * d * 4
+    out_tile = block_n * d * 4
+    gathered_row = d * 4 * 2  # double-buffered DMA landing zone
+    return ids + h_tile + out_tile + gathered_row

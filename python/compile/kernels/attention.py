@@ -1,0 +1,182 @@
+"""Flash-style Pallas attention kernel (+ the P-Tuning v2 prefix variant).
+
+The paper's central speed claim (Figure 3) is that AoT P-Tuning leaves the
+attention computation untouched — the same kernel serves the vanilla model,
+BitFit, fused LoRA and fused AoT P-Tuning — while P-Tuning v1/v2 grow the
+key/value sequence length and therefore the attention cost.  We implement
+both kernels so the overhead study measures real work, not emulation:
+
+* ``attention``       — softmax(QKᵀ/√dh + mask)·V, tiled over query blocks
+                        with a running-softmax accumulator over key blocks
+                        (the FlashAttention schedule, expressed with a
+                        3-D Pallas grid + VMEM scratch).
+* ``prefix_attention``— identical, but K/V are the concatenation of per-task
+                        soft prefixes (length p) with the real keys/values,
+                        exactly P-Tuning v2's Equation 8.
+
+TPU mapping (DESIGN.md §3): Q/K/V blocks are MXU-shaped (block_q × dh,
+block_k × dh matmuls hit the 128×128 systolic array); the running max/sum
+rescaling runs on the VPU in f32.  ``interpret=True`` is mandatory on this
+CPU-only setup.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import scratch
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(
+    q_ref, k_ref, v_ref, mask_ref, out_ref, acc_ref, m_ref, l_ref, *, scale: float
+):
+    """Grid = (batch*heads, nq_blocks, nk_blocks); innermost axis is nk.
+
+    q_ref:    [block_q, dh]   current query tile
+    k_ref:    [block_k, dh]   current key tile
+    v_ref:    [block_k, dh]   current value tile
+    mask_ref: [block_k]       key-side mask tile (1.0 = attend)
+    out_ref:  [block_q, dh]
+    acc/m/l:  VMEM scratch carrying the running softmax across nk blocks.
+    """
+    nk_index = pl.program_id(2)
+    nk_total = pl.num_programs(2)
+
+    @pl.when(nk_index == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    mask = mask_ref[...]
+
+    logits = jnp.dot(q, k.T) * scale  # [block_q, block_k] — MXU matmul
+    logits = logits + (1.0 - mask)[None, :] * NEG_INF
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(nk_index == nk_total - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...] / l_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Masked MHA.  q/k/v: [b, h, n, dh]; mask: [b, nk] (key side)."""
+    b, h, nq, dh = q.shape
+    nk = k.shape[2]
+    block_q = min(block_q, nq)
+    block_k = min(block_k, nk)
+
+    pad_q = (-nq) % block_q
+    pad_k = (-nk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad_k)))  # pads with 0.0 = masked
+    nq_p, nk_p = nq + pad_q, nk + pad_k
+
+    qf = q.reshape(b * h, nq_p, dh)
+    kf = k.reshape(b * h, nk_p, dh)
+    vf = v.reshape(b * h, nk_p, dh)
+    # Mask is per batch row; expand to per (batch, head) program.
+    maskf = jnp.repeat(mask, h, axis=0)  # [b*h, nk_p]
+
+    grid = (b * h, nq_p // block_q, nk_p // block_k)
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=1.0 / (dh**0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k), lambda bh, qi, ki: (bh, ki)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq_p, dh), q.dtype),
+        scratch_shapes=[
+            scratch((block_q, dh), jnp.float32),
+            scratch((block_q,), jnp.float32),
+            scratch((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, maskf)
+    return out.reshape(b, h, nq_p, dh)[:, :, :nq, :]
+
+
+def prefix_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    pk: jnp.ndarray,
+    pv: jnp.ndarray,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """P-Tuning v2 attention: per-task prefixes concatenated to K/V.
+
+    pk, pv: [b, h, p, dh].  The concatenation *lengthens the key axis* —
+    that added work is precisely the overhead Figure 3 attributes to
+    P-Tuning v2, so it must be real, not simulated.
+    """
+    k2 = jnp.concatenate([pk, k], axis=2)
+    v2 = jnp.concatenate([pv, v], axis=2)
+    ones = jnp.ones(mask.shape[:1] + (pk.shape[2],), dtype=mask.dtype)
+    mask2 = jnp.concatenate([ones, mask], axis=1)
+    return attention(
+        q, k2, v2, mask2, block_q=block_q, block_k=block_k, interpret=interpret
+    )
+
+
+def vmem_bytes(block_q: int, block_k: int, dh: int) -> int:
+    """Analytic VMEM footprint of one program instance (f32)."""
+    tiles = (block_q * dh) * 2  # q tile + out tile
+    tiles += (block_k * dh) * 2  # k tile + v tile
+    tiles += block_k  # mask tile
+    scratch = block_q * dh + 2 * block_q  # acc + m + l
+    return 4 * (tiles + scratch)
+
+
+def mxu_utilization(n: int, dh: int, block_q: int, block_k: int) -> float:
+    """Fraction of MXU-issue slots doing useful MACs for one head.
+
+    The two matmuls per (q,k) tile are (block_q×dh)·(dh×block_k) and
+    (block_q×block_k)·(block_k×dh).  Utilization is useful MACs over
+    128×128-systolic issue slots, i.e. the efficiency loss from dh < 128
+    and edge tiles.
+    """
+    mxu = 128
+    eff_q = block_q / (((block_q + mxu - 1) // mxu) * mxu)
+    eff_k = block_k / (((block_k + mxu - 1) // mxu) * mxu)
+    eff_d = dh / (((dh + mxu - 1) // mxu) * mxu)
+    return eff_q * eff_k * eff_d

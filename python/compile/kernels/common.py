@@ -1,0 +1,16 @@
+"""Shared helpers for the Pallas kernels in this package."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax._src import core as _jcore
+from jax.experimental import pallas as pl
+
+
+def scratch(shape: tuple, dtype=jnp.float32) -> pl.MemoryRef:
+    """A VMEM-style scratch allocation usable under ``interpret=True``.
+
+    On real TPU this would be ``pltpu.VMEM(shape, dtype)``; the portable
+    spelling keeps the kernels backend-agnostic for the CPU interpret path.
+    """
+    return pl.MemoryRef(_jcore.ShapedArray(shape, dtype), pl.ANY)

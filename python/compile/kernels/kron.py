@@ -1,0 +1,96 @@
+"""Pallas kernel for fusing the Kronecker reparametrization of P.
+
+Kronecker AoT P-Tuning (paper Equation 2) trains
+``P = (W_L ⊗ W_M) W_R`` with ``W_L ∈ R^{a×r}``, ``W_M ∈ R^{bf×r}``,
+``W_R ∈ R^{r²×d}`` and ``a·bf ≥ |V|``.  After training, P is fused once and
+stored in host RAM (paper §3.3) — this kernel is that fuse step.
+
+Materializing the Kronecker product ((a·bf) × r²) is wasteful; instead we
+use the identity
+
+    P[i·bf + j, :] = Σ_{u,v} W_L[i,u] · W_M[j,v] · W_R[u·r+v, :]
+
+and compute, per W_L row-block, the contraction
+``einsum('iu,jv,uvd->ijd', W_L_block, W_M, W_R)`` as two MXU matmuls:
+``T = W_L_block @ W_R.reshape(r, r·d)`` (contracting u), then per-j
+``W_M @ T_i`` (contracting v).  The grid walks W_L row blocks; W_M and W_R
+tiles stay resident in VMEM across iterations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kron_fuse_kernel(wl_ref, wm_ref, wr_ref, out_ref):
+    """One W_L row block.
+
+    wl_ref:  [block_a, r]
+    wm_ref:  [bf, r]
+    wr_ref:  [r*r, d]
+    out_ref: [block_a, bf, d]
+    """
+    block_a, r = wl_ref.shape
+    bf = wm_ref.shape[0]
+    d = wr_ref.shape[1]
+
+    wl = wl_ref[...]
+    wm = wm_ref[...]
+    wr = wr_ref[...].reshape(r, r * d)
+
+    # Contract u: [block_a, r] @ [r, r*d] -> [block_a, r, d]
+    t = jnp.dot(wl, wr).reshape(block_a, r, d)
+    # Contract v per row-block: [bf, r] @ [block_a, r, d] -> [block_a, bf, d]
+    out_ref[...] = jax.lax.dot_general(
+        wm, t, dimension_numbers=(((1,), (1,)), ((), ()))
+    ).transpose(1, 0, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "block_a", "interpret"))
+def kron_fuse(
+    wl: jnp.ndarray,
+    wm: jnp.ndarray,
+    wr: jnp.ndarray,
+    *,
+    vocab: int,
+    block_a: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fuse P = (W_L ⊗ W_M) W_R and truncate to `vocab` rows.
+
+    wl: [a, r], wm: [bf, r], wr: [r*r, d]  ->  [vocab, d]
+    """
+    a, r = wl.shape
+    bf = wm.shape[0]
+    d = wr.shape[1]
+    assert a * bf >= vocab, "factorization must cover the vocabulary"
+    assert wr.shape[0] == r * r
+
+    block_a = min(block_a, a)
+    pad = (-a) % block_a
+    if pad:
+        wl = jnp.pad(wl, ((0, pad), (0, 0)))
+    a_p = a + pad
+
+    out = pl.pallas_call(
+        _kron_fuse_kernel,
+        grid=(a_p // block_a,),
+        in_specs=[
+            pl.BlockSpec((block_a, r), lambda i: (i, 0)),
+            pl.BlockSpec((bf, r), lambda i: (0, 0)),
+            pl.BlockSpec((r * r, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_a, bf, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((a_p, bf, d), wl.dtype),
+        interpret=interpret,
+    )(wl, wm, wr)
+    return out.reshape(a_p * bf, d)[:vocab]
+
+
+def vmem_bytes(block_a: int, r: int, bf: int, d: int) -> int:
+    """Analytic VMEM footprint of one program instance (f32)."""
+    return 4 * (block_a * r + bf * r + r * r * d + block_a * r * d + block_a * bf * d)

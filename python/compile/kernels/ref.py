@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: each kernel in this package must
+match its oracle to float32 tolerance under pytest/hypothesis sweeps
+(``python/tests/test_kernels.py``).  They are also used directly by the L2
+model when ``use_pallas=False`` (e.g. for gradient paths where interpret-mode
+Pallas would be needlessly slow).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aot_bias_ref(h: jnp.ndarray, p: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """H' = H + P[ids]  (the paper's Equation 1).
+
+    h:   [b, n, d] hidden states
+    p:   [V, d]    fused per-layer prompt table
+    ids: [b, n]    int32 token ids
+    """
+    return h + p[ids]
+
+
+def _softmax(x: jnp.ndarray) -> jnp.ndarray:
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """Masked multi-head scaled dot-product attention.
+
+    q, k, v: [b, h, n, dh]
+    mask:    [b, nk] with 1.0 = attend, 0.0 = padding (key-side mask)
+    returns  [b, h, nq, dh]
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    bias = (1.0 - mask)[:, None, None, :] * -1e9
+    weights = _softmax(logits + bias)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v)
+
+
+def prefix_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    pk: jnp.ndarray,
+    pv: jnp.ndarray,
+) -> jnp.ndarray:
+    """P-Tuning v2 attention: prefixes concatenated to K and V (Equation 8).
+
+    pk, pv: [b, h, p, dh] per-task soft prefixes (already batched).
+    """
+    k2 = jnp.concatenate([pk, k], axis=2)
+    v2 = jnp.concatenate([pv, v], axis=2)
+    ones = jnp.ones(mask.shape[:1] + (pk.shape[2],), dtype=mask.dtype)
+    mask2 = jnp.concatenate([ones, mask], axis=1)
+    return attention_ref(q, k2, v2, mask2)
+
+
+def kron_fuse_ref(wl: jnp.ndarray, wm: jnp.ndarray, wr: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """P = (W_L ⊗ W_M) W_R, truncated to the first `vocab` rows (Equation 2).
+
+    wl: [a, r], wm: [bf, r], wr: [r*r, d]  ->  P: [vocab, d]
+    Row (i * bf + j) of the Kronecker product is the outer product
+    wl[i] ⊗ wm[j] flattened, so
+        P[i*bf+j] = sum_{u,v} wl[i,u] * wm[j,v] * wr[u*r+v].
+    """
+    a, r = wl.shape
+    bf, _ = wm.shape
+    d = wr.shape[1]
+    wr3 = wr.reshape(r, r, d)
+    p = jnp.einsum("iu,jv,uvd->ijd", wl, wm, wr3).reshape(a * bf, d)
+    return p[:vocab]
+
+
+def kron_rows_ref(
+    wl: jnp.ndarray, wm: jnp.ndarray, wr: jnp.ndarray, ids: jnp.ndarray
+) -> jnp.ndarray:
+    """Gathered rows of the Kronecker-parametrized P without materializing it.
+
+    Used on the training path: only rows for tokens present in the batch are
+    evaluated (paper §3.3, "we can evaluate only specific rows").
+    ids: [b, n] -> [b, n, d]
+    """
+    r = wl.shape[1]
+    d = wr.shape[1]
+    bf = wm.shape[0]
+    i = ids // bf
+    j = ids % bf
+    wr3 = wr.reshape(r, r, d)
+    return jnp.einsum("bnu,bnv,uvd->bnd", wl[i], wm[j], wr3)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximated GELU (matches the kernel implementation)."""
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fc_fuse_ref(
+    e: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """P = f(E W1 + b1) W2 + b2 with f = GELU (Equation 3).
+
+    e: [V, d], w1: [d, r], b1: [r], w2: [r, d], b2: [d]  ->  [V, d]
+    """
+    hidden = gelu(e @ w1 + b1)
+    return hidden @ w2 + b2
+
+
+def fc_rows_ref(
+    e_rows: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """FC reparametrization evaluated only on gathered embedding rows.
+
+    e_rows: [b, n, d] = E[ids]  ->  [b, n, d]
+    """
+    hidden = gelu(e_rows @ w1 + b1)
+    return hidden @ w2 + b2
+
+
+def layer_norm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,509 @@
+"""L2: RoBERTa-style Transformer encoder with every PEFT method as a hook.
+
+Layer weights are *stacked* along a leading layer axis (``wq: [l, d, d]``,
+…) and the encoder runs as one ``lax.scan`` over layers.  This keeps the
+artifact input signature at a fixed 20 backbone tensors regardless of
+depth, makes trace/lowering time depth-independent (hundreds of artifacts
+are generated on one core), and is also the layout the Rust runtime feeds.
+
+Two forward entry points share the scanned layer implementation:
+
+* ``forward_train`` — single-task, unbatched method parameters (the shapes
+  produced by ``peft.init_method_params``).  Differentiable; used by the
+  train/eval artifacts.
+* ``forward_serve`` — multi-task, per-batch-element method state (each
+  request in the batch may belong to a different task, paper §3.1).  Used
+  by the serving artifacts the Rust coordinator loads.
+
+AoT P-Tuning appears in three flavors:
+
+* training (``aot-kron`` / ``aot-fc``): rows of the reparametrized ``P``
+  are computed in-graph only for the tokens present (paper §3.3) and added
+  before each layer;
+* serving, host-gather (``aot``): the coordinator gathers rows of the
+  fused ``P`` from host RAM and ships a dense ``bias[l, b, n, d]`` — the
+  model just adds it (the "zero-cost" path of Figure 3);
+* serving, device-gather (``aot-gather``): the fused ``P[l, V, d]`` is
+  device-resident and rows are gathered in-graph by the Pallas
+  ``aot_bias`` kernel (validates L1↔L3 composition; not the Figure 3
+  path, where all methods share the pure-jnp attention for fairness).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.aot_bias import aot_bias
+from .peft import MethodHP
+
+LN_EPS = 1e-5
+LORA_ALPHA = 16.0
+
+# Backbone tensors whose leading axis is the layer index.
+LAYER_TENSORS = [
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln1_g", "ln1_b", "w1", "b1", "w2", "b2", "ln2_g", "ln2_b",
+]
+EMB_TENSORS = ["emb_tok", "emb_pos", "emb_ln_g", "emb_ln_b"]
+
+
+def backbone_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Ordered name -> shape map for every frozen backbone tensor."""
+    d, ff, v, l = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    shapes: Dict[str, tuple] = {
+        "emb_tok": (v, d),
+        "emb_pos": (cfg.max_positions, d),
+        "emb_ln_g": (d,),
+        "emb_ln_b": (d,),
+        "wq": (l, d, d), "bq": (l, d),
+        "wk": (l, d, d), "bk": (l, d),
+        "wv": (l, d, d), "bv": (l, d),
+        "wo": (l, d, d), "bo": (l, d),
+        "ln1_g": (l, d), "ln1_b": (l, d),
+        "w1": (l, d, ff), "b1": (l, ff),
+        "w2": (l, ff, d), "b2": (l, d),
+        "ln2_g": (l, d), "ln2_b": (l, d),
+    }
+    return shapes
+
+
+def backbone_order(cfg: ModelConfig) -> List[str]:
+    return list(backbone_shapes(cfg).keys())
+
+
+# Consecutive-id block size sharing one embedding centroid (see
+# init_backbone).  The synthetic lexicon (rust/src/data/lexicon.rs) assigns
+# cluster words contiguous ids, so blocks align with semantic clusters.
+EMB_CLUSTER_BLOCK = 50
+
+
+def init_backbone(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Deterministic synthetic 'pre-trained' backbone (DESIGN.md §2).
+
+    Two properties real pre-training provides are reproduced synthetically,
+    because the PEFT methods depend on them:
+
+    * **semantic embedding clusters** — `emb_tok[t] = centroid[t // B] +
+      noise`: words of one lexicon cluster (contiguous ids) share a
+      centroid direction, which is exactly the structure FC AoT P-Tuning's
+      `P = f(E W1) W2` exploits (paper §3.3: "utilize knowledge stored in
+      the pre-trained embeddings matrix");
+    * **non-degenerate attention** — 1/sqrt(fan_in) weight scaling keeps
+      attention logits O(1) so frozen-feature methods receive signal.
+    """
+    params = {}
+    shapes = backbone_shapes(cfg)
+    keys = jax.random.split(key, len(shapes) + 1)
+    centroid_key = keys[-1]
+    for k, (name, shape) in zip(keys, shapes.items()):
+        if "_g" in name:
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.startswith("b") or name.endswith("_b") or name in ("bq", "bk", "bv", "bo"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "emb_tok":
+            v, d = shape
+            n_clusters = (v + EMB_CLUSTER_BLOCK - 1) // EMB_CLUSTER_BLOCK
+            centroids = jax.random.normal(centroid_key, (n_clusters, d), jnp.float32)
+            cluster_of = jnp.arange(v) // EMB_CLUSTER_BLOCK
+            noise = jax.random.normal(k, shape, jnp.float32)
+            emb = 0.75 * centroids[cluster_of] + 0.66 * noise
+            params[name] = emb / jnp.sqrt(jnp.float32(d))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+    return params
+
+
+def _ln(x, g, b):
+    return ref.layer_norm_ref(x, g, b, LN_EPS)
+
+
+def _split_heads(x, n_heads):
+    b, n, d = x.shape
+    return x.reshape(b, n, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _dropout(x, rate, key, train):
+    if not train or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def _layer_body(cfg: ModelConfig, method: str, hp: MethodHP, mask, *, batched: bool):
+    """Scan body over layers, shared by the train and serve paths.
+
+    ``batched=False``: method state in ``xs`` is single-task (train path).
+    ``batched=True``:  method state carries a per-batch-element axis
+                       (multi-task serving, §3.1).
+    """
+    h_heads = cfg.n_heads
+    bitfit = method == "bitfit"
+
+    def pe(x):  # "per-element": insert the broadcast axis for serve tensors
+        return x[:, None, :] if batched else x
+
+    def body(hidden, xs):
+        bb = xs["bb"]
+
+        if "aot_rows" in xs:
+            # Equation 1: input-dependent bias before the layer.
+            hidden = hidden + xs["aot_rows"]
+        if "p_table" in xs:
+            # Device-gather flavor: fused P rows gathered in-graph (L1 kernel).
+            if xs.get("use_pallas", False):
+                hidden = aot_bias(hidden, xs["p_table"], xs["ids"])
+            else:
+                hidden = ref.aot_bias_ref(hidden, xs["p_table"], xs["ids"])
+
+        def proj_b(j, base):
+            if bitfit:
+                return base + pe(xs["bf.proj_b"][j])
+            return base
+
+        q = hidden @ bb["wq"] + proj_b(0, bb["bq"])
+        k = hidden @ bb["wk"] + proj_b(1, bb["bk"])
+        v = hidden @ bb["wv"] + proj_b(2, bb["bv"])
+
+        if method == "lora":
+            scale = LORA_ALPHA / hp.rank
+            if batched:
+                q = q + jnp.einsum(
+                    "bnr,brd->bnd",
+                    jnp.einsum("bnd,bdr->bnr", hidden, xs["lora.a_q"]),
+                    xs["lora.b_q"],
+                ) * scale
+                v = v + jnp.einsum(
+                    "bnr,brd->bnd",
+                    jnp.einsum("bnd,bdr->bnr", hidden, xs["lora.a_v"]),
+                    xs["lora.b_v"],
+                ) * scale
+            else:
+                q = q + (hidden @ xs["lora.a_q"]) @ xs["lora.b_q"] * scale
+                v = v + (hidden @ xs["lora.a_v"]) @ xs["lora.b_v"] * scale
+
+        qh, kh, vh = (_split_heads(x, h_heads) for x in (q, k, v))
+
+        if method == "pt2":
+            pk, pv = xs["pt2.pk"], xs["pt2.pv"]
+            if not batched:
+                b = hidden.shape[0]
+                pk = jnp.broadcast_to(pk, (b,) + pk.shape)
+                pv = jnp.broadcast_to(pv, (b,) + pv.shape)
+            attn = ref.prefix_attention_ref(
+                qh, kh, vh, mask, _split_heads(pk, h_heads), _split_heads(pv, h_heads)
+            )
+        else:
+            attn = ref.attention_ref(qh, kh, vh, mask)
+
+        a = _merge_heads(attn) @ bb["wo"] + proj_b(3, bb["bo"])
+
+        if method == "adapters":
+            if batched:
+                low = ref.gelu(
+                    jnp.einsum("bnd,bdr->bnr", a, xs["ad.attn_wd"]) + pe(xs["ad.attn_bd"])
+                )
+                a = a + jnp.einsum("bnr,brd->bnd", low, xs["ad.attn_wu"]) + pe(xs["ad.attn_bu"])
+            else:
+                low = ref.gelu(a @ xs["ad.attn_wd"] + xs["ad.attn_bd"])
+                a = a + low @ xs["ad.attn_wu"] + xs["ad.attn_bu"]
+
+        ln1_b = bb["ln1_b"] + (pe(xs["bf.ln_b"][0]) if bitfit else 0.0)
+        hidden = _ln(hidden + a, bb["ln1_g"], ln1_b)
+
+        f_b1 = bb["b1"] + (pe(xs["bf.ffn_b1"]) if bitfit else 0.0)
+        f_b2 = bb["b2"] + (pe(xs["bf.ffn_b2"]) if bitfit else 0.0)
+        f = ref.gelu(hidden @ bb["w1"] + f_b1) @ bb["w2"] + f_b2
+
+        if method == "adapters":
+            if batched:
+                low = ref.gelu(
+                    jnp.einsum("bnd,bdr->bnr", f, xs["ad.ffn_wd"]) + pe(xs["ad.ffn_bd"])
+                )
+                f = f + jnp.einsum("bnr,brd->bnd", low, xs["ad.ffn_wu"]) + pe(xs["ad.ffn_bu"])
+            else:
+                low = ref.gelu(f @ xs["ad.ffn_wd"] + xs["ad.ffn_bd"])
+                f = f + low @ xs["ad.ffn_wu"] + xs["ad.ffn_bu"]
+
+        ln2_b = bb["ln2_b"] + (pe(xs["bf.ln_b"][1]) if bitfit else 0.0)
+        hidden = _ln(hidden + f, bb["ln2_g"], ln2_b)
+        return hidden, None
+
+    return body
+
+
+def _pool(hidden, mask):
+    """Masked mean pooling.
+
+    With a synthetic (not genuinely pre-trained) frozen backbone, CLS
+    pooling buries the per-token signal the PEFT methods inject; the
+    masked mean exposes the paper's Equation-4 mechanism directly: the
+    last layer's AoT bias reaches the pooled vector through the residual
+    path.  Documented substitution (DESIGN.md §2).
+    """
+    denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return (hidden * mask[:, :, None]).sum(axis=1) / denom
+
+
+def _embed(cfg: ModelConfig, bb, ids, emb_ln_b_extra=None):
+    n = ids.shape[1]
+    hidden = bb["emb_tok"][ids] + bb["emb_pos"][:n][None, :, :]
+    beta = bb["emb_ln_b"] if emb_ln_b_extra is None else bb["emb_ln_b"] + emb_ln_b_extra
+    return _ln(hidden, bb["emb_ln_g"], beta)
+
+
+def _layer_stack(bb):
+    return {name: bb[name] for name in LAYER_TENSORS}
+
+
+# ---------------------------------------------------------------------------
+# Single-task (training) forward
+# ---------------------------------------------------------------------------
+
+def forward_train(
+    cfg: ModelConfig,
+    backbone: Dict[str, jnp.ndarray],
+    mp: Dict[str, jnp.ndarray],
+    method: str,
+    ids: jnp.ndarray,
+    mask: jnp.ndarray,
+    hp: MethodHP,
+    *,
+    train: bool = False,
+    dropout_key: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Logits [b, classes] for one task.
+
+    ``mp`` holds the method's trainable tensors plus ``head_w``/``head_b``.
+    For ``fine-tune`` the ``ft.``-prefixed tensors in ``mp`` replace the
+    frozen backbone.
+    """
+    if method == "fine-tune":
+        backbone = {k[3:]: v for k, v in mp.items() if k.startswith("ft.")}
+    if method == "lora-fused":
+        method = "lora"  # identical during training; fusing is a serve-time act
+
+    ids = ids.astype(jnp.int32)
+    b, n = ids.shape
+    l = cfg.n_layers
+    bb = backbone
+    key_p = dropout_key if dropout_key is not None else jax.random.PRNGKey(0)
+
+    hidden = _embed(cfg, bb, ids, mp["bf.emb_ln_b"] if method == "bitfit" else None)
+    cls_index = 0
+
+    if method == "pt1":
+        # Soft prompt prepended to the embedded sequence (Equation 7); the
+        # CLS token moves to position p.
+        prompt = jnp.broadcast_to(mp["pt1.prompt"], (b,) + mp["pt1.prompt"].shape)
+        hidden = jnp.concatenate([prompt, hidden], axis=1)
+        mask = jnp.concatenate([jnp.ones((b, hp.prefix), mask.dtype), mask], axis=1)
+        cls_index = hp.prefix
+
+    xs: Dict[str, jnp.ndarray] = {"bb": _layer_stack(bb)}
+
+    if method == "aot-kron":
+        keys = jax.random.split(key_p, l)
+        rows = jax.vmap(
+            lambda wl, wm, wr, k: _dropout(
+                ref.kron_rows_ref(wl, wm, wr, ids), hp.dropout, k, train
+            )
+        )(mp["kron.wl"], mp["kron.wm"], mp["kron.wr"], keys)
+        xs["aot_rows"] = rows  # [l, b, n, d], paper §4.1 dropout on P_x
+    elif method == "aot-fc":
+        e_rows = bb["emb_tok"][ids]
+        keys = jax.random.split(key_p, l)
+        rows = jax.vmap(
+            lambda w1, b1, w2, b2, k: ref.fc_rows_ref(
+                _dropout(e_rows, hp.dropout, k, train), w1, b1, w2, b2
+            )
+        )(mp["fc.w1"], mp["fc.b1"], mp["fc.w2"], mp["fc.b2"], keys)
+        xs["aot_rows"] = rows  # paper §4.1 dropout on E before W1
+    elif method == "bitfit":
+        xs["bf.proj_b"] = mp["bf.proj_b"]  # [l, 4, d]; scan slices the layer axis
+        xs["bf.ffn_b1"] = mp["bf.ffn_b1"]
+        xs["bf.ffn_b2"] = mp["bf.ffn_b2"]
+        xs["bf.ln_b"] = mp["bf.ln_b"]  # [l, 2, d]
+    elif method == "lora":
+        for k in ("lora.a_q", "lora.b_q", "lora.a_v", "lora.b_v"):
+            xs[k] = mp[k]
+    elif method == "adapters":
+        for k in (
+            "ad.attn_wd", "ad.attn_bd", "ad.attn_wu", "ad.attn_bu",
+            "ad.ffn_wd", "ad.ffn_bd", "ad.ffn_wu", "ad.ffn_bu",
+        ):
+            xs[k] = mp[k]
+    elif method == "pt2":
+        xs["pt2.pk"] = mp["pt2.pk"]
+        xs["pt2.pv"] = mp["pt2.pv"]
+
+    body = _layer_body(cfg, method, hp, mask, batched=False)
+    hidden, _ = jax.lax.scan(body, hidden, xs)
+
+    pooled = _pool(hidden, mask)
+    return pooled @ mp["head_w"] + mp["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-task (serving) forward
+# ---------------------------------------------------------------------------
+
+def serve_input_shapes(
+    cfg: ModelConfig, method: str, batch: int, seq: int, hp: MethodHP
+) -> Dict[str, tuple]:
+    """Ordered name -> shape of the per-call (non-weight) serving inputs.
+
+    These are what the Rust coordinator assembles per batch.  ``ids``/
+    ``mask`` come first; per-task state is stacked per batch element
+    (multi-task inference, §3.1); the batched classification head closes.
+    """
+    d, ff, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    r, p, c = hp.rank, hp.prefix, hp.classes
+    shapes: Dict[str, tuple] = {
+        "in.ids": (batch, seq),
+        "in.mask": (batch, seq),
+    }
+    if method in ("fine-tune", "lora-fused", "aot-gather"):
+        pass  # no extra per-call state (aot-gather's P is a weight input)
+    elif method == "aot":
+        shapes["in.bias"] = (l, batch, seq, d)
+    elif method == "aot-unfused":
+        # Paper §4.4's "no fusing" reference setup: FC reparam weights ship
+        # with the request and P rows are recomputed in-graph.
+        shapes["in.fc_w1"] = (l, batch, d, r)
+        shapes["in.fc_b1"] = (l, batch, r)
+        shapes["in.fc_w2"] = (l, batch, r, d)
+        shapes["in.fc_b2"] = (l, batch, d)
+    elif method == "bitfit":
+        shapes["in.proj_b"] = (l, 4, batch, d)
+        shapes["in.ffn_b1"] = (l, batch, ff)
+        shapes["in.ffn_b2"] = (l, batch, d)
+        shapes["in.ln_b"] = (l, 2, batch, d)
+        shapes["in.emb_ln_b"] = (batch, d)
+    elif method == "lora":
+        shapes["in.lora_a_q"] = (l, batch, d, r)
+        shapes["in.lora_b_q"] = (l, batch, r, d)
+        shapes["in.lora_a_v"] = (l, batch, d, r)
+        shapes["in.lora_b_v"] = (l, batch, r, d)
+    elif method == "adapters":
+        shapes["in.ad_attn_wd"] = (l, batch, d, r)
+        shapes["in.ad_attn_bd"] = (l, batch, r)
+        shapes["in.ad_attn_wu"] = (l, batch, r, d)
+        shapes["in.ad_attn_bu"] = (l, batch, d)
+        shapes["in.ad_ffn_wd"] = (l, batch, d, r)
+        shapes["in.ad_ffn_bd"] = (l, batch, r)
+        shapes["in.ad_ffn_wu"] = (l, batch, r, d)
+        shapes["in.ad_ffn_bu"] = (l, batch, d)
+    elif method == "pt1":
+        shapes["in.prompt"] = (batch, p, d)
+    elif method == "pt2":
+        shapes["in.pk"] = (l, batch, p, d)
+        shapes["in.pv"] = (l, batch, p, d)
+    else:
+        raise ValueError(f"unknown serving method: {method}")
+    shapes["in.head_w"] = (batch, d, c)
+    shapes["in.head_b"] = (batch, c)
+    return shapes
+
+
+def forward_serve(
+    cfg: ModelConfig,
+    backbone: Dict[str, jnp.ndarray],
+    sp: Dict[str, jnp.ndarray],
+    method: str,
+    hp: MethodHP,
+    *,
+    use_pallas_gather: bool = False,
+) -> jnp.ndarray:
+    """Multi-task batched forward.  ``sp`` follows ``serve_input_shapes``.
+
+    Every batch element carries its own task state (``[b, ...]`` axes), so
+    one backbone invocation serves many tasks — the batched multi-task
+    evaluation of §3.1.  For ``aot-gather`` the fused tables ride in
+    ``backbone["P"]`` with shape [l, V, d].
+    """
+    ids = sp["in.ids"].astype(jnp.int32)
+    mask = sp["in.mask"]
+    b, n = ids.shape
+    bb = backbone
+    bitfit = method == "bitfit"
+
+    hidden = _embed(
+        cfg, bb, ids, sp["in.emb_ln_b"][:, None, :] if bitfit else None
+    )
+    cls_index = 0
+
+    if method == "pt1":
+        hidden = jnp.concatenate([sp["in.prompt"], hidden], axis=1)
+        mask = jnp.concatenate([jnp.ones((b, hp.prefix), mask.dtype), mask], axis=1)
+        cls_index = hp.prefix
+
+    xs: Dict[str, jnp.ndarray] = {"bb": _layer_stack(bb)}
+
+    if method == "aot":
+        xs["aot_rows"] = sp["in.bias"]
+    elif method == "aot-unfused":
+        e_rows = bb["emb_tok"][ids]
+        rows = ref.gelu(
+            jnp.einsum("bnd,lbdr->lbnr", e_rows, sp["in.fc_w1"])
+            + sp["in.fc_b1"][:, :, None, :]
+        )
+        rows = (
+            jnp.einsum("lbnr,lbrd->lbnd", rows, sp["in.fc_w2"])
+            + sp["in.fc_b2"][:, :, None, :]
+        )
+        xs["aot_rows"] = rows
+    elif bitfit:
+        xs["bf.proj_b"] = sp["in.proj_b"]  # [l, 4, b, d]
+        xs["bf.ffn_b1"] = sp["in.ffn_b1"]
+        xs["bf.ffn_b2"] = sp["in.ffn_b2"]
+        xs["bf.ln_b"] = sp["in.ln_b"]  # [l, 2, b, d]
+    elif method == "lora":
+        xs["lora.a_q"] = sp["in.lora_a_q"]
+        xs["lora.b_q"] = sp["in.lora_b_q"]
+        xs["lora.a_v"] = sp["in.lora_a_v"]
+        xs["lora.b_v"] = sp["in.lora_b_v"]
+    elif method == "adapters":
+        for name in (
+            "attn_wd", "attn_bd", "attn_wu", "attn_bu",
+            "ffn_wd", "ffn_bd", "ffn_wu", "ffn_bu",
+        ):
+            xs[f"ad.{name}"] = sp[f"in.ad_{name}"]
+    elif method == "pt2":
+        xs["pt2.pk"] = sp["in.pk"]
+        xs["pt2.pv"] = sp["in.pv"]
+
+    if method == "aot-gather":
+        # Device-gather flavor: explicit scan so the pallas/ref choice (a
+        # static flag) stays out of the traced xs dict.
+        body_inner = _layer_body(cfg, "fine-tune", hp, mask, batched=True)
+
+        def body(h, per_layer):
+            p_table = per_layer["p_table"]
+            if use_pallas_gather:
+                h = aot_bias(h, p_table, ids)
+            else:
+                h = ref.aot_bias_ref(h, p_table, ids)
+            return body_inner(h, {"bb": per_layer["bb"]})
+
+        hidden, _ = jax.lax.scan(
+            body, hidden, {"bb": xs["bb"], "p_table": bb["P"]}
+        )
+    else:
+        body = _layer_body(cfg, method, hp, mask, batched=True)
+        hidden, _ = jax.lax.scan(body, hidden, xs)
+
+    pooled = _pool(hidden, mask)
+    return jnp.einsum("bd,bdc->bc", pooled, sp["in.head_w"]) + sp["in.head_b"]

@@ -1,0 +1,221 @@
+"""Parameter initialization + metadata for every fine-tuning method.
+
+One module owns, for each of the paper's nine methods (Table 1):
+
+* which tensors are trainable and how they are initialized (the paper's
+  zero-init conventions from §4.1 are reproduced exactly: ``W_R`` zero for
+  Kronecker AoT, ``W_2``/``b_1``/``b_2`` zero for FC AoT, LoRA ``B`` zero,
+  adapter up-projections zero — so every method's forward equals the frozen
+  backbone at initialization, asserted in ``python/tests/test_model.py``);
+* the serving-time input signature (how per-task state is batched for
+  multi-task inference, §3.1);
+* the Table 1 property triple (parameter-efficient / zero-cost /
+  multi-task), which the Rust method registry mirrors.
+
+Init specs are emitted into the artifact manifest so the Rust training
+driver can materialize fresh trainable parameters for any seed without
+Python on the path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, kron_factors
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodHP:
+    """Hyperparameters that change trainable-parameter shapes."""
+
+    rank: int = 16  # r for lora / adapters / aot-kron / aot-fc
+    prefix: int = 20  # p for pt1 / pt2
+    classes: int = 2
+    dropout: float = 0.1  # on P_x (kron) / on E (fc), train only
+
+
+# (parameter_efficient, zero_cost, multi_task) — paper Table 1.
+METHOD_PROPERTIES: Dict[str, Tuple[bool, bool, bool]] = {
+    "fine-tune": (False, True, False),
+    "lora": (True, False, True),
+    "lora-fused": (True, True, False),
+    "adapters": (True, False, True),
+    "bitfit": (True, True, True),
+    "pt1": (True, False, True),
+    "pt2": (True, False, True),
+    "aot-kron": (True, True, True),
+    "aot-fc": (True, True, True),
+}
+
+
+def _norm(key, shape, std=0.02):
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+def _zeros(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Trainable parameter construction
+# ---------------------------------------------------------------------------
+
+def init_head(cfg: ModelConfig, hp: MethodHP, key) -> Dict[str, jnp.ndarray]:
+    """Per-task classification head (trained for every method, paper §3.2)."""
+    return {
+        "head_w": _norm(key, (cfg.d_model, hp.classes)),
+        "head_b": _zeros((hp.classes,)),
+    }
+
+
+def init_method_params(
+    cfg: ModelConfig, method: str, hp: MethodHP, key, backbone=None
+) -> Dict[str, jnp.ndarray]:
+    """Trainable parameters for `method` (excluding the classification head).
+
+    For ``fine-tune`` the caller passes the backbone; a copy of every
+    backbone tensor becomes trainable.
+    """
+    d, ff, l, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    r, p = hp.rank, hp.prefix
+    keys = iter(jax.random.split(key, 16 * max(l, 1) + 8))
+    params: Dict[str, jnp.ndarray] = {}
+
+    if method == "fine-tune":
+        assert backbone is not None
+        for name, val in backbone.items():
+            params[f"ft.{name}"] = val
+        return params
+
+    if method == "bitfit":
+        # All bias terms of the model (Ben Zaken et al. 2022): projection
+        # biases, FFN biases, LayerNorm betas, embedding-LN beta.  Stacked
+        # across layers so the serving signature is a handful of tensors.
+        params["bf.proj_b"] = _zeros((l, 4, d))  # q, k, v, o
+        params["bf.ffn_b1"] = _zeros((l, ff))
+        params["bf.ffn_b2"] = _zeros((l, d))
+        params["bf.ln_b"] = _zeros((l, 2, d))  # ln1, ln2 betas
+        params["bf.emb_ln_b"] = _zeros((d,))
+        return params
+
+    if method in ("lora", "lora-fused"):
+        # Low-rank deltas on W_q and W_v (Hu et al. 2022). A ~ N(0, .02), B = 0.
+        params["lora.a_q"] = jnp.stack([_norm(next(keys), (d, r)) for _ in range(l)])
+        params["lora.b_q"] = _zeros((l, r, d))
+        params["lora.a_v"] = jnp.stack([_norm(next(keys), (d, r)) for _ in range(l)])
+        params["lora.b_v"] = _zeros((l, r, d))
+        return params
+
+    if method == "adapters":
+        # Houlsby adapters after the attention block and after the FFN.
+        # Up-projection zero-initialized => identity at init.
+        params["ad.attn_wd"] = jnp.stack([_norm(next(keys), (d, r)) for _ in range(l)])
+        params["ad.attn_bd"] = _zeros((l, r))
+        params["ad.attn_wu"] = _zeros((l, r, d))
+        params["ad.attn_bu"] = _zeros((l, d))
+        params["ad.ffn_wd"] = jnp.stack([_norm(next(keys), (d, r)) for _ in range(l)])
+        params["ad.ffn_bd"] = _zeros((l, r))
+        params["ad.ffn_wu"] = _zeros((l, r, d))
+        params["ad.ffn_bu"] = _zeros((l, d))
+        return params
+
+    if method == "pt1":
+        params["pt1.prompt"] = _norm(next(keys), (p, d))
+        return params
+
+    if method == "pt2":
+        params["pt2.pk"] = jnp.stack([_norm(next(keys), (p, d)) for _ in range(l)])
+        params["pt2.pv"] = jnp.stack([_norm(next(keys), (p, d)) for _ in range(l)])
+        return params
+
+    if method == "aot-kron":
+        a, bf_dim = kron_factors(v)
+        # W_L, W_M random; W_R zero (paper §4.1) => P == 0 at init.
+        params["kron.wl"] = jnp.stack([_norm(next(keys), (a, r)) for _ in range(l)])
+        params["kron.wm"] = jnp.stack([_norm(next(keys), (bf_dim, r)) for _ in range(l)])
+        params["kron.wr"] = _zeros((l, r * r, d))
+        return params
+
+    if method == "aot-fc":
+        # W_1 random; W_2, b_1, b_2 zero (paper §4.1) => P == 0 at init.
+        params["fc.w1"] = jnp.stack([_norm(next(keys), (d, r)) for _ in range(l)])
+        params["fc.b1"] = _zeros((l, r))
+        params["fc.w2"] = _zeros((l, r, d))
+        params["fc.b2"] = _zeros((l, d))
+        return params
+
+    raise ValueError(f"unknown method: {method}")
+
+
+def init_spec(
+    cfg: ModelConfig, method: str, hp: MethodHP
+) -> List[dict]:
+    """Manifest description of each trainable tensor: name, shape, init.
+
+    The Rust driver materializes these (with its own seeded RNG) so seed
+    sweeps never call back into Python.
+    """
+    dummy_key = jax.random.PRNGKey(0)
+    spec = []
+    if method == "fine-tune":
+        # Full fine-tuning trains a copy of every backbone tensor; the Rust
+        # driver initializes them by copying the backbone checkpoint.
+        from .model import backbone_shapes  # local import avoids a cycle
+
+        for name, shape in backbone_shapes(cfg).items():
+            spec.append(
+                {
+                    "name": f"ft.{name}",
+                    "shape": list(shape),
+                    "dtype": "f32",
+                    "init": "backbone",
+                    "std": 0.0,
+                }
+            )
+    else:
+        params = init_method_params(cfg, method, hp, dummy_key)
+        for name, val in params.items():
+            # Zero-init tensors stay zero for every seed; everything else is
+            # N(0, 0.02) per the paper's init convention.
+            is_zero = bool((val == 0).all())
+            spec.append(
+                {
+                    "name": name,
+                    "shape": list(val.shape),
+                    "dtype": "f32",
+                    "init": "zeros" if is_zero else "normal",
+                    "std": 0.0 if is_zero else 0.02,
+                }
+            )
+    head = init_head(cfg, hp, dummy_key)
+    for name, val in head.items():
+        spec.append(
+            {
+                "name": name,
+                "shape": list(val.shape),
+                "dtype": "f32",
+                "init": "zeros" if name.endswith("_b") else "normal",
+                "std": 0.0 if name.endswith("_b") else 0.02,
+            }
+        )
+    return spec
+
+
+def trainable_param_order(cfg: ModelConfig, method: str, hp: MethodHP) -> List[str]:
+    """Stable flattening order for trainable tensors (incl. head)."""
+    return [entry["name"] for entry in init_spec(cfg, method, hp)]
+
+
+def count_trainable(cfg: ModelConfig, method: str, hp: MethodHP) -> int:
+    """Number of optimized parameters (paper's parameter-efficiency axis)."""
+    total = 0
+    for entry in init_spec(cfg, method, hp):
+        n = 1
+        for s in entry["shape"]:
+            n *= s
+        total += n
+    return total

@@ -1,0 +1,171 @@
+"""Training-step and eval-step graphs for the AOT pipeline.
+
+The paper's protocol (§4.1): Adam with a constant learning rate, per-task
+metric early stopping with patience, grid search over hyperparameters and
+seeds.  The *loop* lives in Rust (`rust/src/train/`); this module defines the
+*step* as a single XLA computation:
+
+    (trainable, m, v, step, ids[K,b,n], mask, labels, lr, seed)
+        -> (trainable', m', v', mean_loss)
+
+with ``K = steps_per_call`` optimizer steps executed by ``lax.scan`` inside
+one call, so the host<->device round-trip (this xla-crate build cannot donate
+buffers) is amortized K× (DESIGN.md §9, L2 perf).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import forward_train
+from .peft import MethodHP
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def ce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels arrive as f32 and are cast."""
+    lab = labels.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, lab[:, None], axis=1))
+
+
+def mse_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Regression loss on the first logit (STS-B-analog tasks)."""
+    return jnp.mean((logits[:, 0] - labels) ** 2)
+
+
+def adam_update(p, g, m, v, step, lr):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mh = m / (1.0 - ADAM_B1**step)
+    vh = v / (1.0 - ADAM_B2**step)
+    return p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS), m, v
+
+
+def make_train_fn(
+    cfg: ModelConfig,
+    method: str,
+    hp: MethodHP,
+    order: List[str],
+    loss_type: str = "ce",
+):
+    """Build the K-step train function over *positional* trainable tensors.
+
+    ``order`` fixes the flattening of the trainable dict so the Rust driver
+    and the manifest agree on argument positions.
+    """
+
+    def loss_fn(trainable: Dict[str, jnp.ndarray], backbone, ids, mask, labels, key):
+        logits = forward_train(
+            cfg, backbone, trainable, method, ids, mask, hp,
+            train=True, dropout_key=key,
+        )
+        if loss_type == "mse":
+            return mse_loss(logits, labels)
+        return ce_loss(logits, labels)
+
+    def train_fn(backbone, trainable_flat, m_flat, v_flat, step0, ids, mask, labels, lr, seed):
+        """One XLA call = K scanned optimizer steps.
+
+        ids/mask: [K, b, n] f32/i32; labels: [K, b] f32; step0: i32 scalar
+        (global step count BEFORE this call, for Adam bias correction);
+        seed: i32 scalar for dropout.
+        """
+
+        def one_step(carry, batch):
+            tr, m, v, step = carry
+            b_ids, b_mask, b_labels = batch
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+            trainable = dict(zip(order, tr))
+            loss, grads = jax.value_and_grad(loss_fn)(
+                trainable, backbone, b_ids, b_mask, b_labels, key
+            )
+            step = step + 1
+            new_tr, new_m, new_v = [], [], []
+            for name, mi, vi in zip(order, m, v):
+                pi, gi = trainable[name], grads[name]
+                p2, m2, v2 = adam_update(pi, gi, mi, vi, step.astype(jnp.float32), lr)
+                new_tr.append(p2)
+                new_m.append(m2)
+                new_v.append(v2)
+            return (tuple(new_tr), tuple(new_m), tuple(new_v), step), loss
+
+        carry0 = (tuple(trainable_flat), tuple(m_flat), tuple(v_flat), step0)
+        (tr, m, v, step), losses = jax.lax.scan(one_step, carry0, (ids, mask, labels))
+        return list(tr) + list(m) + list(v) + [step, jnp.mean(losses)]
+
+    return train_fn
+
+
+def make_eval_fn(cfg: ModelConfig, method: str, hp: MethodHP, order: List[str]):
+    """Eval forward: (backbone, trainable..., ids, mask) -> logits [b, C]."""
+
+    def eval_fn(backbone, trainable_flat, ids, mask):
+        trainable = dict(zip(order, trainable_flat))
+        return forward_train(cfg, backbone, trainable, method, ids, mask, hp, train=False)
+
+    return eval_fn
+
+
+# ---------------------------------------------------------------------------
+# MLM pre-training (synthetic "pre-trained backbone" story, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def make_mlm_fn(cfg: ModelConfig, order: List[str]):
+    """Masked-LM train step over the full backbone (tied output embedding).
+
+    ids arrive already masked by the Rust data pipeline; ``labels`` holds the
+    original token id at masked positions and -100 elsewhere.
+    """
+
+    def mlm_loss(backbone, ids, mask, labels):
+        # Encoder trunk + projection back onto the tied embedding.
+        hidden = _encode(backbone, cfg, ids, mask)
+        logits = hidden @ backbone["emb_tok"].T  # [b, n, V]
+        lab = labels.astype(jnp.int32)
+        valid = (lab >= 0).astype(jnp.float32)
+        lab_safe = jnp.maximum(lab, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tok_lp = jnp.take_along_axis(logp, lab_safe[..., None], axis=-1)[..., 0]
+        return -jnp.sum(tok_lp * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    def train_fn(backbone_flat, m_flat, v_flat, step0, ids, mask, labels, lr):
+        def one_step(carry, batch):
+            bb, m, v, step = carry
+            b_ids, b_mask, b_labels = batch
+            backbone = dict(zip(order, bb))
+            loss, grads = jax.value_and_grad(mlm_loss)(backbone, b_ids, b_mask, b_labels)
+            step = step + 1
+            new_bb, new_m, new_v = [], [], []
+            for name, mi, vi in zip(order, m, v):
+                p2, m2, v2 = adam_update(
+                    backbone[name], grads[name], mi, vi, step.astype(jnp.float32), lr
+                )
+                new_bb.append(p2)
+                new_m.append(m2)
+                new_v.append(v2)
+            return (tuple(new_bb), tuple(new_m), tuple(new_v), step), loss
+
+        carry0 = (tuple(backbone_flat), tuple(m_flat), tuple(v_flat), step0)
+        (bb, m, v, step), losses = jax.lax.scan(one_step, carry0, (ids, mask, labels))
+        return list(bb) + list(m) + list(v) + [step, jnp.mean(losses)]
+
+    return train_fn
+
+
+def _encode(backbone, cfg: ModelConfig, ids, mask):
+    """Encoder trunk shared with forward_train (no head, no PEFT)."""
+    from .model import _embed, _layer_body, _layer_stack
+
+    ids = ids.astype(jnp.int32)
+    hidden = _embed(cfg, backbone, ids)
+    body = _layer_body(cfg, "fine-tune", MethodHP(), mask, batched=False)
+    hidden, _ = jax.lax.scan(body, hidden, {"bb": _layer_stack(backbone)})
+    return hidden

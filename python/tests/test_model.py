@@ -1,0 +1,253 @@
+"""L2 correctness: PEFT forwards, zero-init claims, serve/train parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import peft
+from compile import model
+from compile.configs import MODEL_CONFIGS
+from compile.kernels import ref
+
+CFG = MODEL_CONFIGS["tiny"]
+HP = peft.MethodHP(rank=4, prefix=5, classes=3)
+B, N = 3, 12
+L = CFG.n_layers
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    return model.init_backbone(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    ids = jax.random.randint(jax.random.PRNGKey(1), (B, N), 0, CFG.vocab_size)
+    mask = jnp.ones((B, N), jnp.float32)
+    return ids, mask
+
+
+@pytest.fixture(scope="module")
+def head():
+    return peft.init_head(CFG, HP, jax.random.PRNGKey(7))
+
+
+def tile(x):
+    return jnp.broadcast_to(x, (B,) + x.shape)
+
+
+def serve_sp(ids, mask, head, extra):
+    sp = {
+        "in.ids": ids,
+        "in.mask": mask,
+        "in.head_w": tile(head["head_w"]),
+        "in.head_b": tile(head["head_b"]),
+    }
+    sp.update(extra)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Zero-init: every fusable method equals the frozen backbone at init
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["lora", "adapters", "aot-kron", "aot-fc", "fine-tune"])
+def test_zero_init_matches_backbone(backbone, batch, head, method):
+    ids, mask = batch
+    base_mp = {**peft.init_method_params(CFG, "bitfit", HP, jax.random.PRNGKey(2)), **head}
+    base = model.forward_train(CFG, backbone, base_mp, "bitfit", ids, mask, HP)
+    mp = {
+        **peft.init_method_params(
+            CFG, method, HP, jax.random.PRNGKey(3), backbone=backbone
+        ),
+        **head,
+    }
+    out = model.forward_train(CFG, backbone, mp, method, ids, mask, HP)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["pt1", "pt2"])
+def test_prompt_methods_run(backbone, batch, head, method):
+    ids, mask = batch
+    mp = {**peft.init_method_params(CFG, method, HP, jax.random.PRNGKey(3)), **head}
+    out = model.forward_train(CFG, backbone, mp, method, ids, mask, HP)
+    assert out.shape == (B, HP.classes)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_param_count_ordering():
+    """Parameter efficiency (paper's axis): every PEFT method must train
+    orders of magnitude fewer parameters than fine-tuning."""
+    counts = {m: peft.count_trainable(CFG, m, HP) for m in peft.METHOD_PROPERTIES}
+    for m, c in counts.items():
+        if m != "fine-tune":
+            assert c < counts["fine-tune"] / 50, (m, c)
+
+
+# ---------------------------------------------------------------------------
+# Serve/train parity per method (multi-task batching is exact, §3.1)
+# ---------------------------------------------------------------------------
+
+def randomized_params(method, key):
+    mp = peft.init_method_params(CFG, method, HP, jax.random.PRNGKey(key))
+    out = {}
+    for i, (name, val) in enumerate(mp.items()):
+        out[name] = jax.random.normal(jax.random.PRNGKey(key + i + 1), val.shape) * 0.05
+    return out
+
+
+def test_bitfit_serve_parity(backbone, batch, head):
+    ids, mask = batch
+    mp = randomized_params("bitfit", 10)
+    want = model.forward_train(CFG, backbone, {**mp, **head}, "bitfit", ids, mask, HP)
+    sp = serve_sp(ids, mask, head, {
+        "in.proj_b": jnp.stack([jnp.stack([tile(mp["bf.proj_b"][i, j]) for j in range(4)]) for i in range(L)]),
+        "in.ffn_b1": jnp.stack([tile(mp["bf.ffn_b1"][i]) for i in range(L)]),
+        "in.ffn_b2": jnp.stack([tile(mp["bf.ffn_b2"][i]) for i in range(L)]),
+        "in.ln_b": jnp.stack([jnp.stack([tile(mp["bf.ln_b"][i, j]) for j in range(2)]) for i in range(L)]),
+        "in.emb_ln_b": tile(mp["bf.emb_ln_b"]),
+    })
+    got = model.forward_serve(CFG, backbone, sp, "bitfit", HP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_lora_serve_parity(backbone, batch, head):
+    ids, mask = batch
+    mp = randomized_params("lora", 20)
+    want = model.forward_train(CFG, backbone, {**mp, **head}, "lora", ids, mask, HP)
+    sp = serve_sp(ids, mask, head, {
+        "in.lora_a_q": jnp.stack([tile(mp["lora.a_q"][i]) for i in range(L)]),
+        "in.lora_b_q": jnp.stack([tile(mp["lora.b_q"][i]) for i in range(L)]),
+        "in.lora_a_v": jnp.stack([tile(mp["lora.a_v"][i]) for i in range(L)]),
+        "in.lora_b_v": jnp.stack([tile(mp["lora.b_v"][i]) for i in range(L)]),
+    })
+    got = model.forward_serve(CFG, backbone, sp, "lora", HP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_adapters_serve_parity(backbone, batch, head):
+    ids, mask = batch
+    mp = randomized_params("adapters", 30)
+    want = model.forward_train(CFG, backbone, {**mp, **head}, "adapters", ids, mask, HP)
+    sp = serve_sp(ids, mask, head, {
+        f"in.ad_{name}": jnp.stack([tile(mp[f"ad.{name}"][i]) for i in range(L)])
+        for name in ("attn_wd", "attn_bd", "attn_wu", "attn_bu",
+                     "ffn_wd", "ffn_bd", "ffn_wu", "ffn_bu")
+    })
+    got = model.forward_serve(CFG, backbone, sp, "adapters", HP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pt1_serve_parity(backbone, batch, head):
+    ids, mask = batch
+    mp = randomized_params("pt1", 40)
+    want = model.forward_train(CFG, backbone, {**mp, **head}, "pt1", ids, mask, HP)
+    sp = serve_sp(ids, mask, head, {"in.prompt": tile(mp["pt1.prompt"])})
+    got = model.forward_serve(CFG, backbone, sp, "pt1", HP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pt2_serve_parity(backbone, batch, head):
+    ids, mask = batch
+    mp = randomized_params("pt2", 50)
+    want = model.forward_train(CFG, backbone, {**mp, **head}, "pt2", ids, mask, HP)
+    sp = serve_sp(ids, mask, head, {
+        "in.pk": jnp.stack([tile(mp["pt2.pk"][i]) for i in range(L)]),
+        "in.pv": jnp.stack([tile(mp["pt2.pv"][i]) for i in range(L)]),
+    })
+    got = model.forward_serve(CFG, backbone, sp, "pt2", HP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def fc_setup(backbone, batch, head):
+    """A trained-looking FC AoT state + its fused table (Equation 3)."""
+    ids, mask = batch
+    mp = randomized_params("aot-fc", 60)
+    want = model.forward_train(CFG, backbone, {**mp, **head}, "aot-fc", ids, mask, HP)
+    fused = jnp.stack([
+        ref.fc_fuse_ref(
+            backbone["emb_tok"], mp["fc.w1"][i], mp["fc.b1"][i],
+            mp["fc.w2"][i], mp["fc.b2"][i],
+        )
+        for i in range(L)
+    ])
+    return mp, fused, want
+
+
+def test_aot_fused_host_gather_parity(backbone, batch, head, fc_setup):
+    """The zero-cost serving path: host-side row gather == training forward."""
+    ids, mask = batch
+    _, fused, want = fc_setup
+    bias = fused[:, ids, :]
+    sp = serve_sp(ids, mask, head, {"in.bias": bias})
+    got = model.forward_serve(CFG, backbone, sp, "aot", HP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_aot_device_gather_parity(backbone, batch, head, fc_setup, use_pallas):
+    ids, mask = batch
+    _, fused, want = fc_setup
+    bb2 = dict(backbone)
+    bb2["P"] = fused
+    sp = serve_sp(ids, mask, head, {})
+    got = model.forward_serve(CFG, bb2, sp, "aot-gather", HP, use_pallas_gather=use_pallas)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_aot_unfused_parity(backbone, batch, head, fc_setup):
+    ids, mask = batch
+    mp, _, want = fc_setup
+    sp = serve_sp(ids, mask, head, {
+        "in.fc_w1": jnp.stack([tile(mp["fc.w1"][i]) for i in range(L)]),
+        "in.fc_b1": jnp.stack([tile(mp["fc.b1"][i]) for i in range(L)]),
+        "in.fc_w2": jnp.stack([tile(mp["fc.w2"][i]) for i in range(L)]),
+        "in.fc_b2": jnp.stack([tile(mp["fc.b2"][i]) for i in range(L)]),
+    })
+    got = model.forward_serve(CFG, backbone, sp, "aot-unfused", HP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_multitask_batch_mixes_tasks(backbone, batch, head):
+    """Two different tasks in one batch == each task served alone.
+
+    This is the paper's multi-task inference claim (§3.1) at the model
+    level; the Rust coordinator test repeats it end-to-end.
+    """
+    ids, mask = batch
+    mp_a = randomized_params("aot-fc", 70)
+    mp_b = randomized_params("aot-fc", 80)
+    fused = []
+    for mp in (mp_a, mp_b):
+        fused.append(jnp.stack([
+            ref.fc_fuse_ref(
+                backbone["emb_tok"], mp["fc.w1"][i], mp["fc.b1"][i],
+                mp["fc.w2"][i], mp["fc.b2"][i],
+            )
+            for i in range(L)
+        ]))
+    # Batch rows 0,2 -> task A; row 1 -> task B.
+    assign = [0, 1, 0]
+    bias = jnp.stack(
+        [fused[assign[j]][:, ids[j], :] for j in range(B)], axis=1
+    )  # [l, b, n, d]
+    sp = serve_sp(ids, mask, head, {"in.bias": bias})
+    mixed = model.forward_serve(CFG, backbone, sp, "aot", HP)
+
+    for j, task in enumerate(assign):
+        solo_bias = fused[task][:, ids, :]
+        sp_solo = serve_sp(ids, mask, head, {"in.bias": solo_bias})
+        solo = model.forward_serve(CFG, backbone, sp_solo, "aot", HP)
+        np.testing.assert_allclose(
+            np.asarray(mixed[j]), np.asarray(solo[j]), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_serve_input_shapes_cover_all_methods():
+    for method in ["fine-tune", "aot", "aot-gather", "aot-unfused", "bitfit",
+                   "lora", "adapters", "pt1", "pt2"]:
+        shapes = model.serve_input_shapes(CFG, "fine-tune" if method == "lora-fused" else method, 4, 16, HP)
+        assert list(shapes)[:2] == ["in.ids", "in.mask"]
+        assert list(shapes)[-2:] == ["in.head_w", "in.head_b"]

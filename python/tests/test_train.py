@@ -1,0 +1,102 @@
+"""L2 training graphs: losses, Adam, the scanned K-step train function,
+and the config helpers the manifest relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import peft, model as M
+from compile.configs import MODEL_CONFIGS, kron_factors
+from compile.peft import MethodHP
+from compile.train import adam_update, ce_loss, make_train_fn, mse_loss
+
+CFG = MODEL_CONFIGS["tiny"]
+
+
+def test_ce_loss_known_values():
+    logits = jnp.array([[10.0, -10.0], [-10.0, 10.0]])
+    labels = jnp.array([0.0, 1.0])
+    assert float(ce_loss(logits, labels)) < 1e-6
+    wrong = jnp.array([1.0, 0.0])
+    assert float(ce_loss(logits, wrong)) > 10.0
+
+
+def test_mse_loss_on_first_logit():
+    logits = jnp.array([[1.0, 99.0], [3.0, -7.0]])
+    labels = jnp.array([2.0, 3.0])
+    # ((1-2)^2 + (3-3)^2) / 2 = 0.5; the second logit must be ignored.
+    assert float(mse_loss(logits, labels)) == pytest.approx(0.5)
+
+
+def test_adam_moves_against_gradient():
+    p = jnp.array([1.0])
+    g = jnp.array([2.0])
+    m = jnp.zeros(1)
+    v = jnp.zeros(1)
+    p2, m2, v2 = adam_update(p, g, m, v, jnp.float32(1.0), 0.1)
+    assert float(p2[0]) < 1.0  # moved against the positive gradient
+    assert float(m2[0]) > 0.0
+    assert float(v2[0]) > 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(v=st.integers(100, 200_000))
+def test_kron_factors_cover_vocab(v):
+    a, b = kron_factors(v)
+    assert a * b >= v
+    # the paper's footnote-1 trick: only slightly larger than |V|
+    assert a * b - v < max(a, b)
+
+
+def test_kron_factors_paper_example():
+    # DeBERTa in the paper uses a = b = 360 for |V| = 128100 ≈ 360².  Our
+    # search minimizes waste first, then imbalance: 350 × 366 = 128100
+    # exactly (zero waste), which is an even tighter factorization than
+    # the paper's 360 × 360 = 129600.
+    a, b = kron_factors(128_100)
+    assert a * b >= 128_100
+    assert a * b - 128_100 <= 360 * 360 - 128_100  # at least as tight
+    assert abs(a - b) <= 32  # still near-balanced
+
+
+def test_train_fn_k_steps_decrease_loss_and_count_steps():
+    hp = MethodHP(rank=8, classes=2)
+    order = peft.trainable_param_order(CFG, "aot-fc", hp)
+    fn = make_train_fn(CFG, "aot-fc", hp, order, "ce")
+    bb = M.init_backbone(CFG, jax.random.PRNGKey(20230517))
+    mp = peft.init_method_params(CFG, "aot-fc", hp, jax.random.PRNGKey(1))
+    mp.update(peft.init_head(CFG, hp, jax.random.PRNGKey(2)))
+    tr = [mp[n] for n in order]
+    m = [jnp.zeros_like(x) for x in tr]
+    v = [jnp.zeros_like(x) for x in tr]
+
+    k, b, n = 4, 8, 16
+    rng = np.random.default_rng(0)
+    # one fixed batch repeated K times: loss must drop within the call
+    ids1 = rng.integers(5, CFG.vocab_size, (1, b, n)).astype(np.int32)
+    ids = jnp.asarray(np.repeat(ids1, k, axis=0))
+    labels = jnp.asarray(np.repeat((ids1[:, :, 1] % 2).astype(np.float32), k, axis=0))
+    mask = jnp.ones((k, b, n), jnp.float32)
+
+    outs = fn(bb, tr, m, v, jnp.int32(0), ids, mask, labels, jnp.float32(1e-2), jnp.int32(0))
+    nt = len(order)
+    step, loss1 = outs[3 * nt], outs[3 * nt + 1]
+    assert int(step) == k
+    outs2 = fn(
+        bb, outs[:nt], outs[nt:2 * nt], outs[2 * nt:3 * nt], step,
+        ids, mask, labels, jnp.float32(1e-2), jnp.int32(0),
+    )
+    loss2 = outs2[3 * nt + 1]
+    assert float(loss2) < float(loss1), (float(loss1), float(loss2))
+    assert int(outs2[3 * nt]) == 2 * k
+
+
+def test_trainable_order_is_stable_and_matches_init_spec():
+    hp = MethodHP(rank=8, classes=3)
+    for method in ["bitfit", "lora", "adapters", "pt1", "pt2", "aot-kron", "aot-fc"]:
+        order = peft.trainable_param_order(CFG, method, hp)
+        spec = peft.init_spec(CFG, method, hp)
+        assert order == [e["name"] for e in spec]
+        assert order[-2:] == ["head_w", "head_b"]

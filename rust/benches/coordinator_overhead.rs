@@ -1,0 +1,113 @@
+//! Bench: coordinator overhead — request latency through the full
+//! router/batcher/gather/execute pipeline vs the raw backbone execute.
+//! DESIGN.md §9 L3 target: the coordinator's own work must stay a small
+//! fraction of the backbone execute.
+//!
+//!     cargo bench --bench coordinator_overhead
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use aotpt::bench::{measure, render_table, BenchConfig};
+use aotpt::config::Manifest;
+use aotpt::coordinator::{Coordinator, CoordinatorConfig, Request, TaskRegistry};
+use aotpt::runtime::{Runtime, WeightCache};
+use aotpt::tensor::Tensor;
+use aotpt::util::Pcg64;
+
+fn main() {
+    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let runtime = Runtime::new().unwrap();
+    let model = manifest.model("small").unwrap().clone();
+    let weights = WeightCache::from_ckpt(
+        &runtime,
+        &aotpt::artifacts_dir().join("backbone_small.aotckpt"),
+    )
+    .unwrap();
+    let emb = weights.host("emb_tok").unwrap().clone();
+
+    let mut registry = TaskRegistry::new(
+        model.n_layers,
+        model.vocab_size,
+        model.d_model,
+        manifest.multitask_classes,
+    );
+    let mut rng = Pcg64::new(3);
+    for name in ["a", "b"] {
+        let (l, d, r) = (model.n_layers, model.d_model, 8);
+        let mut tr = BTreeMap::new();
+        tr.insert("t.fc.w1".into(), Tensor::from_f32(&[l, d, r], rng.normal_vec(l * d * r, 0.05)));
+        tr.insert("t.fc.b1".into(), Tensor::from_f32(&[l, r], vec![0.0; l * r]));
+        tr.insert("t.fc.w2".into(), Tensor::from_f32(&[l, r, d], rng.normal_vec(l * r * d, 0.05)));
+        tr.insert("t.fc.b2".into(), Tensor::from_f32(&[l, d], vec![0.0; l * d]));
+        tr.insert("t.head_w".into(), Tensor::from_f32(&[d, 2], rng.normal_vec(d * 2, 0.05)));
+        tr.insert("t.head_b".into(), Tensor::from_f32(&[2], vec![0.0; 2]));
+        registry.register_fc(name, &emb, &tr).unwrap();
+    }
+    let coordinator = Coordinator::new(
+        Arc::clone(&runtime),
+        &manifest,
+        registry,
+        CoordinatorConfig { model: "small".into(), linger_ms: 1, signature: "aot".into() },
+    )
+    .unwrap();
+
+    let make_ids = |seed: u64| {
+        let mut r = Pcg64::new(seed);
+        let mut v = vec![aotpt::tokenizer::CLS];
+        for _ in 0..50 {
+            v.push(r.range(5, model.vocab_size as i64) as i32);
+        }
+        v
+    };
+    // Warm the bucket executables.
+    let _ = coordinator.classify("a", make_ids(0)).unwrap();
+
+    let cfg = BenchConfig { warmup_iters: 3, min_iters: 10, max_iters: 100, budget_secs: 8.0 };
+    let mut rows = Vec::new();
+
+    // Single request end to end (batch of 1 after linger).
+    let single = measure("coordinator/1-request", &cfg, || {
+        coordinator.classify("a", make_ids(1)).unwrap();
+    });
+
+    // Burst of 16 mixed-task requests (one shared invocation).
+    let burst = measure("coordinator/16-burst", &cfg, || {
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                coordinator
+                    .submit(Request {
+                        task: if i % 2 == 0 { "a".into() } else { "b".into() },
+                        ids: make_ids(i),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    });
+
+    let snap = coordinator.metrics().snapshot();
+    rows.push(vec![
+        "1 request".into(),
+        format!("{:.3}", single.mean_secs * 1e3),
+        format!("{}", single.iters),
+    ]);
+    rows.push(vec![
+        "16-request burst".into(),
+        format!("{:.3}", burst.mean_secs * 1e3),
+        format!("{}", burst.iters),
+    ]);
+    rows.push(vec![
+        "per-request @16".into(),
+        format!("{:.3}", burst.mean_secs * 1e3 / 16.0),
+        String::new(),
+    ]);
+    println!("{}", render_table(&["case", "mean ms", "iters"], &rows));
+    println!(
+        "gather fraction of device work: {:.2}% (target: small) — {}",
+        snap.gather_fraction * 100.0,
+        snap.render()
+    );
+}

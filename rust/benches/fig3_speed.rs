@@ -1,0 +1,21 @@
+//! Bench: paper Figure 3 — per-method inference speed on the DeBERTa-XL
+//! analog (`large`) at seq 384, normalized by fine-tuning.
+//!
+//!     cargo bench --bench fig3_speed
+//!
+//! Custom harness (criterion is unavailable offline); see `aotpt exp fig3`
+//! for the configurable driver.
+
+use aotpt::config::Manifest;
+use aotpt::experiments::speed;
+use aotpt::runtime::Runtime;
+
+fn main() {
+    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let runtime = Runtime::new().unwrap();
+    // b=64 @ n384 on `large` needs minutes/iteration on one core — the
+    // bench covers b=1 and b=16; `aotpt exp fig3 --scale full` adds b=64.
+    let cells = speed::run_grid(&runtime, &manifest, "large", &[(1, 384), (16, 384)], 6.0)
+        .expect("bench grid");
+    println!("{}", speed::report("fig3", &cells).unwrap());
+}

@@ -1,0 +1,22 @@
+//! Bench: paper Appendix Figure 8 — per-method speed at seq 384 across
+//! all backbone analogs.
+//!
+//!     cargo bench --bench fig8_speed
+
+use aotpt::config::Manifest;
+use aotpt::experiments::speed;
+use aotpt::runtime::Runtime;
+
+fn main() {
+    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let runtime = Runtime::new().unwrap();
+    let mut all = Vec::new();
+    for model in ["small", "base"] {
+        all.extend(
+            speed::run_grid(&runtime, &manifest, model, &[(1, 384), (16, 384)], 5.0).unwrap(),
+        );
+    }
+    // `large` b16 n384 is covered by fig3; keep this bench under ~10 min.
+    all.extend(speed::run_grid(&runtime, &manifest, "large", &[(1, 384)], 5.0).unwrap());
+    println!("{}", speed::report("fig8", &all).unwrap());
+}

@@ -1,0 +1,22 @@
+//! Bench: paper Appendix Figure 9 — per-method speed at short sequences
+//! (16, 64), where the paper reports AoT's only visible overhead (small
+//! model, small batch, short sequence).
+//!
+//!     cargo bench --bench fig9_speed
+
+use aotpt::config::Manifest;
+use aotpt::experiments::speed;
+use aotpt::runtime::Runtime;
+
+fn main() {
+    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let runtime = Runtime::new().unwrap();
+    let mut all = Vec::new();
+    for model in ["small", "base", "large"] {
+        all.extend(
+            speed::run_grid(&runtime, &manifest, model, &[(1, 16), (1, 64), (16, 64)], 4.0)
+                .unwrap(),
+        );
+    }
+    println!("{}", speed::report("fig9", &all).unwrap());
+}

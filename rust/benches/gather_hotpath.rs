@@ -1,0 +1,48 @@
+//! Bench: the L3 hot path — the ahead-of-time P-row gather from host RAM
+//! (`PStore::gather_into`).  DESIGN.md §9 target: effective copy
+//! bandwidth in the GB/s range so the gather never rivals the backbone
+//! execute.
+//!
+//!     cargo bench --bench gather_hotpath
+
+use aotpt::bench::{measure, render_table, BenchConfig};
+use aotpt::peft::{PStore, TaskP};
+use aotpt::util::Pcg64;
+
+fn main() {
+    let mut rows = Vec::new();
+    // (layers, d) per model analog, over representative bucket shapes.
+    for (model, l, d) in [("small", 4usize, 128usize), ("base", 6, 256), ("large", 12, 512)] {
+        let vocab = 8192;
+        let mut store = PStore::new(l, vocab, d);
+        let mut rng = Pcg64::new(1);
+        for name in ["t0", "t1", "t2", "t3"] {
+            store
+                .insert(name, TaskP::new(l, vocab, d, rng.normal_vec(l * vocab * d, 1.0)).unwrap())
+                .unwrap();
+        }
+        for (b, n) in [(1usize, 64usize), (16, 64), (16, 384), (64, 128)] {
+            let assignments: Vec<&str> = (0..b).map(|i| ["t0", "t1", "t2", "t3"][i % 4]).collect();
+            let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, vocab as i64) as i32).collect();
+            let mut out = vec![0f32; l * b * n * d];
+            let cfg =
+                BenchConfig { warmup_iters: 2, min_iters: 10, max_iters: 200, budget_secs: 2.0 };
+            let m = measure(&format!("{model}/b{b}n{n}"), &cfg, || {
+                store.gather_into(&assignments, &ids, n, &mut out).unwrap();
+            });
+            let bytes = (l * b * n * d * 4) as f64;
+            let gbps = bytes / m.mean_secs / 1e9;
+            rows.push(vec![
+                model.to_string(),
+                format!("b{b}n{n}"),
+                format!("{:.3}", m.mean_secs * 1e3),
+                format!("{gbps:.2}"),
+                format!("{}", m.iters),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        render_table(&["model", "bucket", "mean ms", "GB/s", "iters"], &rows)
+    );
+}

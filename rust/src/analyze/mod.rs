@@ -1,0 +1,91 @@
+//! Trained-weight analysis (paper §4.3, Appendix Tables 7–10): rank the
+//! vocabulary rows of a trained/fused `P` by L2 norm per layer and print
+//! the corresponding token strings.
+//!
+//! Because our tasks are synthetic with *known* cue tokens
+//! (`data::tasks::TaskData::cue_tokens`), the analysis here is sharper
+//! than the paper's qualitative reading: `cue_recall_at` measures how
+//! many of the top-norm rows are genuine task cues.
+
+use crate::data::Lexicon;
+use crate::peft::TaskP;
+
+/// Top-k (token id, norm) rows at one layer.
+pub fn top_rows(p: &TaskP, layer: usize, k: usize) -> Vec<(usize, f32)> {
+    let norms = p.row_norms(layer);
+    let mut idx: Vec<usize> = (0..norms.len()).collect();
+    idx.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    idx.into_iter().take(k).map(|i| (i, norms[i])).collect()
+}
+
+/// Fraction of the top-k rows (at `layer`) that are task cue tokens.
+pub fn cue_recall_at(p: &TaskP, layer: usize, k: usize, cues: &[i32]) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let top = top_rows(p, layer, k);
+    let hits = top.iter().filter(|(i, _)| cues.contains(&(*i as i32))).count();
+    hits as f64 / k as f64
+}
+
+/// Render one Appendix-7-style table: per layer, the top-norm tokens.
+pub fn norm_table(p: &TaskP, lex: &Lexicon, layers: &[usize], k: usize) -> String {
+    let mut out = String::from("| layer | tokens x with largest ||P_x||_2 |\n|---|---|\n");
+    for &layer in layers {
+        let tokens: Vec<String> = top_rows(p, layer, k)
+            .into_iter()
+            .map(|(i, _)| lex.word(i as i32).to_string())
+            .collect();
+        out.push_str(&format!("| {layer} | {} |\n", tokens.join(", ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_rows_sorted_desc() {
+        let mut data = vec![0f32; 2 * 10 * 4];
+        // layer 0: token 3 heavy, token 7 medium
+        for x in &mut data[3 * 4..4 * 4] {
+            *x = 5.0;
+        }
+        for x in &mut data[7 * 4..8 * 4] {
+            *x = 2.0;
+        }
+        let p = TaskP::new(2, 10, 4, data).unwrap();
+        let top = top_rows(&p, 0, 3);
+        assert_eq!(top[0].0, 3);
+        assert_eq!(top[1].0, 7);
+        assert!(top[0].1 > top[1].1);
+    }
+
+    #[test]
+    fn cue_recall_counts_hits() {
+        let mut data = vec![0f32; 10 * 4];
+        for tok in [2usize, 5, 8] {
+            for x in &mut data[tok * 4..(tok + 1) * 4] {
+                *x = 1.0 + tok as f32;
+            }
+        }
+        let p = TaskP::new(1, 10, 4, data).unwrap();
+        let recall = cue_recall_at(&p, 0, 3, &[8, 5, 1]);
+        assert!((recall - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm_table_uses_lexicon_strings() {
+        let lex = Lexicon::generate(0);
+        let v = lex.vocab_size();
+        let mut data = vec![0f32; v * 4];
+        let tok = lex.pos[0] as usize;
+        for x in &mut data[tok * 4..(tok + 1) * 4] {
+            *x = 9.0;
+        }
+        let p = TaskP::new(1, v, 4, data).unwrap();
+        let table = norm_table(&p, &lex, &[0], 2);
+        assert!(table.contains("pos0"), "{table}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Bench harness (criterion is not available offline): warmup + timed
+//! iterations with adaptive iteration counts, mean/p50/p99 reporting, and
+//! JSON result output under `results/`.
+
+use crate::json::Json;
+use crate::util::{stats, Timer};
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once this much wall time has been spent measuring one case.
+    pub budget_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, min_iters: 5, max_iters: 300, budget_secs: 10.0 }
+    }
+}
+
+impl BenchConfig {
+    /// The paper's §4.4 protocol: 300 evaluations at batch 1, 100 above —
+    /// bounded here by a wall-clock budget per cell (single CPU core).
+    pub fn paper(batch: usize, budget_secs: f64) -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 5,
+            max_iters: if batch == 1 { 300 } else { 100 },
+            budget_secs,
+        }
+    }
+}
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub std_secs: f64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ms", Json::Num(self.mean_secs * 1e3)),
+            ("p50_ms", Json::Num(self.p50_secs * 1e3)),
+            ("p99_ms", Json::Num(self.p99_secs * 1e3)),
+            ("std_ms", Json::Num(self.std_secs * 1e3)),
+        ])
+    }
+}
+
+/// Measure a closure under the config.
+pub fn measure(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let budget = Timer::start();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || budget.secs() < cfg.budget_secs)
+    {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_secs: stats::mean(&samples),
+        p50_secs: stats::percentile(&samples, 50.0),
+        p99_secs: stats::percentile(&samples, 99.0),
+        std_secs: stats::std(&samples),
+    }
+}
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {c:<w$} |"));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&fmt_row(
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let cfg = BenchConfig { warmup_iters: 1, min_iters: 4, max_iters: 10, budget_secs: 60.0 };
+        let mut count = 0;
+        let m = measure("noop", &cfg, || {
+            count += 1;
+        });
+        assert!(m.iters >= 4 && m.iters <= 10);
+        assert_eq!(count, m.iters + cfg.warmup_iters);
+        assert!(m.mean_secs >= 0.0);
+        assert!(m.p99_secs >= m.p50_secs);
+    }
+
+    #[test]
+    fn budget_caps_iterations() {
+        let cfg = BenchConfig { warmup_iters: 0, min_iters: 2, max_iters: 10_000, budget_secs: 0.05 };
+        let m = measure("sleepy", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(m.iters < 100, "{}", m.iters);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["method", "ratio"],
+            &[vec!["aot".into(), "1.00".into()], vec!["pt2".into(), "1.31".into()]],
+        );
+        assert!(t.contains("| aot    | 1.00  |"));
+    }
+
+    #[test]
+    fn paper_config_matches_protocol() {
+        assert_eq!(BenchConfig::paper(1, 10.0).max_iters, 300);
+        assert_eq!(BenchConfig::paper(16, 10.0).max_iters, 100);
+    }
+}

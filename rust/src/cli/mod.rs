@@ -1,0 +1,205 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! generates usage text from declared options.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec + parsed values.
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(str::to_string),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse a raw argument list (excluding argv[0]).
+    pub fn parse(mut self, argv: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    self.flags.push(key);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    self.values.insert(key, value);
+                }
+            } else {
+                self.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for s in &self.specs {
+            let default = s
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            let arg = if s.is_flag {
+                format!("--{}", s.name)
+            } else {
+                format!("--{} <value>", s.name)
+            };
+            out.push_str(&format!("  {arg:<28} {}{}\n", s.help, default));
+        }
+        out
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+    }
+
+    pub fn require(&self, name: &str) -> Result<String, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing required --{name}\n\n{}", self.usage()))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        let v = self.require(name)?;
+        v.parse().map_err(|e| format!("--{name}={v}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        let v = self.require(name)?;
+        v.parse().map_err(|e| format!("--{name}={v}: {e}"))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("test", "test tool")
+            .opt("model", Some("small"), "model shape")
+            .opt("steps", None, "step count")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let a = base()
+            .parse(&argv(&["run", "--model", "base", "--verbose", "--steps=10", "extra"]))
+            .unwrap();
+        assert_eq!(a.get("model").unwrap(), "base");
+        assert_eq!(a.get_usize("steps").unwrap(), 10);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = base().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("model").unwrap(), "small");
+        assert_eq!(a.get("steps"), None);
+        assert!(a.require("steps").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(base().parse(&argv(&["--nope"])).is_err());
+        assert!(base().parse(&argv(&["--steps"])).is_err());
+        assert!(base().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let Err(err) = base().parse(&argv(&["--help"])) else {
+            panic!("--help should surface usage as Err");
+        };
+        assert!(err.contains("--model"));
+        assert!(err.contains("default: small"));
+    }
+}

@@ -1,0 +1,394 @@
+//! Typed reader for `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::json::{self, Json};
+use crate::tensor::DType;
+use crate::Result;
+
+/// One positional input/output tensor of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// How the Rust training driver materializes a trainable tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitKind {
+    /// All zeros (the paper's zero-init convention, §4.1).
+    Zeros,
+    /// N(0, std).
+    Normal,
+    /// Copy of the backbone tensor of the same (suffix) name.
+    Backbone,
+}
+
+#[derive(Clone, Debug)]
+pub struct InitSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: InitKind,
+    pub std: f32,
+}
+
+/// One artifact's full signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub stem: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub model: String,
+    pub method: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub rank: usize,
+    pub prefix: usize,
+    pub classes: usize,
+    pub steps_per_call: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    pub trainable_order: Vec<String>,
+    pub init: Vec<InitSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("{}: no input named {name}", self.stem))
+    }
+
+    pub fn input(&self, name: &str) -> Result<&TensorSpec> {
+        Ok(&self.inputs[self.input_index(name)?])
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t == name)
+            .ok_or_else(|| anyhow!("{}: no output named {name}", self.stem))
+    }
+
+    /// Names of inputs with a given prefix (`w.`, `t.`, `in.` …), in order.
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<&TensorSpec> {
+        self.inputs.iter().filter(|t| t.name.starts_with(prefix)).collect()
+    }
+}
+
+/// Geometry of one model shape family.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_positions: usize,
+    pub params: usize,
+    pub kron_a: usize,
+    pub kron_b: usize,
+}
+
+/// The whole manifest.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab_size: usize,
+    pub multitask_classes: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub method_properties: BTreeMap<String, (bool, bool, bool)>,
+    pub paper_analog: BTreeMap<String, String>,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let root = json::load(&dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts` first)")?;
+        let vocab_size = root
+            .get("vocab_size")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing vocab_size"))?;
+        let multitask_classes = root
+            .get("multitask_classes")
+            .and_then(Json::as_usize)
+            .unwrap_or(4);
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing models"))?
+        {
+            let geti = |k: &str| -> Result<usize> {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name}: missing {k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    d_model: geti("d_model")?,
+                    n_layers: geti("n_layers")?,
+                    n_heads: geti("n_heads")?,
+                    d_ff: geti("d_ff")?,
+                    vocab_size: geti("vocab_size")?,
+                    max_positions: geti("max_positions")?,
+                    params: geti("params")?,
+                    kron_a: geti("kron_a")?,
+                    kron_b: geti("kron_b")?,
+                },
+            );
+        }
+
+        let mut method_properties = BTreeMap::new();
+        if let Some(props) = root.get("method_properties").and_then(Json::as_obj) {
+            for (name, p) in props {
+                method_properties.insert(
+                    name.clone(),
+                    (
+                        p.get("parameter_efficient").and_then(Json::as_bool).unwrap_or(false),
+                        p.get("zero_cost").and_then(Json::as_bool).unwrap_or(false),
+                        p.get("multi_task").and_then(Json::as_bool).unwrap_or(false),
+                    ),
+                );
+            }
+        }
+
+        let mut paper_analog = BTreeMap::new();
+        if let Some(pa) = root.get("paper_analog").and_then(Json::as_obj) {
+            for (k, v) in pa {
+                if let Some(s) = v.as_str() {
+                    paper_analog.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (stem, a) in root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts"))?
+        {
+            artifacts.insert(stem.clone(), parse_artifact(dir, stem, a)?);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab_size,
+            multitask_classes,
+            models,
+            method_properties,
+            paper_analog,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, stem: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(stem)
+            .ok_or_else(|| anyhow!("manifest has no artifact {stem}"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model {name}"))
+    }
+
+    pub fn artifacts(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.artifacts.values()
+    }
+
+    /// Find artifacts matching (kind, model, method); further filtering is
+    /// on the caller.
+    pub fn find(&self, kind: &str, model: &str, method: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == kind && a.model == model && a.method == method)
+            .collect()
+    }
+
+    /// The unique artifact for (kind, model, method, batch, seq); errors if
+    /// missing or ambiguous without extra filters.
+    pub fn find_bucket(
+        &self,
+        kind: &str,
+        model: &str,
+        method: &str,
+        batch: usize,
+        seq: usize,
+    ) -> Result<&ArtifactSpec> {
+        let hits: Vec<_> = self
+            .find(kind, model, method)
+            .into_iter()
+            .filter(|a| a.batch == batch && a.seq == seq)
+            .collect();
+        match hits.len() {
+            0 => bail!("no artifact for {kind}/{model}/{method} b{batch}n{seq}"),
+            1 => Ok(hits[0]),
+            _ => Ok(hits[0]), // several hp variants share the bucket; first is fine
+        }
+    }
+}
+
+fn parse_artifact(dir: &Path, stem: &str, a: &Json) -> Result<ArtifactSpec> {
+    let gets = |k: &str| a.get(k).and_then(Json::as_str).map(str::to_string);
+    let geti = |k: &str| a.get(k).and_then(Json::as_usize).unwrap_or(0);
+    let file = gets("file").ok_or_else(|| anyhow!("{stem}: missing file"))?;
+
+    let mut inputs = Vec::new();
+    for t in a
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{stem}: missing inputs"))?
+    {
+        inputs.push(parse_tensor_spec(stem, t)?);
+    }
+    let outputs = a
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{stem}: missing outputs"))?
+        .iter()
+        .filter_map(|o| o.as_str().map(str::to_string))
+        .collect();
+
+    let trainable_order = a
+        .get("trainable_order")
+        .and_then(Json::as_arr)
+        .map(|v| v.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+        .unwrap_or_default();
+
+    let mut init = Vec::new();
+    if let Some(entries) = a.get("init").and_then(Json::as_arr) {
+        for e in entries {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{stem}: init entry missing name"))?
+                .to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{stem}: init {name} missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let kind = match e.get("init").and_then(Json::as_str) {
+                Some("zeros") => InitKind::Zeros,
+                Some("normal") => InitKind::Normal,
+                Some("backbone") => InitKind::Backbone,
+                other => bail!("{stem}: init {name}: unknown kind {other:?}"),
+            };
+            let std = e.get("std").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+            init.push(InitSpec { name, shape, kind, std });
+        }
+    }
+
+    Ok(ArtifactSpec {
+        stem: stem.to_string(),
+        file: dir.join(&file),
+        kind: gets("kind").unwrap_or_default(),
+        model: gets("model").unwrap_or_default(),
+        method: gets("method").unwrap_or_default(),
+        batch: geti("batch"),
+        seq: geti("seq"),
+        rank: geti("rank"),
+        prefix: geti("prefix"),
+        classes: geti("classes"),
+        steps_per_call: geti("steps_per_call"),
+        inputs,
+        outputs,
+        trainable_order,
+        init,
+    })
+}
+
+fn parse_tensor_spec(stem: &str, t: &Json) -> Result<TensorSpec> {
+    let name = t
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{stem}: input missing name"))?
+        .to_string();
+    let shape = t
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{stem}: input {name} missing shape"))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    let dtype = DType::from_name(
+        t.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{stem}: input {name} missing dtype"))?,
+    )?;
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests exercise the real manifest when artifacts exist (they are
+    /// generated by `make artifacts`); otherwise they are skipped.
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest parses"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_models_and_artifacts() {
+        let Some(m) = manifest() else { return };
+        assert!(m.vocab_size >= 1024);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.d_model, 64);
+        assert!(tiny.kron_a * tiny.kron_b >= m.vocab_size);
+        assert!(m.artifacts().count() > 50);
+    }
+
+    #[test]
+    fn fwd_artifact_signature_sane() {
+        let Some(m) = manifest() else { return };
+        let a = m.find_bucket("fwd", "tiny", "aot", 2, 16).unwrap();
+        assert_eq!(a.outputs, vec!["logits".to_string()]);
+        // ids/mask/bias/head present after the 20 stacked backbone weights
+        assert_eq!(a.inputs_with_prefix("w.").len(), 20);
+        assert!(a.input("in.ids").is_ok());
+        assert!(a.input("in.bias").is_ok());
+        let ids = a.input("in.ids").unwrap();
+        assert_eq!(ids.shape, vec![2, 16]);
+        assert_eq!(ids.dtype, DType::I32);
+    }
+
+    #[test]
+    fn train_artifact_has_init_specs() {
+        let Some(m) = manifest() else { return };
+        let hits = m.find("train", "small", "aot-fc");
+        assert!(!hits.is_empty());
+        let a = hits[0];
+        assert!(!a.trainable_order.is_empty());
+        assert_eq!(a.init.len(), a.trainable_order.len());
+        assert!(a.init.iter().any(|i| i.kind == InitKind::Zeros));
+        assert!(a.init.iter().any(|i| i.kind == InitKind::Normal));
+        // outputs = t.* + m.* + v.* + step + loss
+        assert_eq!(a.outputs.len(), 3 * a.trainable_order.len() + 2);
+    }
+}

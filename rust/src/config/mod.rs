@@ -1,0 +1,43 @@
+//! Config system: typed views over the artifact manifest plus experiment
+//! scale configs.  `artifacts/manifest.json` (written by `compile/aot.py`)
+//! is the single source of truth for every artifact's positional
+//! input/output signature — Rust never parses HLO to discover shapes.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, InitKind, InitSpec, Manifest, ModelInfo, TensorSpec};
+
+/// Experiment scale knob: every experiment driver accepts one of these so
+/// the paper's full protocol is encoded while a laptop-scale default runs
+/// in CI time (DESIGN.md §2, grid-search substitution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-scale smoke run (tiny model, few steps).
+    Smoke,
+    /// Minutes-scale default, the one recorded in EXPERIMENTS.md.
+    Quick,
+    /// The full configured protocol (hours on this testbed).
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "smoke" => Scale::Smoke,
+            "quick" => Scale::Quick,
+            "full" => Scale::Full,
+            other => anyhow::bail!("unknown scale {other} (smoke|quick|full)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parses() {
+        assert_eq!(Scale::parse("quick").unwrap(), Scale::Quick);
+        assert!(Scale::parse("nope").is_err());
+    }
+}

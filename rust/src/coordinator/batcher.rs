@@ -1,0 +1,104 @@
+//! Bucket selection for the dynamic batcher.
+//!
+//! Artifacts are compiled for static (batch, seq) buckets; the batcher
+//! maps `(pending requests, max token length)` onto the cheapest bucket
+//! that fits.  Invariants (property-tested in `tests/prop_coordinator.rs`):
+//! the selected bucket always fits, and is minimal in padded area
+//! `batch × seq` among fitting buckets.
+
+use anyhow::bail;
+
+use crate::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Bucket {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// The available buckets of one serving signature.
+pub struct BucketSet {
+    buckets: Vec<Bucket>,
+    max_batch: usize,
+    max_seq: usize,
+}
+
+impl BucketSet {
+    pub fn new(mut buckets: Vec<Bucket>) -> BucketSet {
+        buckets.sort_by_key(|b| (b.batch * b.seq, b.batch));
+        buckets.dedup();
+        let max_batch = buckets.iter().map(|b| b.batch).max().unwrap_or(0);
+        let max_seq = buckets.iter().map(|b| b.seq).max().unwrap_or(0);
+        BucketSet { buckets, max_batch, max_seq }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn all(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest-area bucket with `batch >= count` and `seq >= max_len`.
+    pub fn select(&self, count: usize, max_len: usize) -> Result<Bucket> {
+        // buckets are sorted by area, so the first fit is minimal.
+        for b in &self.buckets {
+            if b.batch >= count && b.seq >= max_len {
+                return Ok(*b);
+            }
+        }
+        bail!(
+            "no bucket fits {count} requests of length <= {max_len} \
+             (max batch {}, max seq {})",
+            self.max_batch,
+            self.max_seq
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set() -> BucketSet {
+        BucketSet::new(vec![
+            Bucket { batch: 1, seq: 16 },
+            Bucket { batch: 1, seq: 64 },
+            Bucket { batch: 16, seq: 16 },
+            Bucket { batch: 16, seq: 64 },
+            Bucket { batch: 64, seq: 64 },
+        ])
+    }
+
+    #[test]
+    fn selects_minimal_fitting_bucket() {
+        let s = set();
+        assert_eq!(s.select(1, 10).unwrap(), Bucket { batch: 1, seq: 16 });
+        assert_eq!(s.select(1, 17).unwrap(), Bucket { batch: 1, seq: 64 });
+        assert_eq!(s.select(2, 10).unwrap(), Bucket { batch: 16, seq: 16 });
+        assert_eq!(s.select(17, 30).unwrap(), Bucket { batch: 64, seq: 64 });
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        let s = set();
+        assert!(s.select(65, 10).is_err());
+        assert!(s.select(1, 100).is_err());
+    }
+
+    #[test]
+    fn dedups_and_orders() {
+        let s = BucketSet::new(vec![
+            Bucket { batch: 4, seq: 8 },
+            Bucket { batch: 4, seq: 8 },
+            Bucket { batch: 2, seq: 8 },
+        ]);
+        assert_eq!(s.all().len(), 2);
+        assert_eq!(s.select(1, 8).unwrap(), Bucket { batch: 2, seq: 8 });
+    }
+}

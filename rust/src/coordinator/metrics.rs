@@ -1,0 +1,124 @@
+//! Serving metrics: request latency, batch sizes, and the split between
+//! the AoT gather and the backbone execute (the L3 perf targets of
+//! DESIGN.md §9).
+
+use std::sync::Mutex;
+
+use crate::util::stats;
+
+#[derive(Default)]
+struct MetricsInner {
+    request_latencies: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    batch_total_secs: Vec<f64>,
+    gather_secs: Vec<f64>,
+    exec_secs: Vec<f64>,
+}
+
+pub struct Metrics {
+    inner: Mutex<MetricsInner>,
+}
+
+/// A point-in-time summary.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    pub mean_gather_ms: f64,
+    pub mean_exec_ms: f64,
+    /// gather / (gather + execute): must stay small — the coordinator's
+    /// own work must not dominate the backbone (L3 target).
+    pub gather_fraction: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { inner: Mutex::new(MetricsInner::default()) }
+    }
+
+    pub fn observe_request(&self, latency_secs: f64) {
+        self.inner.lock().unwrap().request_latencies.push(latency_secs);
+    }
+
+    pub fn observe_batch(&self, size: usize, total: f64, gather: f64, exec: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_sizes.push(size);
+        m.batch_total_secs.push(total);
+        m.gather_secs.push(gather);
+        m.exec_secs.push(exec);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let sizes: Vec<f64> = m.batch_sizes.iter().map(|&s| s as f64).collect();
+        let gather_total: f64 = m.gather_secs.iter().sum();
+        let exec_total: f64 = m.exec_secs.iter().sum();
+        MetricsSnapshot {
+            requests: m.request_latencies.len(),
+            batches: m.batch_sizes.len(),
+            mean_batch_size: stats::mean(&sizes),
+            latency_p50_ms: stats::percentile(&m.request_latencies, 50.0) * 1e3,
+            latency_p99_ms: stats::percentile(&m.request_latencies, 99.0) * 1e3,
+            mean_gather_ms: stats::mean(&m.gather_secs) * 1e3,
+            mean_exec_ms: stats::mean(&m.exec_secs) * 1e3,
+            gather_fraction: if gather_total + exec_total > 0.0 {
+                gather_total / (gather_total + exec_total)
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} p50={:.2}ms p99={:.2}ms \
+             gather={:.3}ms exec={:.3}ms gather_frac={:.1}%",
+            self.requests,
+            self.batches,
+            self.mean_batch_size,
+            self.latency_p50_ms,
+            self.latency_p99_ms,
+            self.mean_gather_ms,
+            self.mean_exec_ms,
+            self.gather_fraction * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        m.observe_request(0.010);
+        m.observe_request(0.020);
+        m.observe_batch(2, 0.015, 0.001, 0.012);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+        assert!(s.latency_p50_ms >= 10.0 && s.latency_p50_ms <= 20.0);
+        assert!(s.gather_fraction > 0.0 && s.gather_fraction < 0.2);
+        assert!(!s.render().is_empty());
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.gather_fraction, 0.0);
+    }
+}

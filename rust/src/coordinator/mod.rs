@@ -1,0 +1,388 @@
+//! The multi-task inference coordinator — the system the paper motivates
+//! in §3.1 but never builds.
+//!
+//! One backbone executable (per bucket) serves every registered task:
+//!
+//! ```text
+//!            ┌────────────┐   per-task fused P (host RAM)
+//! requests → │   router    │   ┌──────────────┐
+//! (task,ids) │  + batcher  │ → │ AoT gather    │ → [ids,mask,bias,heads]
+//!            │ cross-task  │   │ P[l,ids,:]    │        │
+//!            └────────────┘   └──────────────┘        ▼
+//!                                            PJRT executable (shared
+//!                                            backbone, device-resident
+//!                                            weights) → logits → split
+//!                                            back per request
+//! ```
+//!
+//! * the **router/batcher** packs requests *from different tasks* into one
+//!   batch (the paper's multi-task inference claim);
+//! * the **registry** holds per-task fused `P` (RAM) + classification
+//!   heads;
+//! * the **gather** is the ahead-of-time lookup the method is named for;
+//! * Python is nowhere on this path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod registry;
+pub mod request;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail};
+
+use crate::config::Manifest;
+use crate::runtime::{Executable, Runtime, WeightCache};
+use crate::tensor::Tensor;
+use crate::tokenizer::PAD;
+use crate::Result;
+
+pub use batcher::{Bucket, BucketSet};
+pub use metrics::Metrics;
+pub use registry::{TaskRegistry, TaskState};
+pub use request::{Request, Response};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub model: String,
+    /// Max time a request waits for batch-mates before the batch flushes.
+    pub linger_ms: u64,
+    /// Serving signature; the paper's system serves fused AoT (`"aot"`).
+    pub signature: String,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { model: "small".into(), linger_ms: 2, signature: "aot".into() }
+    }
+}
+
+/// The coordinator. `submit` is thread-safe; one worker thread owns the
+/// PJRT execute loop (the CPU plugin is effectively single-streamed here).
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    tx: Sender<WorkItem>,
+}
+
+struct Inner {
+    runtime: Arc<Runtime>,
+    weights: WeightCache,
+    registry: TaskRegistry,
+    buckets: BucketSet,
+    executables: Mutex<HashMap<(usize, usize), Arc<Executable>>>,
+    manifest_dir: std::path::PathBuf,
+    stems: HashMap<(usize, usize), String>,
+    cfg: CoordinatorConfig,
+    metrics: Metrics,
+    running: AtomicBool,
+    d_model: usize,
+    classes: usize,
+}
+
+struct WorkItem {
+    request: Request,
+    enqueued: Instant,
+    respond: Sender<Result<Response>>,
+}
+
+impl Coordinator {
+    /// Build a coordinator for `cfg.model`, loading backbone weights and
+    /// discovering the bucket set from the manifest.
+    pub fn new(
+        runtime: Arc<Runtime>,
+        manifest: &Manifest,
+        registry: TaskRegistry,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        let info = manifest.model(&cfg.model)?;
+        let weights = WeightCache::from_ckpt(
+            &runtime,
+            &manifest.dir.join(format!("backbone_{}.aotckpt", cfg.model)),
+        )?;
+
+        // Discover serving buckets + artifact stems for this signature.
+        let mut stems = HashMap::new();
+        let mut buckets = Vec::new();
+        for a in manifest.find("fwd", &cfg.model, &cfg.signature) {
+            buckets.push(Bucket { batch: a.batch, seq: a.seq });
+            stems.insert((a.batch, a.seq), a.stem.clone());
+        }
+        if buckets.is_empty() {
+            bail!("no fwd_{}_{} artifacts in manifest", cfg.model, cfg.signature);
+        }
+
+        let (tx, rx) = channel::<WorkItem>();
+        let inner = Arc::new(Inner {
+            runtime,
+            weights,
+            registry,
+            buckets: BucketSet::new(buckets),
+            executables: Mutex::new(HashMap::new()),
+            manifest_dir: manifest.dir.clone(),
+            stems,
+            metrics: Metrics::new(),
+            running: AtomicBool::new(true),
+            d_model: info.d_model,
+            classes: manifest.multitask_classes,
+            cfg,
+        });
+
+        let worker_inner = Arc::clone(&inner);
+        let worker = std::thread::Builder::new()
+            .name("aotpt-coordinator".into())
+            .spawn(move || worker_loop(worker_inner, rx))
+            .expect("spawn coordinator worker");
+
+        Ok(Coordinator { inner, worker: Mutex::new(Some(worker)), tx })
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, request: Request) -> Result<Receiver<Result<Response>>> {
+        if !self.inner.running.load(Ordering::SeqCst) {
+            bail!("coordinator is shut down");
+        }
+        self.inner.registry.get(&request.task)?; // fail fast on unknown task
+        if request.ids.is_empty() || request.ids.len() > self.inner.buckets.max_seq() {
+            bail!(
+                "request length {} outside (0, {}]",
+                request.ids.len(),
+                self.inner.buckets.max_seq()
+            );
+        }
+        let (respond, receiver) = channel();
+        self.tx
+            .send(WorkItem { request, enqueued: Instant::now(), respond })
+            .map_err(|_| anyhow!("coordinator worker exited"))?;
+        Ok(receiver)
+    }
+
+    /// Convenience: synchronous classify.
+    pub fn classify(&self, task: &str, ids: Vec<i32>) -> Result<Response> {
+        let rx = self.submit(Request { task: task.to_string(), ids })?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+
+    pub fn registry(&self) -> &TaskRegistry {
+        &self.inner.registry
+    }
+
+    /// Stop the worker and join it.
+    pub fn shutdown(&self) {
+        if !self.inner.running.swap(false, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            // Wake the worker with a sentinel so it observes `running=false`.
+            let (fake_tx, _) = channel();
+            let _ = self.tx.send(WorkItem {
+                request: Request { task: String::new(), ids: vec![] },
+                enqueued: Instant::now(),
+                respond: fake_tx,
+            });
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>, rx: Receiver<WorkItem>) {
+    let linger = std::time::Duration::from_millis(inner.cfg.linger_ms);
+    loop {
+        // Block for the first item.
+        let first = match rx.recv() {
+            Ok(item) => item,
+            Err(_) => break,
+        };
+        if !inner.running.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut pending = vec![first];
+        // Linger to accumulate batch-mates, bounded by the largest bucket.
+        let deadline = Instant::now() + linger;
+        while pending.len() < inner.buckets.max_batch() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => {
+                    if !inner.running.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    pending.push(item);
+                }
+                Err(_) => break,
+            }
+        }
+        execute_batch(&inner, pending);
+        if !inner.running.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+}
+
+fn execute_batch(inner: &Arc<Inner>, items: Vec<WorkItem>) {
+    let t_batch = Instant::now();
+    match build_and_run(inner, &items) {
+        Ok((logits, bucket, gather_secs, exec_secs)) => {
+            let classes = inner.classes;
+            for (j, item) in items.iter().enumerate() {
+                let row = &logits[j * classes..(j + 1) * classes];
+                let state = inner.registry.get(&item.request.task).expect("validated");
+                let response = Response {
+                    logits: row[..state.classes].to_vec(),
+                    task: item.request.task.clone(),
+                    batch_size: items.len(),
+                    bucket_batch: bucket.batch,
+                    bucket_seq: bucket.seq,
+                };
+                inner
+                    .metrics
+                    .observe_request(item.enqueued.elapsed().as_secs_f64());
+                let _ = item.respond.send(Ok(response));
+            }
+            inner.metrics.observe_batch(
+                items.len(),
+                t_batch.elapsed().as_secs_f64(),
+                gather_secs,
+                exec_secs,
+            );
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for item in items {
+                let _ = item.respond.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+/// Assemble the bucket inputs and run the backbone once for the batch.
+#[allow(clippy::type_complexity)]
+fn build_and_run(
+    inner: &Arc<Inner>,
+    items: &[WorkItem],
+) -> Result<(Vec<f32>, Bucket, f64, f64)> {
+    let count = items.len();
+    let max_len = items.iter().map(|i| i.request.ids.len()).max().unwrap_or(1);
+    let bucket = inner.buckets.select(count, max_len)?;
+    let (b, n) = (bucket.batch, bucket.seq);
+    let d = inner.d_model;
+    let classes = inner.classes;
+
+    // Pad ids/mask to the bucket; surplus rows repeat row 0's task with an
+    // all-PAD sequence (their logits are dropped after execute).
+    let mut ids = vec![PAD; b * n];
+    let mut mask = vec![0f32; b * n];
+    let mut assignments: Vec<&str> = Vec::with_capacity(b);
+    for (j, item) in items.iter().enumerate() {
+        let req = &item.request;
+        for (t, &tok) in req.ids.iter().enumerate() {
+            ids[j * n + t] = tok;
+            mask[j * n + t] = 1.0;
+        }
+        assignments.push(&req.task);
+    }
+    let filler_task = items[0].request.task.as_str();
+    for _ in count..b {
+        assignments.push(filler_task);
+    }
+
+    // Heads: [b, d, C] / [b, C], zero-padded to the multitask class count.
+    let mut head_w = vec![0f32; b * d * classes];
+    let mut head_b = vec![0f32; b * classes];
+    for (j, task) in assignments.iter().enumerate() {
+        let state = inner.registry.get(task)?;
+        for di in 0..d {
+            let src = &state.head_w[di * state.classes..(di + 1) * state.classes];
+            head_w[(j * d + di) * classes..(j * d + di) * classes + state.classes]
+                .copy_from_slice(src);
+        }
+        head_b[j * classes..j * classes + state.classes].copy_from_slice(&state.head_b);
+    }
+
+    // THE ahead-of-time gather (paper Equation 1's serving form).
+    let t_gather = Instant::now();
+    let bias = inner.registry.pstore().gather(&assignments, &ids, n)?;
+    let gather_secs = t_gather.elapsed().as_secs_f64();
+
+    let exe = load_bucket(inner, bucket)?;
+
+    // Assemble positional args: weights from the device cache, per-call
+    // tensors uploaded here.
+    let ids_t = Tensor::from_i32(&[b, n], ids);
+    let mask_t = Tensor::from_f32(&[b, n], mask);
+    let head_w_t = Tensor::from_f32(&[b, d, classes], head_w);
+    let head_b_t = Tensor::from_f32(&[b, classes], head_b);
+
+    let mut uploads = Vec::new();
+    for spec in &exe.spec.inputs {
+        let host: Option<&Tensor> = match spec.name.as_str() {
+            "in.ids" => Some(&ids_t),
+            "in.mask" => Some(&mask_t),
+            "in.bias" => Some(&bias),
+            "in.head_w" => Some(&head_w_t),
+            "in.head_b" => Some(&head_b_t),
+            _ => None,
+        };
+        match host {
+            Some(t) => uploads.push(Some(exe.upload(t)?)),
+            None => uploads.push(None),
+        }
+    }
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(exe.spec.inputs.len());
+    for (spec, upload) in exe.spec.inputs.iter().zip(&uploads) {
+        match upload {
+            Some(buf) => args.push(buf),
+            None => {
+                let name = spec
+                    .name
+                    .strip_prefix("w.")
+                    .ok_or_else(|| anyhow!("unexpected serving input {}", spec.name))?;
+                args.push(inner.weights.buffer(name)?);
+            }
+        }
+    }
+
+    let t_exec = Instant::now();
+    let outs = exe.run_buffers(&args)?;
+    let exec_secs = t_exec.elapsed().as_secs_f64();
+
+    let logits = outs[0].as_f32()?.to_vec();
+    Ok((logits, bucket, gather_secs, exec_secs))
+}
+
+fn load_bucket(inner: &Arc<Inner>, bucket: Bucket) -> Result<Arc<Executable>> {
+    let key = (bucket.batch, bucket.seq);
+    if let Some(exe) = inner.executables.lock().unwrap().get(&key) {
+        return Ok(Arc::clone(exe));
+    }
+    let stem = inner
+        .stems
+        .get(&key)
+        .ok_or_else(|| anyhow!("no artifact for bucket b{}n{}", bucket.batch, bucket.seq))?;
+    let manifest = Manifest::load(&inner.manifest_dir)?;
+    let exe = inner.runtime.load(&manifest, stem)?;
+    inner
+        .executables
+        .lock()
+        .unwrap()
+        .insert(key, Arc::clone(&exe));
+    Ok(exe)
+}

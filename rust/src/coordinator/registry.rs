@@ -1,0 +1,205 @@
+//! The task registry: per-task fused `P` tables (host RAM, via `PStore`)
+//! plus per-task classification heads.  Registering a task is the fuse
+//! step of §3.3 — after it, serving cost is independent of the method's
+//! training-time rank `r` (the paper's Figure 2 point).
+
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+use anyhow::{anyhow, bail};
+
+use crate::peft::{fuse, PStore, TaskP};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Per-task serving state (everything the coordinator needs at runtime).
+#[derive(Clone)]
+pub struct TaskState {
+    pub classes: usize,
+    /// Row-major [d, classes].
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+pub struct TaskRegistry {
+    layers: usize,
+    vocab: usize,
+    d_model: usize,
+    max_classes: usize,
+    pstore: PStore,
+    tasks: RwLock<BTreeMap<String, TaskState>>,
+}
+
+impl TaskRegistry {
+    pub fn new(layers: usize, vocab: usize, d_model: usize, max_classes: usize) -> TaskRegistry {
+        TaskRegistry {
+            layers,
+            vocab,
+            d_model,
+            max_classes,
+            pstore: PStore::new(layers, vocab, d_model),
+            tasks: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Register a task from an already-fused table.
+    pub fn register_fused(
+        &mut self,
+        name: &str,
+        p: TaskP,
+        head_w: &Tensor,
+        head_b: &Tensor,
+    ) -> Result<()> {
+        let classes = head_b.len();
+        if classes > self.max_classes {
+            bail!("task {name}: {classes} classes exceeds serving max {}", self.max_classes);
+        }
+        head_w.check_shape(&[self.d_model, classes])?;
+        self.pstore.insert(name, p)?;
+        self.tasks.write().unwrap().insert(
+            name.to_string(),
+            TaskState {
+                classes,
+                head_w: head_w.as_f32()?.to_vec(),
+                head_b: head_b.as_f32()?.to_vec(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Register an FC-AoT task from its *trained reparametrized* weights:
+    /// runs the fuse (Equation 3) host-side, then stores the dense table.
+    pub fn register_fc(
+        &mut self,
+        name: &str,
+        emb: &Tensor,
+        trained: &BTreeMap<String, Tensor>,
+    ) -> Result<()> {
+        let p = fuse::fuse_fc(emb, trained)?;
+        let (head_w, head_b) = heads_from(trained)?;
+        self.register_fused(name, p, &head_w, &head_b)
+    }
+
+    /// Register a Kronecker-AoT task (Equation 2 fuse).
+    pub fn register_kron(
+        &mut self,
+        name: &str,
+        trained: &BTreeMap<String, Tensor>,
+    ) -> Result<()> {
+        let p = fuse::fuse_kron(self.vocab, trained)?;
+        let (head_w, head_b) = heads_from(trained)?;
+        self.register_fused(name, p, &head_w, &head_b)
+    }
+
+    /// Register a task with a zero table (serves the frozen backbone +
+    /// head; used as the BitFit-style sanity baseline and in tests).
+    pub fn register_zero(
+        &mut self,
+        name: &str,
+        head_w: &Tensor,
+        head_b: &Tensor,
+    ) -> Result<()> {
+        self.register_fused(
+            name,
+            TaskP::zeros(self.layers, self.vocab, self.d_model),
+            head_w,
+            head_b,
+        )
+    }
+
+    pub fn get(&self, name: &str) -> Result<TaskState> {
+        self.tasks
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown task {name}"))
+    }
+
+    pub fn pstore(&self) -> &PStore {
+        &self.pstore
+    }
+
+    pub fn task_names(&self) -> Vec<String> {
+        self.tasks.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Host RAM held by all fused tables (the paper's §3.3 trade-off).
+    pub fn ram_bytes(&self) -> usize {
+        self.pstore.bytes()
+    }
+}
+
+fn heads_from(trained: &BTreeMap<String, Tensor>) -> Result<(Tensor, Tensor)> {
+    let w = trained
+        .get("t.head_w")
+        .or_else(|| trained.get("head_w"))
+        .ok_or_else(|| anyhow!("trained state missing head_w"))?;
+    let b = trained
+        .get("t.head_b")
+        .or_else(|| trained.get("head_b"))
+        .ok_or_else(|| anyhow!("trained state missing head_b"))?;
+    Ok((w.clone(), b.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn register_and_lookup() {
+        let mut reg = TaskRegistry::new(2, 100, 8, 4);
+        let head_w = Tensor::from_f32(&[8, 2], vec![0.1; 16]);
+        let head_b = Tensor::from_f32(&[2], vec![0.0, 0.0]);
+        reg.register_zero("sst2", &head_w, &head_b).unwrap();
+        let state = reg.get("sst2").unwrap();
+        assert_eq!(state.classes, 2);
+        assert_eq!(reg.task_names(), vec!["sst2".to_string()]);
+        assert!(reg.get("nope").is_err());
+        assert_eq!(reg.ram_bytes(), 2 * 100 * 8 * 4);
+    }
+
+    #[test]
+    fn rejects_too_many_classes() {
+        let mut reg = TaskRegistry::new(2, 100, 8, 2);
+        let head_w = Tensor::from_f32(&[8, 3], vec![0.0; 24]);
+        let head_b = Tensor::from_f32(&[3], vec![0.0; 3]);
+        assert!(reg.register_zero("big", &head_w, &head_b).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_head_shape() {
+        let mut reg = TaskRegistry::new(2, 100, 8, 4);
+        let head_w = Tensor::zeros(DType::F32, &[7, 2]);
+        let head_b = Tensor::zeros(DType::F32, &[2]);
+        assert!(reg.register_zero("bad", &head_w, &head_b).is_err());
+    }
+
+    #[test]
+    fn register_fc_fuses_and_serves() {
+        let (l, v, d, r) = (2, 30, 8, 4);
+        let mut reg = TaskRegistry::new(l, v, d, 4);
+        let mut rng = crate::util::Pcg64::new(5);
+        let emb = Tensor::from_f32(&[v, d], rng.normal_vec(v * d, 1.0));
+        let mut tr = BTreeMap::new();
+        tr.insert("t.fc.w1".into(), Tensor::from_f32(&[l, d, r], rng.normal_vec(l * d * r, 0.1)));
+        tr.insert("t.fc.b1".into(), Tensor::from_f32(&[l, r], rng.normal_vec(l * r, 0.1)));
+        tr.insert("t.fc.w2".into(), Tensor::from_f32(&[l, r, d], rng.normal_vec(l * r * d, 0.1)));
+        tr.insert("t.fc.b2".into(), Tensor::from_f32(&[l, d], rng.normal_vec(l * d, 0.1)));
+        tr.insert("t.head_w".into(), Tensor::from_f32(&[d, 2], rng.normal_vec(d * 2, 0.1)));
+        tr.insert("t.head_b".into(), Tensor::from_f32(&[2], vec![0.0; 2]));
+        reg.register_fc("wic", &emb, &tr).unwrap();
+        // A non-degenerate table must have non-zero norms.
+        let p = reg.pstore().get("wic").unwrap();
+        assert!(p.row_norms(0).iter().any(|&n| n > 0.0));
+    }
+}

@@ -1,0 +1,49 @@
+//! Request/response types for the serving API.
+
+/// A classification request: token ids already packed (`[CLS] … [SEP]`,
+/// unpadded — the batcher pads to the chosen bucket).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub task: String,
+    pub ids: Vec<i32>,
+}
+
+/// The response: per-class logits for the request's task.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub task: String,
+    /// How many live requests shared the backbone invocation.
+    pub batch_size: usize,
+    /// The (batch, seq) bucket that served the request.
+    pub bucket_batch: usize,
+    pub bucket_seq: usize,
+}
+
+impl Response {
+    pub fn argmax(&self) -> i64 {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i64)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        let r = Response {
+            logits: vec![0.1, 2.0, -1.0],
+            task: "t".into(),
+            batch_size: 1,
+            bucket_batch: 1,
+            bucket_seq: 16,
+        };
+        assert_eq!(r.argmax(), 1);
+    }
+}

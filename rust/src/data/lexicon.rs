@@ -1,0 +1,196 @@
+//! The shared synthetic lexicon: clustered word classes whose ids drive
+//! every task generator.  Word strings are interpretable (`pos17`,
+//! `name_f3`, `vcause8`) so the §4.3 analysis tables read like the
+//! paper's.
+
+use crate::tokenizer::{WordVocab, N_SPECIAL};
+use crate::util::Pcg64;
+
+pub const N_POS: usize = 150; // sentiment-positive cues
+pub const N_NEG: usize = 150; // sentiment-negative cues
+pub const N_NAME_M: usize = 100; // "male" entity names (WSC analog)
+pub const N_NAME_F: usize = 100; // "female" entity names
+pub const N_VERB_PAIRS: usize = 100; // (cause, effect) verb pairs (COPA)
+pub const N_NOUN: usize = 4000;
+pub const N_ADJ: usize = 300;
+pub const N_ADV: usize = 200;
+pub const N_FUNC: usize = 60;
+pub const N_SENSE: usize = 120; // polysemous words (WiC analog)
+pub const SENSE_CTX: usize = 8; // context-cluster size per sense
+
+pub struct Lexicon {
+    vocab: WordVocab,
+    pub pos: Vec<i32>,
+    pub neg: Vec<i32>,
+    pub name_m: Vec<i32>,
+    pub name_f: Vec<i32>,
+    pub vcause: Vec<i32>,
+    pub veffect: Vec<i32>,
+    pub noun: Vec<i32>,
+    pub adj: Vec<i32>,
+    pub adv: Vec<i32>,
+    pub func: Vec<i32>,
+    /// Polysemous words + their two sense-context clusters (noun ids).
+    pub sense_word: Vec<i32>,
+    pub sense_ctx_a: Vec<Vec<i32>>,
+    pub sense_ctx_b: Vec<Vec<i32>>,
+    /// Pronouns (function-word ids): he / she.
+    pub pron_m: i32,
+    pub pron_f: i32,
+    /// Negation marker (MNLI/RTE contradiction cue).
+    pub negation: i32,
+    /// Question marker words.
+    pub q_word: i32,
+}
+
+impl Lexicon {
+    /// Deterministic lexicon for a seed (seed only affects the WiC sense
+    /// context assignment; the word inventory itself is fixed).
+    pub fn generate(seed: u64) -> Lexicon {
+        let mut words: Vec<String> = Vec::new();
+        let push_block = |prefix: &str, n: usize, words: &mut Vec<String>| -> Vec<usize> {
+            let start = words.len();
+            for i in 0..n {
+                words.push(format!("{prefix}{i}"));
+            }
+            (start..start + n).collect()
+        };
+
+        let pos_ix = push_block("pos", N_POS, &mut words);
+        let neg_ix = push_block("neg", N_NEG, &mut words);
+        let name_m_ix = push_block("name_m", N_NAME_M, &mut words);
+        let name_f_ix = push_block("name_f", N_NAME_F, &mut words);
+        let vcause_ix = push_block("vcause", N_VERB_PAIRS, &mut words);
+        let veffect_ix = push_block("veffect", N_VERB_PAIRS, &mut words);
+        let noun_ix = push_block("noun", N_NOUN, &mut words);
+        let adj_ix = push_block("adj", N_ADJ, &mut words);
+        let adv_ix = push_block("adv", N_ADV, &mut words);
+        let func_ix = push_block("func", N_FUNC, &mut words);
+        let sense_ix = push_block("sense", N_SENSE, &mut words);
+        // Dedicated pronouns / markers.
+        let special_start = words.len();
+        words.push("he".into());
+        words.push("she".into());
+        words.push("not".into());
+        words.push("which".into());
+
+        let vocab = WordVocab::new(words, 8192).expect("lexicon fits vocab");
+        let to_ids = |ix: Vec<usize>| -> Vec<i32> {
+            ix.into_iter().map(|i| (i + N_SPECIAL) as i32).collect()
+        };
+
+        let noun = to_ids(noun_ix);
+        let mut rng = Pcg64::new(seed).fold(0x5EED);
+        // Assign each polysemous word two disjoint noun context clusters.
+        let mut sense_ctx_a = Vec::with_capacity(N_SENSE);
+        let mut sense_ctx_b = Vec::with_capacity(N_SENSE);
+        for _ in 0..N_SENSE {
+            let perm = rng.permutation(noun.len());
+            sense_ctx_a.push(perm[..SENSE_CTX].iter().map(|&i| noun[i]).collect());
+            sense_ctx_b.push(perm[SENSE_CTX..2 * SENSE_CTX].iter().map(|&i| noun[i]).collect());
+        }
+
+        Lexicon {
+            pos: to_ids(pos_ix),
+            neg: to_ids(neg_ix),
+            name_m: to_ids(name_m_ix),
+            name_f: to_ids(name_f_ix),
+            vcause: to_ids(vcause_ix),
+            veffect: to_ids(veffect_ix),
+            noun,
+            adj: to_ids(adj_ix),
+            adv: to_ids(adv_ix),
+            func: to_ids(func_ix),
+            sense_word: to_ids(sense_ix),
+            sense_ctx_a,
+            sense_ctx_b,
+            pron_m: (special_start + N_SPECIAL) as i32,
+            pron_f: (special_start + N_SPECIAL + 1) as i32,
+            negation: (special_start + N_SPECIAL + 2) as i32,
+            q_word: (special_start + N_SPECIAL + 3) as i32,
+            vocab,
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.vocab.word(id).unwrap_or("[?]")
+    }
+
+    /// A filler word (function/noun/adj mixture) for sentence padding.
+    pub fn filler(&self, rng: &mut Pcg64) -> i32 {
+        match rng.below(10) {
+            0..=3 => *rng.choose(&self.func),
+            4..=7 => *rng.choose(&self.noun),
+            _ => *rng.choose(&self.adj),
+        }
+    }
+
+    /// Any non-special word (MLM corpus sampling).
+    pub fn any_word(&self, rng: &mut Pcg64) -> i32 {
+        match rng.below(12) {
+            0 => *rng.choose(&self.pos),
+            1 => *rng.choose(&self.neg),
+            2 => *rng.choose(&self.name_m),
+            3 => *rng.choose(&self.name_f),
+            4 => *rng.choose(&self.vcause),
+            5 => *rng.choose(&self.veffect),
+            6..=8 => *rng.choose(&self.noun),
+            9 => *rng.choose(&self.adj),
+            10 => *rng.choose(&self.adv),
+            _ => *rng.choose(&self.func),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicon_fits_vocab_and_is_disjoint() {
+        let lex = Lexicon::generate(0);
+        assert!(lex.vocab_size() <= 8192);
+        // Clusters must not overlap.
+        let mut all: Vec<i32> = Vec::new();
+        for block in [&lex.pos, &lex.neg, &lex.name_m, &lex.name_f, &lex.vcause,
+                      &lex.veffect, &lex.noun, &lex.adj, &lex.adv, &lex.func,
+                      &lex.sense_word] {
+            all.extend_from_slice(block);
+        }
+        all.extend_from_slice(&[lex.pron_m, lex.pron_f, lex.negation, lex.q_word]);
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "clusters overlap");
+    }
+
+    #[test]
+    fn word_strings_are_interpretable() {
+        let lex = Lexicon::generate(0);
+        assert_eq!(lex.word(lex.pos[3]), "pos3");
+        assert_eq!(lex.word(lex.name_f[0]), "name_f0");
+        assert_eq!(lex.word(lex.pron_m), "he");
+        assert_eq!(lex.word(lex.negation), "not");
+    }
+
+    #[test]
+    fn sense_clusters_are_disjoint_per_word() {
+        let lex = Lexicon::generate(7);
+        for i in 0..N_SENSE {
+            for a in &lex.sense_ctx_a[i] {
+                assert!(!lex.sense_ctx_b[i].contains(a));
+            }
+        }
+    }
+
+    #[test]
+    fn lexicon_is_deterministic() {
+        let a = Lexicon::generate(5);
+        let b = Lexicon::generate(5);
+        assert_eq!(a.sense_ctx_a, b.sense_ctx_a);
+    }
+}

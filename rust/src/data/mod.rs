@@ -1,0 +1,52 @@
+//! Synthetic GLUE/SuperGLUE-analog benchmark suite (DESIGN.md §2).
+//!
+//! Real GLUE/SuperGLUE are not downloadable offline, so each task is
+//! replaced by a generator with the same *decision structure*: sentence
+//! classification driven by token-identity cues (SST-2/CoLA analogs),
+//! sentence-pair reasoning (MRPC/QQP/MNLI/RTE/QNLI analogs), and the
+//! SuperGLUE tasks whose §4.3 analysis the paper reports (WSC's
+//! pronoun/name cues, COPA's verb cues, WiC's sense clusters).  Because
+//! the generators' cue tokens are *known*, the Appendix 7–10 row-norm
+//! analysis becomes a sharp check instead of a qualitative one.
+//!
+//! Every generator draws from one shared `Lexicon` so a single backbone
+//! vocabulary serves all tasks (multi-task serving needs this, §3.1).
+//! Labels carry 3% symmetric noise to keep ceilings below 100%.
+
+pub mod lexicon;
+pub mod tasks;
+
+pub use lexicon::Lexicon;
+pub use tasks::{make_task, Example, Metric, TaskData, GLUE_TASKS, SUPERGLUE_TASKS};
+
+use crate::util::Pcg64;
+
+/// Sample an MLM pre-training corpus: sentences of filler/content words.
+/// Returns token-id sentences (no CLS/SEP; the pretrain driver packs them).
+pub fn corpus(lex: &Lexicon, seed: u64, n_sentences: usize, max_len: usize) -> Vec<Vec<i32>> {
+    let mut rng = Pcg64::new(seed).fold(0xC0FFEE);
+    (0..n_sentences)
+        .map(|_| {
+            let len = rng.range(5, max_len as i64) as usize;
+            (0..len).map(|_| lex.any_word(&mut rng)).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tokens_in_vocab() {
+        let lex = Lexicon::generate(1);
+        let c = corpus(&lex, 2, 50, 30);
+        assert_eq!(c.len(), 50);
+        for sent in &c {
+            assert!(!sent.is_empty());
+            for &t in sent {
+                assert!((t as usize) < lex.vocab_size(), "{t}");
+            }
+        }
+    }
+}

@@ -1,0 +1,519 @@
+//! The fifteen task generators (8 GLUE analogs + 7 SuperGLUE analogs,
+//! RTE appearing in both, matching the paper's evaluation inventory) and
+//! the per-task metrics of Appendix Table 3.
+
+use crate::tokenizer::pack_pair;
+use crate::util::{stats, Pcg64};
+use crate::Result;
+
+use super::lexicon::Lexicon;
+
+pub const GLUE_TASKS: [&str; 8] =
+    ["cola", "sst2", "mrpc", "stsb", "qqp", "mnli", "qnli", "rte"];
+pub const SUPERGLUE_TASKS: [&str; 7] =
+    ["boolq", "cb", "copa", "multirc", "rte", "wic", "wsc"];
+
+const LABEL_NOISE: f64 = 0.03;
+
+/// One classification example, already packed to `[CLS] … [SEP]` + padding.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub label: f32,
+}
+
+/// Per-task metric (paper Appendix Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    /// (Accuracy + F1) / 2
+    AccF1,
+    Matthews,
+    /// (Pearson + Spearman) / 2 on the ordinal labels (STS-B analog).
+    PearsonSpearman,
+}
+
+impl Metric {
+    pub fn compute(self, pred: &[i64], gold: &[i64]) -> f64 {
+        match self {
+            Metric::Accuracy => stats::accuracy(pred, gold),
+            Metric::AccF1 => {
+                0.5 * (stats::accuracy(pred, gold) + stats::f1_macro(pred, gold))
+            }
+            Metric::Matthews => stats::matthews(pred, gold),
+            Metric::PearsonSpearman => {
+                let p: Vec<f64> = pred.iter().map(|&x| x as f64).collect();
+                let g: Vec<f64> = gold.iter().map(|&x| x as f64).collect();
+                0.5 * (stats::pearson(&p, &g) + stats::spearman(&p, &g))
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Accuracy => "accuracy",
+            Metric::AccF1 => "(acc+f1)/2",
+            Metric::Matthews => "matthews",
+            Metric::PearsonSpearman => "(pearson+spearman)/2",
+        }
+    }
+}
+
+/// A generated task: train/dev splits + metadata.
+pub struct TaskData {
+    pub name: String,
+    pub metric: Metric,
+    pub classes: usize,
+    pub train: Vec<Example>,
+    pub dev: Vec<Example>,
+    /// The cue-token ids that *define* the task (ground truth for the
+    /// §4.3 row-norm analysis — trained P should weight exactly these).
+    pub cue_tokens: Vec<i32>,
+}
+
+/// Task registry entry.
+pub fn task_metric(name: &str) -> Metric {
+    match name {
+        "cola" => Metric::Matthews,
+        "stsb" => Metric::PearsonSpearman,
+        "mrpc" | "qqp" | "multirc" | "cb" => Metric::AccF1,
+        _ => Metric::Accuracy,
+    }
+}
+
+pub fn task_classes(name: &str) -> usize {
+    match name {
+        "mnli" | "cb" | "stsb" => 3,
+        _ => 2,
+    }
+}
+
+/// Generate a task's train + dev splits.
+pub fn make_task(
+    lex: &Lexicon,
+    name: &str,
+    seed: u64,
+    n_train: usize,
+    n_dev: usize,
+    seq: usize,
+) -> Result<TaskData> {
+    let mut rng = Pcg64::new(seed).fold(hash_name(name));
+    let gen = generator(name)?;
+    let make_split = |n: usize, rng: &mut Pcg64| -> Vec<Example> {
+        (0..n)
+            .map(|_| {
+                let (a, b, mut label) = gen(lex, rng);
+                if rng.bool(LABEL_NOISE) {
+                    label = (label + 1) % task_classes(name) as i64;
+                }
+                let (ids, mask) = pack_pair(&a, b.as_deref(), seq);
+                Example { ids, mask, label: label as f32 }
+            })
+            .collect()
+    };
+    let train = make_split(n_train, &mut rng);
+    let dev = make_split(n_dev, &mut rng);
+    Ok(TaskData {
+        name: name.to_string(),
+        metric: task_metric(name),
+        classes: task_classes(name),
+        train,
+        dev,
+        cue_tokens: cue_tokens(lex, name),
+    })
+}
+
+fn hash_name(name: &str) -> u64 {
+    name.bytes().fold(1469598103934665603u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(1099511628211)
+    })
+}
+
+type Gen = fn(&Lexicon, &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64);
+
+fn generator(name: &str) -> Result<Gen> {
+    Ok(match name {
+        "sst2" => gen_sst2,
+        "cola" => gen_cola,
+        "mrpc" => gen_paraphrase,
+        "qqp" => gen_paraphrase,
+        "stsb" => gen_stsb,
+        "mnli" => gen_nli3,
+        "cb" => gen_nli3,
+        "qnli" => gen_qnli,
+        "rte" => gen_rte,
+        "boolq" => gen_boolq,
+        "copa" => gen_copa,
+        "multirc" => gen_multirc,
+        "wic" => gen_wic,
+        "wsc" => gen_wsc,
+        other => anyhow::bail!("unknown task {other}"),
+    })
+}
+
+/// The tokens whose P rows should grow for each task (§4.3 ground truth).
+fn cue_tokens(lex: &Lexicon, name: &str) -> Vec<i32> {
+    match name {
+        "sst2" | "stsb" => [lex.pos.clone(), lex.neg.clone()].concat(),
+        "cola" => lex.func.clone(),
+        "mnli" | "cb" | "rte" => {
+            let mut v = vec![lex.negation];
+            v.extend_from_slice(&lex.name_m[..20]);
+            v.extend_from_slice(&lex.name_f[..20]);
+            v
+        }
+        "copa" => [lex.vcause.clone(), lex.veffect.clone()].concat(),
+        "wic" => lex.sense_word.clone(),
+        "wsc" => {
+            let mut v = vec![lex.pron_m, lex.pron_f];
+            v.extend_from_slice(&lex.name_m);
+            v.extend_from_slice(&lex.name_f);
+            v
+        }
+        _ => Vec::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generators.  Each returns (sentence_a, optional sentence_b, label).
+// ---------------------------------------------------------------------------
+
+fn sentence(lex: &Lexicon, rng: &mut Pcg64, len: usize) -> Vec<i32> {
+    (0..len).map(|_| lex.filler(rng)).collect()
+}
+
+/// SST-2 analog: polarity from the majority of sentiment-cue words.
+fn gen_sst2(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let len = rng.range(8, 16) as usize;
+    let mut s = sentence(lex, rng, len);
+    let n_cues = rng.range(2, 5) as usize;
+    for _ in 0..n_cues {
+        let cue = if label == 1 { *rng.choose(&lex.pos) } else { *rng.choose(&lex.neg) };
+        let pos = rng.below(s.len() as u64) as usize;
+        s.insert(pos, cue);
+    }
+    // one distractor of the opposite polarity, sometimes
+    if rng.bool(0.3) {
+        let cue = if label == 1 { *rng.choose(&lex.neg) } else { *rng.choose(&lex.pos) };
+        let pos = rng.below(s.len() as u64) as usize;
+        s.insert(pos, cue);
+    }
+    (s, None, label)
+}
+
+/// CoLA analog: "grammatical" = the template func-adj-noun-verb cycle;
+/// unacceptable = a shuffled version (word-order sensitive; Matthews).
+fn gen_cola(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let cycles = rng.range(2, 4) as usize;
+    let mut s = Vec::new();
+    for _ in 0..cycles {
+        s.push(*rng.choose(&lex.func));
+        s.push(*rng.choose(&lex.adj));
+        s.push(*rng.choose(&lex.noun));
+        s.push(*rng.choose(&lex.vcause));
+    }
+    if label == 0 {
+        rng.shuffle(&mut s);
+    }
+    (s, None, label)
+}
+
+/// MRPC/QQP analog: paraphrase = same content nouns (some swapped within
+/// cluster neighbors), non-paraphrase = fresh sentence.
+fn gen_paraphrase(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let content: Vec<i32> = (0..4).map(|_| *rng.choose(&lex.noun)).collect();
+    let mut s1 = sentence(lex, rng, 6);
+    for &c in &content {
+        let pos = rng.below(s1.len() as u64) as usize;
+        s1.insert(pos, c);
+    }
+    let s2 = if label == 1 {
+        let mut s2 = sentence(lex, rng, 6);
+        for &c in &content {
+            let pos = rng.below(s2.len() as u64) as usize;
+            s2.insert(pos, c);
+        }
+        s2
+    } else {
+        let other: Vec<i32> = (0..4).map(|_| *rng.choose(&lex.noun)).collect();
+        let mut s2 = sentence(lex, rng, 6);
+        for &c in &other {
+            let pos = rng.below(s2.len() as u64) as usize;
+            s2.insert(pos, c);
+        }
+        s2
+    };
+    (s1, Some(s2), label)
+}
+
+/// STS-B analog: 3-bin ordinal similarity by shared-content count.
+fn gen_stsb(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(3) as i64; // 0 = unrelated, 1 = partial, 2 = same
+    let shared = match label {
+        0 => 0,
+        1 => 2,
+        _ => 4,
+    };
+    let content: Vec<i32> = (0..4).map(|_| *rng.choose(&lex.noun)).collect();
+    let mut s1 = sentence(lex, rng, 5);
+    for &c in &content {
+        s1.insert(rng.below(s1.len() as u64) as usize, c);
+    }
+    let mut s2 = sentence(lex, rng, 5);
+    for &c in content.iter().take(shared) {
+        s2.insert(rng.below(s2.len() as u64) as usize, c);
+    }
+    for _ in shared..4 {
+        s2.insert(rng.below(s2.len() as u64) as usize, *rng.choose(&lex.noun));
+    }
+    (s1, Some(s2), label)
+}
+
+/// MNLI/CB analog: 3-class NLI. Entail: hypothesis ⊂ premise content.
+/// Contradict: hypothesis repeats premise content + negation marker.
+/// Neutral: disjoint content.
+fn gen_nli3(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(3) as i64; // 0 entail, 1 neutral, 2 contradict
+    let content: Vec<i32> = (0..4).map(|_| *rng.choose(&lex.noun)).collect();
+    let name = if rng.bool(0.5) { *rng.choose(&lex.name_m) } else { *rng.choose(&lex.name_f) };
+    let mut prem = sentence(lex, rng, 5);
+    prem.insert(0, name);
+    for &c in &content {
+        prem.insert(rng.below(prem.len() as u64) as usize, c);
+    }
+    let mut hyp = sentence(lex, rng, 3);
+    match label {
+        0 => {
+            hyp.insert(0, name);
+            for &c in content.iter().take(2) {
+                hyp.insert(rng.below(hyp.len() as u64) as usize, c);
+            }
+        }
+        2 => {
+            hyp.insert(0, name);
+            hyp.insert(1, lex.negation);
+            for &c in content.iter().take(2) {
+                hyp.insert(rng.below(hyp.len() as u64) as usize, c);
+            }
+        }
+        _ => {
+            let other_name =
+                if rng.bool(0.5) { *rng.choose(&lex.name_m) } else { *rng.choose(&lex.name_f) };
+            hyp.insert(0, other_name);
+            for _ in 0..2 {
+                hyp.insert(rng.below(hyp.len() as u64) as usize, *rng.choose(&lex.noun));
+            }
+        }
+    }
+    (prem, Some(hyp), label)
+}
+
+/// RTE analog: binary NLI (entail vs not).
+fn gen_rte(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let (p, h, l3) = gen_nli3(lex, rng);
+    (p, h, if l3 == 0 { 1 } else { 0 })
+}
+
+/// QNLI analog: does the sentence contain the questioned noun?
+fn gen_qnli(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let target = *rng.choose(&lex.noun);
+    let q = vec![lex.q_word, target];
+    let mut s = sentence(lex, rng, 10);
+    if label == 1 {
+        s.insert(rng.below(s.len() as u64) as usize, target);
+    }
+    (q, Some(s), label)
+}
+
+/// BoolQ analog: question about a noun; passage answers yes iff it pairs
+/// the noun with a positive-cue word.
+fn gen_boolq(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let target = *rng.choose(&lex.noun);
+    let q = vec![lex.q_word, target];
+    let mut passage = sentence(lex, rng, 14);
+    let cue = if label == 1 { *rng.choose(&lex.pos) } else { *rng.choose(&lex.neg) };
+    let at = rng.below(passage.len() as u64 - 1) as usize;
+    passage.insert(at, target);
+    passage.insert(at + 1, cue);
+    (q, Some(passage), label)
+}
+
+/// COPA analog: verbs come in (cause, effect) pairs; the alternative is
+/// plausible iff its effect verb matches the premise's cause verb.
+fn gen_copa(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let k = rng.below(lex.vcause.len() as u64) as usize;
+    let mut prem = sentence(lex, rng, 6);
+    prem.insert(rng.below(prem.len() as u64) as usize, lex.vcause[k]);
+    let effect = if label == 1 {
+        lex.veffect[k]
+    } else {
+        let mut j = rng.below(lex.veffect.len() as u64) as usize;
+        if j == k {
+            j = (j + 1) % lex.veffect.len();
+        }
+        lex.veffect[j]
+    };
+    let mut alt = sentence(lex, rng, 5);
+    alt.insert(rng.below(alt.len() as u64) as usize, effect);
+    (prem, Some(alt), label)
+}
+
+/// MultiRC analog: (passage+question, answer) — answer correct iff its
+/// noun occurs in the passage.
+fn gen_multirc(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let facts: Vec<i32> = (0..5).map(|_| *rng.choose(&lex.noun)).collect();
+    let mut passage = sentence(lex, rng, 12);
+    for &f in &facts {
+        passage.insert(rng.below(passage.len() as u64) as usize, f);
+    }
+    passage.push(lex.q_word);
+    let ans = if label == 1 {
+        *rng.choose(&facts)
+    } else {
+        *rng.choose(&lex.noun)
+    };
+    (passage, Some(vec![ans]), label)
+}
+
+/// WiC analog: the polysemous word appears in two contexts; same sense iff
+/// both contexts draw from the same sense cluster.
+fn gen_wic(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let w = rng.below(lex.sense_word.len() as u64) as usize;
+    let word = lex.sense_word[w];
+    let sense1 = rng.below(2) as usize;
+    let sense2 = if label == 1 { sense1 } else { 1 - sense1 };
+    let ctx = |sense: usize, rng: &mut Pcg64| -> Vec<i32> {
+        let cluster = if sense == 0 { &lex.sense_ctx_a[w] } else { &lex.sense_ctx_b[w] };
+        let mut s = sentence(lex, rng, 5);
+        s.insert(rng.below(s.len() as u64) as usize, word);
+        for _ in 0..2 {
+            s.insert(rng.below(s.len() as u64) as usize, *rng.choose(cluster));
+        }
+        s
+    };
+    let s1 = ctx(sense1, rng);
+    let s2 = ctx(sense2, rng);
+    (s1, Some(s2), label)
+}
+
+/// WSC analog: pronoun resolution by gender-cluster agreement: label 1 iff
+/// the pronoun's gender matches the *first* name in the sentence.
+fn gen_wsc(lex: &Lexicon, rng: &mut Pcg64) -> (Vec<i32>, Option<Vec<i32>>, i64) {
+    let label = rng.below(2) as i64;
+    let first_is_m = rng.bool(0.5);
+    let (first, second) = if first_is_m {
+        (*rng.choose(&lex.name_m), *rng.choose(&lex.name_f))
+    } else {
+        (*rng.choose(&lex.name_f), *rng.choose(&lex.name_m))
+    };
+    let pron_matches_first = label == 1;
+    let pron = match (first_is_m, pron_matches_first) {
+        (true, true) | (false, false) => lex.pron_m,
+        _ => lex.pron_f,
+    };
+    let mut s = vec![first];
+    s.extend(sentence(lex, rng, 3));
+    s.push(second);
+    s.extend(sentence(lex, rng, 2));
+    s.push(pron);
+    s.extend(sentence(lex, rng, 2));
+    (s, None, label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex() -> Lexicon {
+        Lexicon::generate(0)
+    }
+
+    #[test]
+    fn all_tasks_generate() {
+        let lex = lex();
+        for name in GLUE_TASKS.iter().chain(SUPERGLUE_TASKS.iter()) {
+            let t = make_task(&lex, name, 1, 40, 10, 64).unwrap();
+            assert_eq!(t.train.len(), 40, "{name}");
+            assert_eq!(t.dev.len(), 10, "{name}");
+            for ex in t.train.iter().chain(&t.dev) {
+                assert_eq!(ex.ids.len(), 64, "{name}");
+                assert_eq!(ex.mask.len(), 64, "{name}");
+                assert!((ex.label as usize) < t.classes, "{name}: label {}", ex.label);
+                for &id in &ex.ids {
+                    assert!((id as usize) < lex.vocab_size(), "{name}: id {id}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let lex = lex();
+        for name in ["sst2", "rte", "wic", "wsc", "copa", "boolq"] {
+            let t = make_task(&lex, name, 2, 400, 0, 64).unwrap();
+            let ones = t.train.iter().filter(|e| e.label == 1.0).count();
+            assert!(
+                (120..280).contains(&ones),
+                "{name}: {ones}/400 positive"
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let lex = lex();
+        let a = make_task(&lex, "sst2", 7, 20, 5, 32).unwrap();
+        let b = make_task(&lex, "sst2", 7, 20, 5, 32).unwrap();
+        for (x, y) in a.train.iter().zip(&b.train) {
+            assert_eq!(x.ids, y.ids);
+            assert_eq!(x.label, y.label);
+        }
+        let c = make_task(&lex, "sst2", 8, 20, 5, 32).unwrap();
+        assert!(a.train.iter().zip(&c.train).any(|(x, y)| x.ids != y.ids));
+    }
+
+    #[test]
+    fn sst2_cues_predict_labels() {
+        // A trivial cue-counting classifier must get >90% on sst2 — the
+        // task is learnable from token identity alone (AoT's regime).
+        let lex = lex();
+        let t = make_task(&lex, "sst2", 3, 500, 0, 64).unwrap();
+        let mut correct = 0;
+        for ex in &t.train {
+            let pos = ex.ids.iter().filter(|i| lex.pos.contains(i)).count();
+            let neg = ex.ids.iter().filter(|i| lex.neg.contains(i)).count();
+            let pred = if pos > neg { 1.0 } else { 0.0 };
+            if pred == ex.label {
+                correct += 1;
+            }
+        }
+        assert!(correct > 450, "cue classifier got {correct}/500");
+    }
+
+    #[test]
+    fn metrics_dispatch() {
+        assert_eq!(task_metric("cola"), Metric::Matthews);
+        assert_eq!(task_metric("stsb"), Metric::PearsonSpearman);
+        assert_eq!(task_metric("mrpc"), Metric::AccF1);
+        assert_eq!(task_metric("rte"), Metric::Accuracy);
+        assert_eq!(task_classes("mnli"), 3);
+        assert_eq!(task_classes("wsc"), 2);
+    }
+
+    #[test]
+    fn cue_tokens_nonempty_for_analysis_tasks() {
+        let lex = lex();
+        for name in ["wsc", "copa", "rte", "cb", "wic", "sst2"] {
+            assert!(!cue_tokens(&lex, name).is_empty(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §7).
+//!
+//! `aotpt exp <id> [--scale smoke|quick|full]` runs one; results are
+//! printed as tables and written to `results/<id>.json`.
+
+pub mod norms;
+pub mod quality;
+pub mod speed;
+
+use std::path::PathBuf;
+
+use crate::json::{self, Json};
+use crate::Result;
+
+/// Where experiment outputs land.
+pub fn results_dir() -> PathBuf {
+    let dir = crate::repo_root().join("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+pub fn write_result(id: &str, value: &Json) -> Result<()> {
+    let path = results_dir().join(format!("{id}.json"));
+    json::save(&path, value)?;
+    crate::info!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Table 1: the method property matrix, straight from the live registry
+/// (and cross-checked against the manifest's copy).
+pub fn table1(manifest: &crate::config::Manifest) -> Result<String> {
+    let table = crate::peft::Method::table1();
+    // Cross-check vs manifest (authored independently in python).
+    for m in crate::peft::Method::ALL {
+        if let Some(&(pe, zc, mt)) = manifest.method_properties.get(m.name()) {
+            anyhow::ensure!(
+                (pe, zc, mt) == (m.parameter_efficient(), m.zero_cost(), m.multi_task()),
+                "manifest/registry disagree on {}",
+                m.name()
+            );
+        }
+    }
+    let mut json = Json::obj();
+    for m in crate::peft::Method::ALL {
+        json.set(
+            m.name(),
+            Json::from_pairs(vec![
+                ("parameter_efficient", Json::Bool(m.parameter_efficient())),
+                ("zero_cost", Json::Bool(m.zero_cost())),
+                ("multi_task", Json::Bool(m.multi_task())),
+            ]),
+        );
+    }
+    write_result("table1", &json)?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn results_dir_exists() {
+        assert!(super::results_dir().is_dir());
+    }
+}

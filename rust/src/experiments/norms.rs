@@ -1,0 +1,85 @@
+//! Appendix Tables 7–10 (paper §4.3): train FC AoT P-Tuning on WSC, COPA,
+//! CB and RTE, fuse `P`, and list the tokens with the largest per-layer
+//! row norms.  Our synthetic tasks make this quantitative: the generators'
+//! cue tokens are known, so we also report cue recall among the top rows.
+
+use std::sync::Arc;
+
+use crate::analyze;
+use crate::config::Manifest;
+use crate::data::{self, Lexicon};
+use crate::json::Json;
+use crate::peft::fuse;
+use crate::runtime::{Runtime, WeightCache};
+use crate::train::{grid, TrainConfig, Trainer};
+use crate::Result;
+
+pub const TASKS: [&str; 4] = ["wsc", "copa", "cb", "rte"];
+
+pub struct NormResult {
+    pub task: String,
+    pub table: String,
+    pub cue_recall: f64,
+    pub best_metric: f64,
+}
+
+pub fn run(
+    runtime: &Arc<Runtime>,
+    manifest: &Manifest,
+    model: &str,
+    quick: bool,
+) -> Result<Vec<NormResult>> {
+    let lex = Lexicon::generate(0);
+    let weights = Arc::new(WeightCache::from_ckpt(
+        runtime,
+        &manifest.dir.join(format!("backbone_{model}.aotckpt")),
+    )?);
+    let emb = weights.host("emb_tok")?.clone();
+    let mut out = Vec::new();
+    let mut json = Json::obj();
+
+    for task_name in TASKS {
+        let classes = data::tasks::task_classes(task_name);
+        let (n_train, steps) = if quick { (384, 192) } else { (1024, 0) };
+        let task = data::make_task(&lex, task_name, 77, n_train, 192, 64)?;
+        let assignments = grid::assignments_for(manifest, model, "aot-fc", classes, &[5e-3]);
+        let Some(a) = assignments.first() else {
+            anyhow::bail!("no aot-fc artifacts for {model} classes={classes}");
+        };
+        let trainer = Trainer::new(runtime, manifest, Arc::clone(&weights), &a.train_stem, &a.eval_stem)?;
+        let result = trainer.run(
+            &task,
+            &TrainConfig { lr: a.lr, seed: 0, max_epochs: 8, patience: 3, max_steps: steps },
+        )?;
+        // Fuse the best state into a dense table (Equation 3).
+        let p = fuse::fuse_fc(&emb, &result.best_state)?;
+        let layers: Vec<usize> = (0..p.layers).collect();
+        let table = analyze::norm_table(&p, &lex, &layers, 12);
+        // cue recall averaged over layers
+        let recall: f64 = layers
+            .iter()
+            .map(|&l| analyze::cue_recall_at(&p, l, 25, &task.cue_tokens))
+            .sum::<f64>()
+            / layers.len() as f64;
+        crate::info!(
+            "{task_name}: metric {:.3}, cue recall@25 {:.2}",
+            result.best_metric,
+            recall
+        );
+        json.set(
+            task_name,
+            Json::from_pairs(vec![
+                ("metric", Json::Num(result.best_metric)),
+                ("cue_recall_at25", Json::Num(recall)),
+            ]),
+        );
+        out.push(NormResult {
+            task: task_name.to_string(),
+            table,
+            cue_recall: recall,
+            best_metric: result.best_metric,
+        });
+    }
+    super::write_result("norms", &json)?;
+    Ok(out)
+}

@@ -1,0 +1,239 @@
+//! Tables 2 / Appendix Table 3 (per-task quality), Figure 2 (macro vs
+//! rank/prefix), Figures 4–7 (param-count + EVP curves).
+//!
+//! One machinery serves all of them: the grid search produces
+//! (assignment × seed) scores per (task, method); the table reports the
+//! best assignment's median ± std; the figures are re-slices of the same
+//! score pool.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::{Manifest, Scale};
+use crate::data::{self, Lexicon};
+use crate::json::Json;
+use crate::runtime::{Runtime, WeightCache};
+use crate::train::{evp, grid, GridSearch, TrainConfig};
+use crate::util::stats;
+use crate::Result;
+
+pub const METHODS: [&str; 8] =
+    ["fine-tune", "bitfit", "lora", "adapters", "pt1", "pt2", "aot-kron", "aot-fc"];
+
+/// Scaled protocol knobs (the paper's full grid is `Scale::Full`).
+pub struct Protocol {
+    pub model: String,
+    pub tasks: Vec<String>,
+    pub methods: Vec<String>,
+    pub lrs: Vec<f32>,
+    pub seeds: Vec<u64>,
+    pub n_train: usize,
+    pub n_dev: usize,
+    pub max_epochs: usize,
+    pub patience: usize,
+    pub max_steps: usize,
+}
+
+impl Protocol {
+    pub fn for_scale(scale: Scale, suite: &[&str]) -> Protocol {
+        let tasks: Vec<String> = suite.iter().map(|s| s.to_string()).collect();
+        match scale {
+            Scale::Smoke => Protocol {
+                model: "tiny".into(),
+                tasks: tasks.into_iter().take(2).collect(),
+                methods: vec!["bitfit".into(), "aot-fc".into()],
+                lrs: vec![5e-3],
+                seeds: vec![0],
+                n_train: 128,
+                n_dev: 64,
+                max_epochs: 3,
+                patience: 2,
+                max_steps: 48,
+            },
+            Scale::Quick => Protocol {
+                model: "tiny".into(),
+                tasks,
+                methods: METHODS.iter().map(|s| s.to_string()).collect(),
+                lrs: vec![5e-3],
+                seeds: vec![0, 1],
+                n_train: 384,
+                n_dev: 192,
+                max_epochs: 6,
+                patience: 3,
+                max_steps: 192,
+            },
+            Scale::Full => Protocol {
+                // The paper's Appendix Table 4 grid, at `small` scale.
+                model: "small".into(),
+                tasks,
+                methods: METHODS.iter().map(|s| s.to_string()).collect(),
+                lrs: vec![1e-4, 5e-4, 1e-3, 5e-3],
+                seeds: vec![0, 1, 2, 3, 4],
+                n_train: 2048,
+                n_dev: 512,
+                max_epochs: 30,
+                patience: 8,
+                max_steps: 0,
+            },
+        }
+    }
+}
+
+/// (task, method) -> (best assignment label, median, std, all scores).
+pub type QualityResults = BTreeMap<String, BTreeMap<String, (String, f64, f64, Vec<f64>)>>;
+
+pub fn run_suite(
+    runtime: &Arc<Runtime>,
+    manifest: &Manifest,
+    protocol: &Protocol,
+) -> Result<QualityResults> {
+    let lex = Lexicon::generate(0);
+    let weights = Arc::new(WeightCache::from_ckpt(
+        runtime,
+        &manifest.dir.join(format!("backbone_{}.aotckpt", protocol.model)),
+    )?);
+    let seq = 64; // the training artifacts' bucket
+    let mut results: QualityResults = BTreeMap::new();
+
+    for task_name in &protocol.tasks {
+        let classes = data::tasks::task_classes(task_name);
+        let task = data::make_task(&lex, task_name, 1234, protocol.n_train, protocol.n_dev, seq)?;
+        for method in &protocol.methods {
+            let assignments =
+                grid::assignments_for(manifest, &protocol.model, method, classes, &protocol.lrs);
+            if assignments.is_empty() {
+                crate::warnln!(
+                    "no {} artifacts for {} classes={classes}; skipping",
+                    method,
+                    protocol.model
+                );
+                continue;
+            }
+            let search = GridSearch {
+                runtime,
+                manifest,
+                weights: Arc::clone(&weights),
+                assignments,
+                seeds: protocol.seeds.clone(),
+                train_cfg: TrainConfig {
+                    lr: 0.0,
+                    seed: 0,
+                    max_epochs: protocol.max_epochs,
+                    patience: protocol.patience,
+                    max_steps: protocol.max_steps,
+                },
+            };
+            let gr = search.run(&task)?;
+            let (label, median, std) = gr
+                .best()
+                .ok_or_else(|| anyhow::anyhow!("no runs for {task_name}/{method}"))?;
+            crate::info!("{task_name}/{method}: best {label} median {median:.4} ± {std:.4}");
+            results
+                .entry(task_name.clone())
+                .or_default()
+                .insert(method.clone(), (label, median, std, gr.all_scores()));
+        }
+    }
+    Ok(results)
+}
+
+/// Render the Table-2-style report (per task + macro column) and persist.
+pub fn report(id: &str, results: &QualityResults) -> Result<String> {
+    let tasks: Vec<&String> = results.keys().collect();
+    let mut methods: Vec<String> = Vec::new();
+    for per in results.values() {
+        for m in per.keys() {
+            if !methods.contains(m) {
+                methods.push(m.clone());
+            }
+        }
+    }
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+    for method in &methods {
+        let mut row = vec![method.clone()];
+        let mut scores = Vec::new();
+        let mut jm = Json::obj();
+        for task in &tasks {
+            match results[*task].get(method) {
+                Some((label, median, std, _)) => {
+                    row.push(format!("{:.1}±{:.1}", median * 100.0, std * 100.0));
+                    scores.push(*median);
+                    jm.set(
+                        task,
+                        Json::from_pairs(vec![
+                            ("median", Json::Num(*median)),
+                            ("std", Json::Num(*std)),
+                            ("assignment", Json::Str(label.clone())),
+                        ]),
+                    );
+                }
+                None => row.push("-".into()),
+            }
+        }
+        let macro_score = stats::mean(&scores);
+        row.push(format!("{:.1}", macro_score * 100.0));
+        jm.set("macro", Json::Num(macro_score));
+        json.set(method, jm);
+        rows.push(row);
+    }
+    super::write_result(id, &json)?;
+    let mut headers: Vec<&str> = vec!["method"];
+    for t in &tasks {
+        headers.push(t);
+    }
+    headers.push("macro");
+    Ok(crate::bench::render_table(&headers, &rows))
+}
+
+/// Figure 5/7 analog: EVP curves per (task, method) from the score pools.
+pub fn evp_report(id: &str, results: &QualityResults, max_budget: usize) -> Result<String> {
+    let mut out = String::new();
+    let mut json = Json::obj();
+    for (task, per_method) in results {
+        let mut jt = Json::obj();
+        for (method, (_, _, _, scores)) in per_method {
+            if scores.len() < 2 {
+                continue;
+            }
+            let curve = evp::evp_curve(scores, max_budget.min(scores.len() * 4));
+            let tail = curve.last().map(|&(_, v)| v).unwrap_or(0.0);
+            out.push_str(&format!(
+                "{task}/{method}: EVP(1)={:.3} EVP({})={:.3}\n",
+                curve[0].1,
+                curve.len(),
+                tail
+            ));
+            jt.set(
+                method,
+                Json::Arr(curve.into_iter().map(|(_, v)| Json::Num(v)).collect()),
+            );
+        }
+        json.set(task, jt);
+    }
+    super::write_result(id, &json)?;
+    Ok(out)
+}
+
+/// Figure 2/4/6 analog: score vs hyperparameter (rank/prefix) per method,
+/// read out of the per-assignment labels.
+pub fn sweep_report(id: &str, results: &QualityResults) -> Result<String> {
+    // group scores by assignment label across tasks
+    let mut per_label: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for per_method in results.values() {
+        for (method, (label, median, _, _)) in per_method {
+            per_label
+                .entry(format!("{method}:{label}"))
+                .or_default()
+                .push(*median);
+        }
+    }
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+    for (label, scores) in &per_label {
+        rows.push(vec![label.clone(), format!("{:.3}", stats::mean(scores))]);
+        json.set(label, Json::Num(stats::mean(scores)));
+    }
+    super::write_result(id, &json)?;
+    Ok(crate::bench::render_table(&["assignment", "mean best score"], &rows))
+}

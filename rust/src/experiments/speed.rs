@@ -1,0 +1,144 @@
+//! Figures 3 / 8 / 9: inference-speed overhead of every method,
+//! normalized by the vanilla fine-tuned model (paper §4.4).
+//!
+//! Protocol mirror: mean inference time over repeated executions (300 at
+//! batch 1, 100 otherwise — wall-clock-capped per cell on this one-core
+//! testbed; the per-cell iteration count is recorded in the output).
+//! All methods share the identical backbone math (same jnp graph per
+//! bucket), so the measured deltas isolate exactly what the paper
+//! isolates: longer sequences (pt1/pt2), extra matmuls (lora/adapters/
+//! aot-unfused), bias adds (bitfit/aot).
+
+use std::sync::Arc;
+
+use crate::bench::{measure, BenchConfig, Measurement};
+use crate::config::Manifest;
+use crate::json::Json;
+use crate::runtime::{Runtime, WeightCache};
+use crate::tensor::{DType, Tensor};
+use crate::util::Pcg64;
+use crate::Result;
+
+pub const METHODS: [&str; 8] =
+    ["fine-tune", "bitfit", "lora", "adapters", "pt1", "pt2", "aot", "aot-unfused"];
+
+/// One grid cell result.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub model: String,
+    pub method: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub measurement: Measurement,
+    /// time / fine-tune time for the same (model, batch, seq).
+    pub ratio: f64,
+}
+
+/// Run the speed grid for one model over (batch, seq) cells.
+pub fn run_grid(
+    runtime: &Arc<Runtime>,
+    manifest: &Manifest,
+    model: &str,
+    cells: &[(usize, usize)],
+    budget_secs: f64,
+) -> Result<Vec<Cell>> {
+    let weights = WeightCache::from_ckpt(
+        runtime,
+        &manifest.dir.join(format!("backbone_{model}.aotckpt")),
+    )?;
+    let mut out = Vec::new();
+    for &(batch, seq) in cells {
+        let mut base_mean = None;
+        for method in METHODS {
+            let Ok(spec) = manifest.find_bucket("fwd", model, method, batch, seq) else {
+                continue;
+            };
+            let exe = runtime.load(manifest, &spec.stem)?;
+            // Upload every per-call input once; iterate pure execute —
+            // the paper times model evaluation, not host transfers.
+            let mut rng = Pcg64::new(42);
+            let mut uploads = Vec::new();
+            for input in &exe.spec.inputs {
+                if input.name.starts_with("w.") {
+                    uploads.push(None);
+                    continue;
+                }
+                let t = if input.name == "in.mask" {
+                    Tensor::from_f32(&input.shape, vec![1.0; input.numel()])
+                } else {
+                    random_input(&mut rng, input.dtype, &input.shape, manifest.vocab_size)
+                };
+                uploads.push(Some(exe.upload(&t)?));
+            }
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+            for (input, upload) in exe.spec.inputs.iter().zip(&uploads) {
+                match upload {
+                    Some(b) => args.push(b),
+                    None => args.push(weights.buffer(input.name.strip_prefix("w.").unwrap())?),
+                }
+            }
+            let cfg = BenchConfig::paper(batch, budget_secs);
+            let name = format!("{model}/{method}/b{batch}n{seq}");
+            let m = measure(&name, &cfg, || {
+                exe.run_buffers(&args).expect("execute");
+            });
+            if method == "fine-tune" {
+                base_mean = Some(m.mean_secs);
+            }
+            let ratio = m.mean_secs / base_mean.unwrap_or(m.mean_secs);
+            crate::info!("{name}: {:.3}ms ({} iters) ratio {:.3}", m.mean_secs * 1e3, m.iters, ratio);
+            out.push(Cell {
+                model: model.to_string(),
+                method: method.to_string(),
+                batch,
+                seq,
+                measurement: m,
+                ratio,
+            });
+        }
+    }
+    Ok(out)
+}
+
+fn random_input(rng: &mut Pcg64, dtype: DType, shape: &[usize], vocab: usize) -> Tensor {
+    let numel: usize = shape.iter().product();
+    match dtype {
+        DType::I32 => Tensor::from_i32(
+            shape,
+            (0..numel).map(|_| rng.range(5, vocab as i64) as i32).collect(),
+        ),
+        _ => {
+            // mask-like inputs should be 1.0; generic inputs small-random.
+            Tensor::from_f32(shape, (0..numel).map(|_| rng.f32() * 0.1).collect())
+        }
+    }
+}
+
+/// Render + serialize a set of cells as one figure's result.
+pub fn report(id: &str, cells: &[Cell]) -> Result<String> {
+    let mut rows = Vec::new();
+    let mut json_rows = Json::Arr(vec![]);
+    for c in cells {
+        rows.push(vec![
+            c.model.clone(),
+            format!("b{}", c.batch),
+            format!("n{}", c.seq),
+            c.method.clone(),
+            format!("{:.3}", c.measurement.mean_secs * 1e3),
+            format!("{:.3}", c.ratio),
+            format!("{}", c.measurement.iters),
+        ]);
+        let mut j = c.measurement.to_json();
+        j.set("model", Json::Str(c.model.clone()));
+        j.set("method", Json::Str(c.method.clone()));
+        j.set("batch", Json::Num(c.batch as f64));
+        j.set("seq", Json::Num(c.seq as f64));
+        j.set("ratio", Json::Num(c.ratio));
+        json_rows.push(j);
+    }
+    super::write_result(id, &json_rows)?;
+    Ok(crate::bench::render_table(
+        &["model", "batch", "seq", "method", "mean ms", "ratio vs FT", "iters"],
+        &rows,
+    ))
+}

@@ -1,0 +1,58 @@
+//! # aotpt — Ahead-of-Time P-Tuning
+//!
+//! A three-layer reproduction of *Ahead-of-Time P-Tuning* (Gavrilov &
+//! Balagansky, 2023): a multi-task, zero-inference-overhead
+//! parameter-efficient fine-tuning framework.
+//!
+//! * **L1/L2** live in `python/compile/` (Pallas kernels + JAX model), run
+//!   once at build time, and are lowered to HLO-text artifacts.
+//! * **L3** is this crate: a Rust coordinator that serves many fine-tuned
+//!   tasks from a single backbone executable (fused per-task `P` matrices
+//!   resident in host RAM, ahead-of-time row gather on the request path)
+//!   and a training driver that reproduces the paper's experimental
+//!   protocol by executing AOT train-step computations.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod analyze;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod json;
+pub mod model;
+pub mod peft;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the repository, resolved at runtime.
+///
+/// Looks for `AOTPT_ROOT` first, then walks up from the current directory
+/// until a directory containing `artifacts/` or `Cargo.toml` is found.
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(root) = std::env::var("AOTPT_ROOT") {
+        return std::path::PathBuf::from(root);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() || dir.join("artifacts").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from(".");
+        }
+    }
+}
+
+/// Path to the artifacts directory (AOT-compiled HLO text + manifest).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_root().join("artifacts")
+}

@@ -1,0 +1,161 @@
+//! `aotpt` — the launcher.
+//!
+//! Subcommands:
+//!   table1                         print the method property matrix
+//!   exp <id>                       run one experiment (fig3|fig8|fig9|
+//!                                  table2|table5|norms)
+//!   info                           manifest / model inventory
+
+use std::sync::Arc;
+
+use aotpt::cli::Args;
+use aotpt::config::{Manifest, Scale};
+use aotpt::experiments::{norms, quality, speed, table1};
+use aotpt::runtime::Runtime;
+use aotpt::Result;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::new(
+        "aotpt",
+        "Ahead-of-Time P-Tuning: multi-task PEFT serving + training framework",
+    )
+    .opt("scale", Some("quick"), "experiment scale: smoke|quick|full")
+    .opt("model", None, "override model shape")
+    .opt("budget", Some("8"), "per-cell bench budget seconds (speed figures)")
+    .flag("verbose", "debug logging")
+    .parse(argv)
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    if args.has("verbose") {
+        aotpt::util::log::set_level(aotpt::util::log::Level::Debug);
+    }
+
+    let manifest = Manifest::load(&aotpt::artifacts_dir())?;
+    let positional = args.positional().to_vec();
+    let command = positional.first().map(String::as_str).unwrap_or("info");
+
+    match command {
+        "info" => {
+            println!("artifacts: {}", manifest.artifacts().count());
+            println!("vocab: {}", manifest.vocab_size);
+            for (name, m) in &manifest.models {
+                let analog = manifest
+                    .paper_analog
+                    .get(name)
+                    .map(|s| format!(" (~{s})"))
+                    .unwrap_or_default();
+                println!(
+                    "  {name}: d={} l={} heads={} params={:.1}M{analog}",
+                    m.d_model,
+                    m.n_layers,
+                    m.n_heads,
+                    m.params as f64 / 1e6
+                );
+            }
+        }
+        "table1" => {
+            println!("{}", table1(&manifest)?);
+        }
+        "exp" => {
+            let id = positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: aotpt exp <id>"))?;
+            let scale = Scale::parse(&args.get("scale").unwrap())?;
+            let runtime = Runtime::new()?;
+            run_experiment(&runtime, &manifest, id, scale, &args)?;
+        }
+        other => anyhow::bail!("unknown command {other} (info|table1|exp)"),
+    }
+    Ok(())
+}
+
+fn run_experiment(
+    runtime: &Arc<Runtime>,
+    manifest: &Manifest,
+    id: &str,
+    scale: Scale,
+    args: &Args,
+) -> Result<()> {
+    let budget = args.get_f64("budget").map_err(|e| anyhow::anyhow!("{e}"))?;
+    match id {
+        "table1" => println!("{}", table1(manifest)?),
+        // ---- speed figures (paper §4.4) -----------------------------------
+        "fig3" => {
+            // Fig 3: DeBERTa-XL analog (`large`), seq 384, batches 1/16/64.
+            let model = args.get("model").unwrap_or_else(|| "large".into());
+            let cells: Vec<(usize, usize)> = match scale {
+                Scale::Smoke => vec![(1, 384)],
+                Scale::Quick => vec![(1, 384), (16, 384)],
+                Scale::Full => vec![(1, 384), (16, 384), (64, 384)],
+            };
+            let cells = speed::run_grid(runtime, manifest, &model, &cells, budget)?;
+            println!("{}", speed::report("fig3", &cells)?);
+        }
+        "fig8" => {
+            // Appendix Fig 8: all backbones at seq 384.
+            let mut all = Vec::new();
+            for model in ["small", "base", "large"] {
+                let cells: Vec<(usize, usize)> = match scale {
+                    Scale::Smoke => vec![(1, 384)],
+                    Scale::Quick => vec![(1, 384), (16, 384)],
+                    Scale::Full => vec![(1, 384), (16, 384), (64, 384)],
+                };
+                all.extend(speed::run_grid(runtime, manifest, model, &cells, budget)?);
+            }
+            println!("{}", speed::report("fig8", &all)?);
+        }
+        "fig9" => {
+            // Appendix Fig 9: short sequences (16, 64).
+            let mut all = Vec::new();
+            for model in ["small", "base", "large"] {
+                let cells: Vec<(usize, usize)> = match scale {
+                    Scale::Smoke => vec![(1, 16)],
+                    Scale::Quick => vec![(1, 16), (1, 64), (16, 64)],
+                    Scale::Full => {
+                        vec![(1, 16), (1, 64), (16, 16), (16, 64), (64, 16), (64, 64)]
+                    }
+                };
+                all.extend(speed::run_grid(runtime, manifest, model, &cells, budget)?);
+            }
+            println!("{}", speed::report("fig9", &all)?);
+        }
+        // ---- quality tables + derived figures -----------------------------
+        "table2" => {
+            let protocol = quality::Protocol::for_scale(scale, &aotpt::data::SUPERGLUE_TASKS);
+            let results = quality::run_suite(runtime, manifest, &protocol)?;
+            println!("{}", quality::report("table2", &results)?);
+            println!("{}", quality::evp_report("evp_superglue", &results, 64)?);
+            println!("{}", quality::sweep_report("fig2", &results)?);
+        }
+        "table5" => {
+            let protocol = quality::Protocol::for_scale(scale, &aotpt::data::GLUE_TASKS);
+            let results = quality::run_suite(runtime, manifest, &protocol)?;
+            println!("{}", quality::report("table5", &results)?);
+            println!("{}", quality::evp_report("evp_glue", &results, 64)?);
+            println!("{}", quality::sweep_report("fig4_6", &results)?);
+        }
+        // ---- analysis ------------------------------------------------------
+        "norms" => {
+            let model = args.get("model").unwrap_or_else(|| "tiny".into());
+            let results = norms::run(runtime, manifest, &model, scale != Scale::Full)?;
+            for r in results {
+                println!(
+                    "== {} (dev metric {:.3}, cue recall@25 {:.2}) ==\n{}",
+                    r.task, r.best_metric, r.cue_recall, r.table
+                );
+            }
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other} (table1|fig3|fig8|fig9|table2|table5|norms)"
+        ),
+    }
+    Ok(())
+}

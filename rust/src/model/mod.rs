@@ -1,0 +1,142 @@
+//! Analytic performance models for the backbone shapes: per-method FLOPs
+//! (used to sanity-check the measured Figure 3 overheads and to fill grid
+//! cells that are too slow to time on one CPU core) and the TPU VMEM/MXU
+//! roofline estimates for the Pallas kernels (DESIGN.md §9, L1).
+
+pub mod roofline;
+
+use crate::config::ModelInfo;
+
+/// FLOPs of one dense forward pass (multiply-accumulate = 2 FLOPs).
+///
+/// Per token, per layer: QKVO projections `4·2·d²`, attention scores +
+/// weighted sum `2·2·n·d`, FFN `2·2·d·ff`.  Embedding lookups are free;
+/// the classification head is negligible.
+pub fn forward_flops(m: &ModelInfo, batch: usize, seq: usize) -> f64 {
+    flops_with_seq(m, batch, seq, seq)
+}
+
+fn flops_with_seq(m: &ModelInfo, batch: usize, seq_q: usize, seq_kv: usize) -> f64 {
+    let d = m.d_model as f64;
+    let ff = m.d_ff as f64;
+    let l = m.n_layers as f64;
+    let b = batch as f64;
+    let nq = seq_q as f64;
+    let nk = seq_kv as f64;
+    let proj = 4.0 * 2.0 * nq * d * d;
+    let attn = 2.0 * 2.0 * nq * nk * d;
+    let ffn = 2.0 * 2.0 * nq * d * ff;
+    b * l * (proj + attn + ffn)
+}
+
+/// Analytic per-method inference FLOPs, mirroring the causes of overhead
+/// the paper names in §4.4:
+/// * pt1/pt2 lengthen the (key) sequence by `prefix`;
+/// * unfused LoRA adds 4 low-rank matmul pairs per layer;
+/// * Adapters add 2 bottleneck MLPs per layer;
+/// * AoT (fused) and BitFit add only vector adds — `O(n·d)`;
+/// * AoT unfused recomputes P rows through the FC reparametrization.
+pub fn method_flops(
+    m: &ModelInfo,
+    method: &str,
+    batch: usize,
+    seq: usize,
+    rank: usize,
+    prefix: usize,
+) -> f64 {
+    let d = m.d_model as f64;
+    let l = m.n_layers as f64;
+    let b = batch as f64;
+    let n = seq as f64;
+    let r = rank as f64;
+    let base = forward_flops(m, batch, seq);
+    match method {
+        "fine-tune" | "lora-fused" => base,
+        "bitfit" => base + b * l * n * d * 6.0, // per-element bias adds
+        "aot" => base + b * l * n * d,          // ONE add per layer (Eq. 1)
+        "aot-unfused" => {
+            // gelu(E[ids]·W1 + b1)·W2 + b2 per layer: two [n,d]x[d,r] matmuls
+            base + b * l * (2.0 * n * d * r * 2.0) + b * l * n * d
+        }
+        "lora" => base + b * l * 4.0 * (2.0 * n * d * r) * 2.0,
+        "adapters" => base + b * l * 2.0 * (2.0 * n * d * r) * 2.0,
+        "pt1" => flops_with_seq(m, batch, seq + prefix, seq + prefix),
+        "pt2" => {
+            // queries stay n, keys/values grow by prefix in every layer
+            let extra_attn = 2.0 * 2.0 * n * (prefix as f64) * d;
+            base + b * l * extra_attn
+        }
+        _ => base,
+    }
+}
+
+/// Predicted Figure-3 ratio (method time / fine-tune time) from the FLOPs
+/// model alone.  Measured ratios should land within ~±10% of this for
+/// compute-bound cells.
+pub fn predicted_overhead(
+    m: &ModelInfo,
+    method: &str,
+    batch: usize,
+    seq: usize,
+    rank: usize,
+    prefix: usize,
+) -> f64 {
+    method_flops(m, method, batch, seq, rank, prefix) / forward_flops(m, batch, seq)
+}
+
+/// Host-RAM bytes of one task's fused P (paper §3.3: "roughly 2.4 GB" for
+/// RoBERTa-Large at half precision; we store f32).
+pub fn fused_p_bytes(m: &ModelInfo) -> usize {
+    m.n_layers * m.vocab_size * m.d_model * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelInfo;
+
+    fn small() -> ModelInfo {
+        ModelInfo {
+            name: "small".into(),
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            vocab_size: 8192,
+            max_positions: 512,
+            params: 1_800_000,
+            kron_a: 91,
+            kron_b: 91,
+        }
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_batch() {
+        let m = small();
+        let f1 = forward_flops(&m, 1, 64);
+        let f4 = forward_flops(&m, 4, 64);
+        assert!((f4 / f1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_ordering_of_overheads() {
+        // The qualitative Figure 3 ordering must hold analytically:
+        // aot ≈ bitfit ≈ 1 < pt2 < lora, and pt1 > 1.
+        let m = small();
+        let ov = |method: &str| predicted_overhead(&m, method, 16, 128, 16, 20);
+        assert!(ov("aot") < 1.01);
+        assert!(ov("bitfit") < 1.02);
+        assert!(ov("pt2") > 1.01);
+        assert!(ov("pt1") > ov("pt2") * 0.99); // pt1 also lengthens queries
+        assert!(ov("lora") > ov("aot"));
+        assert!(ov("adapters") > ov("aot"));
+        assert!(ov("aot-unfused") > ov("aot"));
+    }
+
+    #[test]
+    fn fused_p_ram_matches_paper_scale() {
+        // RoBERTa-Large analog check: |V|·d·l·4 bytes.
+        let m = small();
+        assert_eq!(fused_p_bytes(&m), 8192 * 128 * 4 * 4);
+    }
+}

@@ -1,0 +1,112 @@
+//! TPU roofline estimates for the L1 kernels (mirrors the analytic models
+//! in `python/compile/kernels/*.py`; interpret-mode wallclock is not a TPU
+//! proxy, so structure is what we optimize and report).
+
+/// VMEM budget of one TPU core (v4-class).
+pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+/// MXU systolic array dimension.
+pub const MXU: usize = 128;
+/// Assumed HBM bandwidth (bytes/s) for roofline ratios (v4-class, ~1.2 TB/s).
+pub const HBM_BPS: f64 = 1.2e12;
+/// Assumed peak bf16 MACs/s of one core (~275 TFLOP/s => 137e12 MACs).
+pub const PEAK_MACS: f64 = 137.5e12;
+
+/// VMEM footprint of one aot_bias program instance (f32).
+pub fn aot_bias_vmem(block_n: usize, d: usize) -> usize {
+    block_n * 4 + 2 * block_n * d * 4 + 2 * d * 4
+}
+
+/// VMEM footprint of one attention program instance (f32).
+pub fn attention_vmem(block_q: usize, block_k: usize, dh: usize) -> usize {
+    4 * (2 * block_q * dh + 2 * block_k * dh + block_k + block_q * dh + 2 * block_q)
+}
+
+/// Fraction of MXU issue slots doing useful MACs for the attention tiles.
+pub fn attention_mxu_utilization(block_q: usize, block_k: usize, dh: usize) -> f64 {
+    let round = |x: usize| x.div_ceil(MXU) * MXU;
+    (block_q as f64 / round(block_q) as f64)
+        * (block_k as f64 / round(block_k) as f64)
+        * (dh as f64 / round(dh) as f64)
+}
+
+/// Seconds the aot_bias gather+add costs at the HBM roofline: it moves
+/// 3·n·d·4 bytes (H in, P rows in, H' out) and does n·d adds.
+pub fn aot_bias_roofline_secs(batch: usize, seq: usize, d: usize, layers: usize) -> f64 {
+    let bytes = 3.0 * (batch * seq * d * layers) as f64 * 4.0;
+    bytes / HBM_BPS
+}
+
+/// Seconds of one forward pass at the MXU roofline (for the overhead ratio).
+pub fn forward_roofline_secs(flops: f64) -> f64 {
+    (flops / 2.0) / PEAK_MACS
+}
+
+/// The paper's Figure-3 claim, restated as a roofline ratio: the AoT bias
+/// add must be a vanishing fraction of the forward pass.
+pub fn aot_overhead_ratio(
+    m: &crate::config::ModelInfo,
+    batch: usize,
+    seq: usize,
+) -> f64 {
+    let fwd = forward_roofline_secs(crate::model::forward_flops(m, batch, seq));
+    let bias = aot_bias_roofline_secs(batch, seq, m.d_model, m.n_layers);
+    bias / fwd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_blocks_fit_vmem() {
+        assert!(aot_bias_vmem(128, 1024) < VMEM_BYTES);
+        assert!(attention_vmem(128, 128, 128) < VMEM_BYTES);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let u = attention_mxu_utilization(128, 128, 64);
+        assert!(u > 0.0 && u <= 1.0);
+        assert_eq!(attention_mxu_utilization(128, 128, 128), 1.0);
+    }
+
+    #[test]
+    fn aot_bias_is_negligible_at_paper_scale() {
+        // The REAL DeBERTa-XL geometry (d=1024, l=48): even the WORST case
+        // (bias stream fully serialized against a forward running at 100%
+        // MXU peak) bounds the overhead at ~11%; the measured Figure 3
+        // number is ~0 because the add overlaps with compute and real
+        // forwards run well under peak.  This bounds the claim analytically.
+        let xl = crate::config::ModelInfo {
+            name: "deberta-xl".into(),
+            d_model: 1024,
+            n_layers: 48,
+            n_heads: 16,
+            d_ff: 4096,
+            vocab_size: 128_100,
+            max_positions: 512,
+            params: 900_000_000,
+            kron_a: 360,
+            kron_b: 360,
+        };
+        assert!(aot_overhead_ratio(&xl, 16, 384) < 0.12);
+
+        // Our scaled `large` analog has a thinner d, so the worst-case
+        // (zero-overlap) ratio is larger but still bounded; the measured
+        // Figure 3 numbers are far below this because the add overlaps
+        // with compute.
+        let analog = crate::config::ModelInfo {
+            name: "large".into(),
+            d_model: 512,
+            n_layers: 12,
+            n_heads: 8,
+            d_ff: 2048,
+            vocab_size: 8192,
+            max_positions: 512,
+            params: 40_000_000,
+            kron_a: 91,
+            kron_b: 91,
+        };
+        assert!(aot_overhead_ratio(&analog, 16, 384) < 0.25);
+    }
+}

@@ -1,0 +1,219 @@
+//! Host-side fuse math for the two reparametrizations of P.
+//!
+//! At task-registration time the coordinator turns trained reparametrized
+//! weights into a dense `P[l, V, d]` (paper §3.3: "P could be fused once
+//! training is complete, and thus the rank of factorization r does not
+//! affect inference speed").  The same math also exists as `fuse_*` HLO
+//! artifacts; integration tests assert both paths agree, so either can be
+//! used (the host path avoids a device round-trip for large V·d).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::store::TaskP;
+
+/// tanh-approximated GELU, bit-matching `kernels/ref.py`.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// FC AoT fuse: `P[i] = gelu(E W1_i + b1_i) W2_i + b2_i` per layer
+/// (paper Equation 3).
+///
+/// `emb`: `[V, d]`; per-layer stacks `w1 [l,d,r]`, `b1 [l,r]`,
+/// `w2 [l,r,d]`, `b2 [l,d]` under the checkpoint names `t.fc.*`.
+pub fn fuse_fc(emb: &Tensor, trained: &BTreeMap<String, Tensor>) -> Result<TaskP> {
+    let (w1, b1, w2, b2) = (
+        need(trained, "t.fc.w1")?,
+        need(trained, "t.fc.b1")?,
+        need(trained, "t.fc.w2")?,
+        need(trained, "t.fc.b2")?,
+    );
+    let (v, d) = dims2(emb)?;
+    let l = w1.shape[0];
+    let r = w1.shape[2];
+    if w1.shape != [l, d, r] || b1.shape != [l, r] || w2.shape != [l, r, d] || b2.shape != [l, d] {
+        bail!("fuse_fc: inconsistent trained shapes");
+    }
+    let e = emb.as_f32()?;
+    let w1 = w1.as_f32()?;
+    let b1 = b1.as_f32()?;
+    let w2 = w2.as_f32()?;
+    let b2 = b2.as_f32()?;
+
+    let mut out = vec![0f32; l * v * d];
+    let mut hidden = vec![0f32; r];
+    for layer in 0..l {
+        let w1l = &w1[layer * d * r..(layer + 1) * d * r]; // [d, r]
+        let b1l = &b1[layer * r..(layer + 1) * r];
+        let w2l = &w2[layer * r * d..(layer + 1) * r * d]; // [r, d]
+        let b2l = &b2[layer * d..(layer + 1) * d];
+        for tok in 0..v {
+            let e_row = &e[tok * d..(tok + 1) * d];
+            // hidden = gelu(e_row @ W1 + b1)
+            hidden.copy_from_slice(b1l);
+            for (i, &ev) in e_row.iter().enumerate() {
+                if ev == 0.0 {
+                    continue;
+                }
+                let w_row = &w1l[i * r..(i + 1) * r];
+                for (h, &w) in hidden.iter_mut().zip(w_row) {
+                    *h += ev * w;
+                }
+            }
+            for h in hidden.iter_mut() {
+                *h = gelu(*h);
+            }
+            // out_row = hidden @ W2 + b2
+            let out_row = &mut out[(layer * v + tok) * d..(layer * v + tok + 1) * d];
+            out_row.copy_from_slice(b2l);
+            for (j, &hv) in hidden.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let w_row = &w2l[j * d..(j + 1) * d];
+                for (o, &w) in out_row.iter_mut().zip(w_row) {
+                    *o += hv * w;
+                }
+            }
+        }
+    }
+    TaskP::new(l, v, d, out)
+}
+
+/// Kronecker AoT fuse: `P[i·bf+j] = Σ_{u,v} WL[i,u]·WM[j,v]·WR[u·r+v]`,
+/// truncated to the first V rows (paper Equation 2 + footnote 1).
+pub fn fuse_kron(
+    vocab: usize,
+    trained: &BTreeMap<String, Tensor>,
+) -> Result<TaskP> {
+    let (wl, wm, wr) = (
+        need(trained, "t.kron.wl")?,
+        need(trained, "t.kron.wm")?,
+        need(trained, "t.kron.wr")?,
+    );
+    let l = wl.shape[0];
+    let a = wl.shape[1];
+    let r = wl.shape[2];
+    let bf = wm.shape[1];
+    let d = wr.shape[2];
+    if wm.shape != [l, bf, r] || wr.shape != [l, r * r, d] {
+        bail!("fuse_kron: inconsistent trained shapes");
+    }
+    if a * bf < vocab {
+        bail!("fuse_kron: a*bf = {} < vocab {vocab}", a * bf);
+    }
+    let wl = wl.as_f32()?;
+    let wm = wm.as_f32()?;
+    let wr = wr.as_f32()?;
+
+    let mut out = vec![0f32; l * vocab * d];
+    // coeff[u*r+v] = WL[i,u] * WM[j,v]; row = coeff @ WR.
+    let mut coeff = vec![0f32; r * r];
+    for layer in 0..l {
+        let wll = &wl[layer * a * r..(layer + 1) * a * r];
+        let wml = &wm[layer * bf * r..(layer + 1) * bf * r];
+        let wrl = &wr[layer * r * r * d..(layer + 1) * r * r * d];
+        for tok in 0..vocab {
+            let i = tok / bf;
+            let j = tok % bf;
+            let wli = &wll[i * r..(i + 1) * r];
+            let wmj = &wml[j * r..(j + 1) * r];
+            for u in 0..r {
+                for v_ in 0..r {
+                    coeff[u * r + v_] = wli[u] * wmj[v_];
+                }
+            }
+            let out_row = &mut out[(layer * vocab + tok) * d..(layer * vocab + tok + 1) * d];
+            out_row.fill(0.0);
+            for (c_idx, &c) in coeff.iter().enumerate() {
+                if c == 0.0 {
+                    continue;
+                }
+                let w_row = &wrl[c_idx * d..(c_idx + 1) * d];
+                for (o, &w) in out_row.iter_mut().zip(w_row) {
+                    *o += c * w;
+                }
+            }
+        }
+    }
+    TaskP::new(l, vocab, d, out)
+}
+
+fn need<'a>(map: &'a BTreeMap<String, Tensor>, name: &str) -> Result<&'a Tensor> {
+    map.get(name).ok_or_else(|| anyhow!("fuse: missing tensor {name}"))
+}
+
+fn dims2(t: &Tensor) -> Result<(usize, usize)> {
+    if t.shape.len() != 2 {
+        bail!("expected 2-D tensor, got {:?}", t.shape);
+    }
+    Ok((t.shape[0], t.shape[1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn fc_fuse_zero_weights_gives_zero_table() {
+        // The paper's zero-init: W2 = b1 = b2 = 0 => P = 0.
+        let (v, d, r, l) = (20, 6, 4, 2);
+        let mut rng = Pcg64::new(3);
+        let emb = Tensor::from_f32(&[v, d], rng.normal_vec(v * d, 1.0));
+        let mut tr = BTreeMap::new();
+        tr.insert("t.fc.w1".into(), Tensor::from_f32(&[l, d, r], rng.normal_vec(l * d * r, 1.0)));
+        tr.insert("t.fc.b1".into(), Tensor::zeros(crate::tensor::DType::F32, &[l, r]));
+        tr.insert("t.fc.w2".into(), Tensor::zeros(crate::tensor::DType::F32, &[l, r, d]));
+        tr.insert("t.fc.b2".into(), Tensor::zeros(crate::tensor::DType::F32, &[l, d]));
+        let p = fuse_fc(&emb, &tr).unwrap();
+        assert!(p.row_norms(0).iter().all(|&n| n == 0.0));
+    }
+
+    #[test]
+    fn kron_fuse_matches_naive() {
+        let (a, bf, r, d, l, v) = (6, 4, 3, 5, 2, 22);
+        let mut rng = Pcg64::new(4);
+        let wl = rng.normal_vec(l * a * r, 1.0);
+        let wm = rng.normal_vec(l * bf * r, 1.0);
+        let wr = rng.normal_vec(l * r * r * d, 1.0);
+        let mut tr = BTreeMap::new();
+        tr.insert("t.kron.wl".into(), Tensor::from_f32(&[l, a, r], wl.clone()));
+        tr.insert("t.kron.wm".into(), Tensor::from_f32(&[l, bf, r], wm.clone()));
+        tr.insert("t.kron.wr".into(), Tensor::from_f32(&[l, r * r, d], wr.clone()));
+        let p = fuse_kron(v, &tr).unwrap();
+        // naive triple loop
+        for layer in 0..l {
+            for tok in 0..v {
+                let (i, j) = (tok / bf, tok % bf);
+                for dd in 0..d {
+                    let mut want = 0f32;
+                    for u in 0..r {
+                        for vv in 0..r {
+                            want += wl[(layer * a + i) * r + u]
+                                * wm[(layer * bf + j) * r + vv]
+                                * wr[(layer * r * r + u * r + vv) * d + dd];
+                        }
+                    }
+                    let got = p.row(layer, tok)[dd];
+                    assert!((got - want).abs() < 1e-4, "l{layer} t{tok} d{dd}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_matches_reference_values() {
+        // Values from the jnp implementation.
+        assert!((gelu(0.0) - 0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,191 @@
+//! PEFT method registry + the AoT P store.
+//!
+//! * `Method` — every fine-tuning method in the paper with its Table 1
+//!   property triple; `aotpt exp table1` prints the table from this
+//!   registry (mirrored against the manifest in tests).
+//! * `PStore` — the heart of AoT P-Tuning serving (§3.3): fused per-task
+//!   `P ∈ R^{l×V×d}` matrices resident in **host RAM**, with the
+//!   ahead-of-time row gather `bias[l,b,n,d] = P[l, ids[b,n], :]` as the
+//!   coordinator's hot path.
+//! * `fuse` — host-side implementations of the FC/Kronecker fuse math,
+//!   cross-checked against the `fuse_*` HLO artifacts in tests.
+
+pub mod fuse;
+pub mod store;
+
+pub use store::{PStore, TaskP};
+
+/// Every fine-tuning method of the paper (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    FineTune,
+    Lora,
+    LoraFused,
+    Adapters,
+    BitFit,
+    Pt1,
+    Pt2,
+    AotKron,
+    AotFc,
+}
+
+impl Method {
+    pub const ALL: [Method; 9] = [
+        Method::FineTune,
+        Method::Lora,
+        Method::LoraFused,
+        Method::Adapters,
+        Method::BitFit,
+        Method::Pt1,
+        Method::Pt2,
+        Method::AotKron,
+        Method::AotFc,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::FineTune => "fine-tune",
+            Method::Lora => "lora",
+            Method::LoraFused => "lora-fused",
+            Method::Adapters => "adapters",
+            Method::BitFit => "bitfit",
+            Method::Pt1 => "pt1",
+            Method::Pt2 => "pt2",
+            Method::AotKron => "aot-kron",
+            Method::AotFc => "aot-fc",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Method> {
+        Method::ALL
+            .into_iter()
+            .find(|m| m.name() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown method {s}"))
+    }
+
+    /// Paper display name (Table 1 row label).
+    pub fn display(self) -> &'static str {
+        match self {
+            Method::FineTune => "Fine-Tuning",
+            Method::Lora => "LoRA",
+            Method::LoraFused => "LoRA Fused",
+            Method::Adapters => "Adapters",
+            Method::BitFit => "BitFit",
+            Method::Pt1 => "P-Tuning v1",
+            Method::Pt2 => "P-Tuning v2",
+            Method::AotKron => "Kron. AoT P-Tuning (ours)",
+            Method::AotFc => "FC AoT P-Tuning (ours)",
+        }
+    }
+
+    /// Trains a small fraction of the model's parameters.
+    pub fn parameter_efficient(self) -> bool {
+        !matches!(self, Method::FineTune)
+    }
+
+    /// Zero computational overhead at inference (after fusing, if any).
+    pub fn zero_cost(self) -> bool {
+        matches!(
+            self,
+            Method::FineTune | Method::LoraFused | Method::BitFit | Method::AotKron | Method::AotFc
+        )
+    }
+
+    /// Can serve many tasks from one backbone invocation.
+    pub fn multi_task(self) -> bool {
+        !matches!(self, Method::FineTune | Method::LoraFused)
+    }
+
+    /// The serving artifact signature this method uses after training.
+    /// Both AoT reparametrizations fuse to the same `aot` signature —
+    /// that is the paper's point (r no longer affects any shape, §4.2).
+    pub fn serve_signature(self) -> &'static str {
+        match self {
+            Method::FineTune | Method::LoraFused => "fine-tune",
+            Method::Lora => "lora",
+            Method::Adapters => "adapters",
+            Method::BitFit => "bitfit",
+            Method::Pt1 => "pt1",
+            Method::Pt2 => "pt2",
+            Method::AotKron | Method::AotFc => "aot",
+        }
+    }
+
+    /// Render the paper's Table 1 from the live registry.
+    pub fn table1() -> String {
+        let mut out = String::from(
+            "| Method | Parameter Efficient | Zero-Cost | Multi-Task Inference |\n|---|---|---|---|\n",
+        );
+        let mark = |b: bool| if b { "yes" } else { "no" };
+        for m in Method::ALL {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} |\n",
+                m.display(),
+                mark(m.parameter_efficient()),
+                mark(m.zero_cost()),
+                mark(m.multi_task()),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        // The paper's Table 1, row by row.
+        let rows: Vec<(Method, bool, bool, bool)> = vec![
+            (Method::FineTune, false, true, false),
+            (Method::Lora, true, false, true),
+            (Method::LoraFused, true, true, false),
+            (Method::Adapters, true, false, true),
+            (Method::BitFit, true, true, true),
+            (Method::Pt1, true, false, true),
+            (Method::Pt2, true, false, true),
+            (Method::AotKron, true, true, true),
+            (Method::AotFc, true, true, true),
+        ];
+        for (m, pe, zc, mt) in rows {
+            assert_eq!(m.parameter_efficient(), pe, "{m:?} PE");
+            assert_eq!(m.zero_cost(), zc, "{m:?} zero-cost");
+            assert_eq!(m.multi_task(), mt, "{m:?} multi-task");
+        }
+    }
+
+    #[test]
+    fn only_aot_has_all_three() {
+        // The paper's selling point: AoT is the unique method that is
+        // parameter-efficient AND zero-cost AND multi-task... shared only
+        // with BitFit, which it must beat on quality (Table 2).
+        let winners: Vec<Method> = Method::ALL
+            .into_iter()
+            .filter(|m| m.parameter_efficient() && m.zero_cost() && m.multi_task())
+            .collect();
+        assert_eq!(winners, vec![Method::BitFit, Method::AotKron, Method::AotFc]);
+    }
+
+    #[test]
+    fn aot_variants_share_serve_signature() {
+        assert_eq!(Method::AotKron.serve_signature(), "aot");
+        assert_eq!(Method::AotFc.serve_signature(), "aot");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn table1_renders_every_method() {
+        let t = Method::table1();
+        for m in Method::ALL {
+            assert!(t.contains(m.display()), "{}", m.display());
+        }
+    }
+}

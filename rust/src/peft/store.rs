@@ -1,0 +1,245 @@
+//! The AoT P store: per-task fused prompt tables in host RAM + the
+//! ahead-of-time row gather.
+//!
+//! Paper §3.3: "During the evaluation, there is no need to store the full
+//! P in GPU memory.  Instead, it could be stored in RAM, and only rows of
+//! these matrices should be placed in GPU memory to be added to the hidden
+//! states before each layer."  `gather_into` is exactly that operation and
+//! is the coordinator's per-request hot path — it is benchmarked by
+//! `benches/gather_hotpath.rs` and must never dominate the backbone
+//! execute (DESIGN.md §9, L3 target).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail};
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// One task's fused table, laid out `[l, V, d]` row-major so a (layer,
+/// token) row is one contiguous `d`-float slice.
+pub struct TaskP {
+    pub layers: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    data: Vec<f32>,
+}
+
+impl TaskP {
+    pub fn new(layers: usize, vocab: usize, d_model: usize, data: Vec<f32>) -> Result<TaskP> {
+        if data.len() != layers * vocab * d_model {
+            bail!(
+                "TaskP: data length {} != {}x{}x{}",
+                data.len(),
+                layers,
+                vocab,
+                d_model
+            );
+        }
+        Ok(TaskP { layers, vocab, d_model, data })
+    }
+
+    pub fn from_tensor(layers: usize, vocab: usize, d_model: usize, t: &Tensor) -> Result<TaskP> {
+        t.check_shape(&[layers, vocab, d_model])?;
+        TaskP::new(layers, vocab, d_model, t.as_f32()?.to_vec())
+    }
+
+    /// A zero table (a fresh/untrained task is exactly the backbone).
+    pub fn zeros(layers: usize, vocab: usize, d_model: usize) -> TaskP {
+        TaskP { layers, vocab, d_model, data: vec![0.0; layers * vocab * d_model] }
+    }
+
+    #[inline]
+    pub fn row(&self, layer: usize, token: usize) -> &[f32] {
+        let d = self.d_model;
+        let start = (layer * self.vocab + token) * d;
+        &self.data[start..start + d]
+    }
+
+    /// Host-RAM footprint in bytes (paper §3.3's RAM-vs-speed trade-off).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// L2 norms of every vocabulary row at `layer` — the §4.3 analysis
+    /// ("tokens with the largest ‖P_x‖₂").
+    pub fn row_norms(&self, layer: usize) -> Vec<f32> {
+        (0..self.vocab)
+            .map(|t| self.row(layer, t).iter().map(|x| x * x).sum::<f32>().sqrt())
+            .collect()
+    }
+}
+
+/// All registered tasks' tables.
+pub struct PStore {
+    layers: usize,
+    vocab: usize,
+    d_model: usize,
+    tasks: HashMap<String, Arc<TaskP>>,
+}
+
+impl PStore {
+    pub fn new(layers: usize, vocab: usize, d_model: usize) -> PStore {
+        PStore { layers, vocab, d_model, tasks: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, task: &str, p: TaskP) -> Result<()> {
+        if (p.layers, p.vocab, p.d_model) != (self.layers, self.vocab, self.d_model) {
+            bail!("task {task}: table geometry mismatch");
+        }
+        self.tasks.insert(task.to_string(), Arc::new(p));
+        Ok(())
+    }
+
+    pub fn get(&self, task: &str) -> Result<&Arc<TaskP>> {
+        self.tasks
+            .get(task)
+            .ok_or_else(|| anyhow!("no fused P registered for task {task}"))
+    }
+
+    pub fn task_names(&self) -> Vec<&str> {
+        self.tasks.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Total host RAM held by all tables.
+    pub fn bytes(&self) -> usize {
+        self.tasks.values().map(|p| p.bytes()).sum()
+    }
+
+    /// THE hot path: gather bias `[l, b, n, d]` for a multi-task batch.
+    ///
+    /// `assignments[j]` names the task of batch row `j`; `ids` is the
+    /// padded `[b, n]` token matrix.  The output layout matches the
+    /// serving artifact's `in.bias` input exactly, so the result is
+    /// uploaded without any further reshuffling.
+    pub fn gather(&self, assignments: &[&str], ids: &[i32], n: usize) -> Result<Tensor> {
+        let b = assignments.len();
+        if ids.len() != b * n {
+            bail!("gather: ids length {} != {b}x{n}", ids.len());
+        }
+        let d = self.d_model;
+        let mut out = vec![0f32; self.layers * b * n * d];
+        self.gather_into(assignments, ids, n, &mut out)?;
+        Ok(Tensor::from_f32(&[self.layers, b, n, d], out))
+    }
+
+    /// Allocation-free variant for a caller-managed buffer.
+    pub fn gather_into(
+        &self,
+        assignments: &[&str],
+        ids: &[i32],
+        n: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let b = assignments.len();
+        let d = self.d_model;
+        if out.len() != self.layers * b * n * d {
+            bail!("gather_into: output buffer has wrong length");
+        }
+        // Resolve tasks once per row, not once per token.
+        let tables: Vec<&Arc<TaskP>> = assignments
+            .iter()
+            .map(|t| self.get(t))
+            .collect::<Result<_>>()?;
+        for layer in 0..self.layers {
+            let layer_base = layer * b * n * d;
+            for (j, table) in tables.iter().enumerate() {
+                let row_base = layer_base + j * n * d;
+                for t in 0..n {
+                    let tok = ids[j * n + t];
+                    debug_assert!((tok as usize) < self.vocab);
+                    let src = table.row(layer, tok as usize);
+                    let dst = &mut out[row_base + t * d..row_base + (t + 1) * d];
+                    dst.copy_from_slice(src);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn store(layers: usize, vocab: usize, d: usize) -> PStore {
+        let mut s = PStore::new(layers, vocab, d);
+        let mut rng = Pcg64::new(1);
+        for task in ["a", "b"] {
+            let data = rng.normal_vec(layers * vocab * d, 1.0);
+            s.insert(task, TaskP::new(layers, vocab, d, data).unwrap()).unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn gather_matches_manual_lookup() {
+        let (l, v, d, n) = (3, 50, 8, 5);
+        let s = store(l, v, d);
+        let mut rng = Pcg64::new(2);
+        let ids: Vec<i32> = (0..2 * n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let out = s.gather(&["a", "b"], &ids, n).unwrap();
+        assert_eq!(out.shape, vec![l, 2, n, d]);
+        let data = out.as_f32().unwrap();
+        for layer in 0..l {
+            for (j, task) in ["a", "b"].iter().enumerate() {
+                let table = s.get(task).unwrap();
+                for t in 0..n {
+                    let tok = ids[j * n + t] as usize;
+                    let got = &data[((layer * 2 + j) * n + t) * d..((layer * 2 + j) * n + t + 1) * d];
+                    assert_eq!(got, table.row(layer, tok), "layer {layer} row {j} tok {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_table_gathers_zeros() {
+        let mut s = PStore::new(2, 10, 4);
+        s.insert("z", TaskP::zeros(2, 10, 4)).unwrap();
+        let out = s.gather(&["z"], &[1, 2, 3], 3).unwrap();
+        assert!(out.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let mut s = PStore::new(2, 10, 4);
+        assert!(s.insert("bad", TaskP::zeros(3, 10, 4)).is_err());
+        assert!(s.get("missing").is_err());
+    }
+
+    #[test]
+    fn row_norms_pick_out_heavy_tokens() {
+        let (l, v, d) = (1, 8, 4);
+        let mut data = vec![0f32; l * v * d];
+        for x in &mut data[5 * d..6 * d] {
+            *x = 3.0; // token 5 gets a heavy row
+        }
+        let p = TaskP::new(l, v, d, data).unwrap();
+        let norms = p.row_norms(0);
+        let argmax = norms
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 5);
+        assert!((norms[5] - 6.0).abs() < 1e-6); // sqrt(4 * 9)
+    }
+
+    #[test]
+    fn ram_accounting() {
+        let s = store(2, 10, 4);
+        assert_eq!(s.bytes(), 2 * 2 * 10 * 4 * 4);
+    }
+}

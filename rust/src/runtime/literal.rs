@@ -1,0 +1,99 @@
+//! Host `Tensor` ⇄ xla `Literal` / `PjRtBuffer` marshalling.
+
+use anyhow::anyhow;
+
+use crate::tensor::{DType, Tensor};
+use crate::Result;
+
+use super::wrap;
+
+/// Host tensor -> host literal (no device transfer yet).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = element_type(t.dtype);
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.bytes()).map_err(wrap)
+}
+
+/// Host tensor -> device buffer.
+pub fn tensor_to_buffer(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    // The typed entry point is used (not raw bytes): the crate's raw-bytes
+    // variant passes the wrong enum discriminant to the C layer.
+    match t.dtype {
+        DType::F32 => client
+            .buffer_from_host_buffer::<f32>(t.as_f32()?, &t.shape, None)
+            .map_err(wrap),
+        DType::I32 => client
+            .buffer_from_host_buffer::<i32>(t.as_i32()?, &t.shape, None)
+            .map_err(wrap),
+        DType::I64 => Err(anyhow!("i64 upload not needed by any artifact")),
+    }
+}
+
+/// Host literal -> host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(wrap)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = match shape.ty() {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::S64 => DType::I64,
+        other => return Err(anyhow!("unsupported output element type {other:?}")),
+    };
+    match dtype {
+        DType::F32 => {
+            let mut data = vec![0f32; lit.element_count()];
+            lit.copy_raw_to::<f32>(&mut data).map_err(wrap)?;
+            Ok(Tensor::from_f32(&dims, data))
+        }
+        DType::I32 => {
+            let mut data = vec![0i32; lit.element_count()];
+            lit.copy_raw_to::<i32>(&mut data).map_err(wrap)?;
+            Ok(Tensor::from_i32(&dims, data))
+        }
+        DType::I64 => {
+            let mut data = vec![0i64; lit.element_count()];
+            lit.copy_raw_to::<i64>(&mut data).map_err(wrap)?;
+            // Narrow to i32 (no artifact emits i64 payloads we keep).
+            let narrowed: Vec<i32> = data.into_iter().map(|x| x as i32).collect();
+            Ok(Tensor::from_i32(&dims, narrowed))
+        }
+    }
+}
+
+fn element_type(dtype: DType) -> xla::ElementType {
+    match dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::I64 => xla::ElementType::S64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 2]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::from_i32(&[3], vec![7, -1, 2]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7, -1, 2]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_f32(2.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back.shape, Vec::<usize>::new());
+        assert_eq!(back.as_f32().unwrap(), &[2.5]);
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` / `execute_b`.
+//!
+//! Conventions established by `python/compile/aot.py`:
+//! * interchange is HLO **text** (64-bit-id proto incompatibility, see
+//!   /opt/xla-example/README.md);
+//! * artifacts are lowered with `return_tuple=False`, so single-output
+//!   graphs return a bare array and multi-output graphs a tuple —
+//!   `run` normalizes both to `Vec<Tensor>`;
+//! * weights (`w.*`) are uploaded once per model and kept device-resident
+//!   (`WeightCache`); only per-call inputs move on the hot path.
+
+pub mod literal;
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context};
+
+use crate::config::{ArtifactSpec, Manifest};
+use crate::tensor::Tensor;
+use crate::Result;
+
+pub use literal::{literal_to_tensor, tensor_to_buffer, tensor_to_literal};
+pub use weights::WeightCache;
+
+/// Shared PJRT client + compiled-executable cache.
+///
+/// Compilation happens once per artifact stem; executables are shared
+/// behind `Arc` so the coordinator's workers and the bench harness reuse
+/// them freely.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+// The PJRT CPU client is internally synchronized; the `xla` crate just
+// doesn't mark its pointer wrappers Send/Sync.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn new() -> Result<Arc<Runtime>> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        crate::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Arc::new(Runtime { client, cache: Mutex::new(HashMap::new()) }))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact (cached by stem).
+    pub fn load(self: &Arc<Self>, manifest: &Manifest, stem: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(stem) {
+            return Ok(Arc::clone(exe));
+        }
+        let spec = manifest.artifact(stem)?.clone();
+        let exe = Arc::new(self.compile_spec(spec)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(stem.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Compile an artifact spec without touching the cache.
+    pub fn compile_spec(self: &Arc<Self>, spec: ArtifactSpec) -> Result<Executable> {
+        let t = crate::util::Timer::start();
+        let exe = self.compile_file(&spec.file)?;
+        crate::debugln!("compiled {} in {:.2}s", spec.stem, t.secs());
+        Ok(Executable { runtime: Arc::clone(self), exe, spec })
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(wrap)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(wrap)
+            .with_context(|| format!("XLA compile of {}", path.display()))
+    }
+
+    /// Number of executables compiled so far (metrics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// A compiled artifact plus its manifest signature.
+pub struct Executable {
+    runtime: Arc<Runtime>,
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Execute with host tensors; weights and inputs all uploaded per call.
+    /// Validates count and shapes against the manifest signature.
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_args(args)?;
+        let literals = args
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let outs = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
+        self.collect_outputs(outs)
+    }
+
+    /// Execute with device-resident buffers (the hot path: weights stay on
+    /// device via `WeightCache`, per-call tensors are uploaded by caller).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        if args.len() != self.spec.inputs.len() {
+            anyhow::bail!(
+                "{}: got {} args, signature has {}",
+                self.spec.stem,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let outs = self.exe.execute_b(args).map_err(wrap)?;
+        self.collect_outputs(outs)
+    }
+
+    /// Upload a host tensor to the device (for caller-managed buffers).
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        tensor_to_buffer(&self.runtime.client, t)
+    }
+
+    fn check_args(&self, args: &[Tensor]) -> Result<()> {
+        if args.len() != self.spec.inputs.len() {
+            anyhow::bail!(
+                "{}: got {} args, signature has {}",
+                self.spec.stem,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            if arg.shape != spec.shape || arg.dtype != spec.dtype {
+                anyhow::bail!(
+                    "{}: input {} expects {:?} {:?}, got {:?} {:?}",
+                    self.spec.stem,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    arg.dtype,
+                    arg.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn collect_outputs(&self, outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Tensor>> {
+        let replica = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no replica outputs", self.spec.stem))?;
+        let mut tensors = Vec::new();
+        for buf in replica {
+            let lit = buf.to_literal_sync().map_err(wrap)?;
+            // Multi-output graphs come back as one tuple literal.
+            match lit.shape().map_err(wrap)? {
+                xla::Shape::Tuple(_) => {
+                    let mut lit = lit;
+                    for part in lit.decompose_tuple().map_err(wrap)? {
+                        tensors.push(literal_to_tensor(&part)?);
+                    }
+                }
+                _ => tensors.push(literal_to_tensor(&lit)?),
+            }
+        }
+        if tensors.len() != self.spec.outputs.len() {
+            anyhow::bail!(
+                "{}: got {} outputs, manifest declares {}",
+                self.spec.stem,
+                tensors.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(tensors)
+    }
+}
+
+/// Convert the xla crate's error type into anyhow.
+pub(crate) fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}

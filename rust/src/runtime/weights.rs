@@ -1,0 +1,76 @@
+//! Device-resident weight cache.
+//!
+//! The paper's multi-task serving story keeps ONE backbone on the
+//! accelerator while per-task state stays in host RAM.  `WeightCache`
+//! uploads each `w.*` tensor once; every bucket/method executable of the
+//! same model shape then shares the buffers via `execute_b` — weight bytes
+//! never move again.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::anyhow;
+
+use super::{tensor_to_buffer, Runtime};
+use crate::tensor::{ckpt, Tensor};
+use crate::Result;
+
+pub struct WeightCache {
+    buffers: BTreeMap<String, xla::PjRtBuffer>,
+    host: BTreeMap<String, Tensor>,
+}
+
+unsafe impl Send for WeightCache {}
+unsafe impl Sync for WeightCache {}
+
+impl WeightCache {
+    /// Load a checkpoint and upload every tensor.
+    pub fn from_ckpt(runtime: &Runtime, path: &Path) -> Result<WeightCache> {
+        let host = ckpt::load(path)?;
+        Self::from_tensors(runtime, host)
+    }
+
+    pub fn from_tensors(
+        runtime: &Runtime,
+        host: BTreeMap<String, Tensor>,
+    ) -> Result<WeightCache> {
+        let mut buffers = BTreeMap::new();
+        for (name, t) in &host {
+            buffers.insert(name.clone(), tensor_to_buffer(runtime.client(), t)?);
+        }
+        Ok(WeightCache { buffers, host })
+    }
+
+    pub fn buffer(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.buffers
+            .get(name)
+            .ok_or_else(|| anyhow!("weight cache has no tensor {name}"))
+    }
+
+    /// Host copy (for fuse-time math and analysis).
+    pub fn host(&self, name: &str) -> Result<&Tensor> {
+        self.host
+            .get(name)
+            .ok_or_else(|| anyhow!("weight cache has no tensor {name}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.buffers.keys()
+    }
+
+    /// Insert/replace a tensor (e.g. the fused P table for device-gather).
+    pub fn insert(&mut self, runtime: &Runtime, name: &str, t: Tensor) -> Result<()> {
+        self.buffers
+            .insert(name.to_string(), tensor_to_buffer(runtime.client(), &t)?);
+        self.host.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+}

@@ -1,0 +1,126 @@
+//! Reader/writer for the `aotckpt` binary format (see
+//! `python/compile/ckpt.py` for the authoritative layout).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::{DType, Tensor};
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"ACKP";
+const VERSION: u32 = 1;
+
+/// Load every tensor in a checkpoint.
+pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an aotckpt file", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let count = read_u32(&mut f)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name_buf = vec![0u8; name_len];
+        f.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf)?;
+        let mut meta = [0u8; 2];
+        f.read_exact(&mut meta)?;
+        let dtype = DType::from_code(meta[0])?;
+        let ndim = meta[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let nbytes = read_u64(&mut f)? as usize;
+        let mut data = vec![0u8; nbytes];
+        f.read_exact(&mut data)?;
+        out.insert(name, Tensor::from_raw(dtype, shape, data)?);
+    }
+    Ok(out)
+}
+
+/// Save tensors (sorted by name for determinism).
+pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.dtype.code(), t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&(t.bytes().len() as u64).to_le_bytes())?;
+        f.write_all(t.bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.aotckpt");
+        let mut tensors = BTreeMap::new();
+        tensors.insert("a".to_string(), Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        tensors.insert("b.ids".to_string(), Tensor::from_i32(&[3], vec![7, 8, 9]));
+        tensors.insert("scalar".to_string(), Tensor::scalar_f32(0.5));
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back["a"].as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back["a"].shape, vec![2, 2]);
+        assert_eq!(back["b.ids"].as_i32().unwrap(), &[7, 8, 9]);
+        assert_eq!(back["scalar"].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.aotckpt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

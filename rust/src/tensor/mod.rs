@@ -1,0 +1,193 @@
+//! Host tensors + the `aotckpt` checkpoint format shared with Python.
+
+pub mod ckpt;
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Element type of a host tensor (mirrors `python/compile/ckpt.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I64,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::I64 => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I64,
+            other => bail!("unknown dtype code {other}"),
+        })
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            other => bail!("unknown dtype name {other}"),
+        })
+    }
+}
+
+/// A dense row-major host tensor.  Storage is raw bytes so all dtypes share
+/// one container; typed views are provided for f32/i32.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { dtype, shape: shape.to_vec(), data: vec![0u8; n * dtype.size()] }
+    }
+
+    pub fn from_f32(shape: &[usize], values: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len(), "shape/value mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], values: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len(), "shape/value mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::from_f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::from_i32(&[], vec![v])
+    }
+
+    pub fn from_raw(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let expect: usize = shape.iter().product::<usize>() * dtype.size();
+        if data.len() != expect {
+            bail!("raw tensor length {} != expected {expect}", data.len());
+        }
+        Ok(Tensor { dtype, shape, data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const f32, self.len())
+        })
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        let n = self.len();
+        Ok(unsafe {
+            std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f32, n)
+        })
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not i32", self.dtype);
+        }
+        Ok(unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const i32, self.len())
+        })
+    }
+
+    /// Row `i` of a 2-D f32 tensor.
+    pub fn row_f32(&self, i: usize) -> Result<&[f32]> {
+        if self.shape.len() != 2 {
+            bail!("row_f32 needs a 2-D tensor, got {:?}", self.shape);
+        }
+        let cols = self.shape[1];
+        let all = self.as_f32()?;
+        all.get(i * cols..(i + 1) * cols)
+            .ok_or_else(|| anyhow!("row {i} out of bounds for {:?}", self.shape))
+    }
+
+    /// Flat element count sanity vs a declared shape.
+    pub fn check_shape(&self, shape: &[usize]) -> Result<()> {
+        if self.shape != shape {
+            bail!("shape mismatch: have {:?}, want {:?}", self.shape, shape);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert_eq!(t.row_f32(1).unwrap(), &[4.0, 5.0, 6.0]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn zeros_and_mutation() {
+        let mut t = Tensor::zeros(DType::F32, &[4]);
+        t.as_f32_mut().unwrap()[2] = 7.0;
+        assert_eq!(t.as_f32().unwrap(), &[0.0, 0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn scalars_have_empty_shape() {
+        let s = Tensor::scalar_i32(5);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.as_i32().unwrap(), &[5]);
+    }
+
+    #[test]
+    fn from_raw_validates_length() {
+        assert!(Tensor::from_raw(DType::F32, vec![2], vec![0u8; 8]).is_ok());
+        assert!(Tensor::from_raw(DType::F32, vec![2], vec![0u8; 7]).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! A byte-pair encoder trained by greedy pair merging over a word
+//! histogram (Sennrich et al. 2016 style, word-internal merges only).
+
+use std::collections::HashMap;
+
+/// A trained BPE model: base bytes + ordered merges.
+pub struct Bpe {
+    /// merge rank: (left, right) -> merged symbol id
+    merges: HashMap<(u32, u32), u32>,
+    /// symbol id -> byte string
+    symbols: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Train on a corpus until `n_merges` merges (or no pair repeats).
+    pub fn train(corpus: &str, n_merges: usize) -> Bpe {
+        // Word histogram.
+        let mut word_counts: HashMap<Vec<u32>, usize> = HashMap::new();
+        for word in corpus.split_whitespace() {
+            let symbols: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+            if symbols.is_empty() {
+                continue;
+            }
+            *word_counts.entry(symbols).or_insert(0) += 1;
+        }
+        let mut words: Vec<(Vec<u32>, usize)> = word_counts.into_iter().collect();
+        words.sort(); // deterministic iteration
+
+        let mut symbols: Vec<Vec<u8>> = (0..=255u32).map(|b| vec![b as u8]).collect();
+        let mut merges = HashMap::new();
+
+        for _ in 0..n_merges {
+            // Count adjacent pairs.
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (w, c) in &words {
+                for pair in w.windows(2) {
+                    *pair_counts.entry((pair[0], pair[1])).or_insert(0) += c;
+                }
+            }
+            // Best pair (deterministic tie-break on the pair itself).
+            let Some((&pair, &count)) = pair_counts
+                .iter()
+                .max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            let new_id = symbols.len() as u32;
+            let mut merged_bytes = symbols[pair.0 as usize].clone();
+            merged_bytes.extend_from_slice(&symbols[pair.1 as usize]);
+            symbols.push(merged_bytes);
+            merges.insert(pair, new_id);
+            // Apply the merge to every word.
+            for (w, _) in words.iter_mut() {
+                *w = apply_merge(w, pair, new_id);
+            }
+        }
+        Bpe { merges, symbols }
+    }
+
+    /// Encode text into symbol ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for word in text.split_whitespace() {
+            let mut syms: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+            // Repeatedly apply the lowest-id (earliest-learned) applicable merge.
+            loop {
+                let mut best: Option<(usize, u32)> = None; // (position, merged id)
+                for (i, pair) in syms.windows(2).enumerate() {
+                    if let Some(&m) = self.merges.get(&(pair[0], pair[1])) {
+                        if best.map_or(true, |(_, bm)| m < bm) {
+                            best = Some((i, m));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, m)) => {
+                        syms.splice(i..i + 2, [m]);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(syms);
+        }
+        out
+    }
+
+    /// Decode symbol ids back to a byte string.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(sym) = self.symbols.get(id as usize) {
+                bytes.extend_from_slice(sym);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.symbols.len()
+    }
+}
+
+fn apply_merge(w: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(w.len());
+    let mut i = 0;
+    while i < w.len() {
+        if i + 1 < w.len() && (w[i], w[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(w[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the cat sat on the mat the cat ran the cat sat";
+
+    #[test]
+    fn roundtrip_after_training() {
+        let bpe = Bpe::train(CORPUS, 50);
+        for text in ["the cat", "sat on the mat", "unseen words too"] {
+            let ids = bpe.encode(text);
+            assert_eq!(bpe.decode(&ids), text.replace(' ', ""));
+        }
+    }
+
+    #[test]
+    fn merges_shrink_frequent_words() {
+        let bpe = Bpe::train(CORPUS, 50);
+        // "the" is the most frequent word: must encode to one symbol.
+        assert_eq!(bpe.encode("the").len(), 1);
+        // A word never seen still encodes (as bytes / partial merges).
+        assert!(!bpe.encode("zzzq").is_empty());
+    }
+
+    #[test]
+    fn vocab_grows_by_merges() {
+        let bpe = Bpe::train(CORPUS, 10);
+        assert!(bpe.vocab_size() > 256);
+        assert!(bpe.vocab_size() <= 266);
+    }
+
+    #[test]
+    fn zero_merges_is_byte_level() {
+        let bpe = Bpe::train(CORPUS, 0);
+        assert_eq!(bpe.vocab_size(), 256);
+        assert_eq!(bpe.encode("ab"), vec![97, 98]);
+    }
+}

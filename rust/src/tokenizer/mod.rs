@@ -1,0 +1,148 @@
+//! Tokenization substrate.
+//!
+//! Two tokenizers are provided:
+//!
+//! * `WordVocab` — the vocabulary the synthetic benchmark suite runs on:
+//!   a closed lexicon of generated words mapped to ids, with the special
+//!   tokens the encoder expects.  The §4.3 analysis tables need the
+//!   id → string map to label high-norm `P` rows, so the vocabulary is
+//!   serializable.
+//! * `Bpe` — a trainable byte-pair encoder (greedy merges over a word
+//!   histogram).  It backs the `corpus` MLM-pretraining path and shows the
+//!   substrate is real; the task generators use `WordVocab` for
+//!   interpretability.
+
+pub mod bpe;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+pub use bpe::Bpe;
+
+/// Special token ids (fixed, shared with the data pipeline).
+pub const CLS: i32 = 0;
+pub const SEP: i32 = 1;
+pub const PAD: i32 = 2;
+pub const MASK: i32 = 3;
+pub const UNK: i32 = 4;
+pub const N_SPECIAL: usize = 5;
+
+/// A closed word-level vocabulary.
+pub struct WordVocab {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl WordVocab {
+    /// Build from a lexicon (ids are assigned after the special tokens in
+    /// the given order).
+    pub fn new(words: impl IntoIterator<Item = String>, capacity: usize) -> Result<WordVocab> {
+        let mut id_to_word: Vec<String> =
+            ["[CLS]", "[SEP]", "[PAD]", "[MASK]", "[UNK]"].iter().map(|s| s.to_string()).collect();
+        let mut word_to_id = HashMap::new();
+        for (i, w) in id_to_word.iter().enumerate() {
+            word_to_id.insert(w.clone(), i as i32);
+        }
+        for w in words {
+            if word_to_id.contains_key(&w) {
+                bail!("duplicate word {w} in lexicon");
+            }
+            if id_to_word.len() >= capacity {
+                bail!("lexicon exceeds vocab capacity {capacity}");
+            }
+            word_to_id.insert(w.clone(), id_to_word.len() as i32);
+            id_to_word.push(w);
+        }
+        Ok(WordVocab { word_to_id, id_to_word })
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        self.word_to_id.get(word).copied().unwrap_or(UNK)
+    }
+
+    pub fn word(&self, id: i32) -> Result<&str> {
+        self.id_to_word
+            .get(id as usize)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("id {id} out of vocabulary"))
+    }
+
+    /// Encode a whitespace-separated sentence (no CLS/SEP added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&i| self.word(i).ok())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Wrap token ids as a classifier input: `[CLS] a… ([SEP] b…) [SEP]`,
+/// truncated+padded to `seq`; returns (ids, mask).
+pub fn pack_pair(a: &[i32], b: Option<&[i32]>, seq: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut ids = Vec::with_capacity(seq);
+    ids.push(CLS);
+    ids.extend_from_slice(a);
+    if let Some(b) = b {
+        ids.push(SEP);
+        ids.extend_from_slice(b);
+    }
+    ids.push(SEP);
+    ids.truncate(seq);
+    let used = ids.len();
+    ids.resize(seq, PAD);
+    let mut mask = vec![0f32; seq];
+    for m in mask.iter_mut().take(used) {
+        *m = 1.0;
+    }
+    (ids, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_roundtrip() {
+        let v = WordVocab::new(["alpha".into(), "beta".into()], 100).unwrap();
+        assert_eq!(v.id("alpha"), N_SPECIAL as i32);
+        assert_eq!(v.word(N_SPECIAL as i32 + 1).unwrap(), "beta");
+        assert_eq!(v.id("missing"), UNK);
+        assert_eq!(v.decode(&v.encode("beta alpha")), "beta alpha");
+    }
+
+    #[test]
+    fn vocab_rejects_duplicates_and_overflow() {
+        assert!(WordVocab::new(["x".into(), "x".into()], 100).is_err());
+        assert!(WordVocab::new(["a".into(), "b".into()], 6).is_err());
+    }
+
+    #[test]
+    fn pack_pair_layout() {
+        let (ids, mask) = pack_pair(&[10, 11], Some(&[20]), 8);
+        assert_eq!(ids, vec![CLS, 10, 11, SEP, 20, SEP, PAD, PAD]);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_truncates() {
+        let (ids, mask) = pack_pair(&[10, 11, 12, 13], None, 4);
+        assert_eq!(ids.len(), 4);
+        assert_eq!(ids[0], CLS);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+}

@@ -1,0 +1,84 @@
+//! Expected Validation Performance (Dodge et al. 2019) — the paper's
+//! Appendix Figures 5/7 machinery.
+//!
+//! Given validation scores of `n` hyperparameter assignments, EVP(k) is
+//! the expectation of the maximum over `k` assignments drawn uniformly
+//! WITH replacement (the closed form used by Dodge et al.):
+//!
+//!   E[max of k] = Σ_i s_(i) · [ (i/n)^k − ((i−1)/n)^k ]
+//!
+//! with s_(1) ≤ … ≤ s_(n) the sorted scores.
+
+/// EVP at a single budget k.
+pub fn evp_at(scores: &[f64], k: usize) -> f64 {
+    if scores.is_empty() || k == 0 {
+        return 0.0;
+    }
+    let mut s = scores.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len() as f64;
+    let mut total = 0.0;
+    for (i, score) in s.iter().enumerate() {
+        let hi = ((i + 1) as f64 / n).powi(k as i32);
+        let lo = (i as f64 / n).powi(k as i32);
+        total += score * (hi - lo);
+    }
+    total
+}
+
+/// The whole curve for budgets 1..=max_k.
+pub fn evp_curve(scores: &[f64], max_k: usize) -> Vec<(usize, f64)> {
+    (1..=max_k).map(|k| (k, evp_at(scores, k))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn evp1_is_mean_and_evp_inf_is_max() {
+        let scores = [0.2, 0.5, 0.8, 0.9];
+        let mean: f64 = scores.iter().sum::<f64>() / 4.0;
+        assert!((evp_at(&scores, 1) - mean).abs() < 1e-12);
+        assert!((evp_at(&scores, 200) - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn evp_is_monotone_in_budget() {
+        let scores = [0.1, 0.7, 0.4, 0.9, 0.3];
+        let curve = evp_curve(&scores, 20);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn evp_matches_monte_carlo() {
+        let scores: Vec<f64> = {
+            let mut rng = Pcg64::new(9);
+            (0..30).map(|_| rng.f64()).collect()
+        };
+        let k = 5;
+        let exact = evp_at(&scores, k);
+        let mut rng = Pcg64::new(10);
+        let trials = 200_000;
+        let mut total = 0.0;
+        for _ in 0..trials {
+            let mut best = f64::NEG_INFINITY;
+            for _ in 0..k {
+                best = best.max(*rng.choose(&scores));
+            }
+            total += best;
+        }
+        let mc = total / trials as f64;
+        assert!((exact - mc).abs() < 5e-3, "exact {exact} vs mc {mc}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(evp_at(&[], 3), 0.0);
+        assert_eq!(evp_at(&[0.5], 0), 0.0);
+        assert!((evp_at(&[0.5], 7) - 0.5).abs() < 1e-12);
+    }
+}

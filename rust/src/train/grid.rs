@@ -1,0 +1,179 @@
+//! Grid search over (hyperparameter assignment × seed), the paper's §4.1
+//! protocol: every assignment evaluated under several seeds, reporting
+//! median ± std of the dev metric, plus the per-assignment score list the
+//! EVP curves consume.
+
+use std::sync::Arc;
+
+use crate::config::Manifest;
+use crate::data::TaskData;
+use crate::runtime::{Runtime, WeightCache};
+use crate::util::stats;
+use crate::Result;
+
+use super::{TrainConfig, Trainer};
+
+/// One grid axis point: a concrete (train, eval) artifact pair + lr.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub train_stem: String,
+    pub eval_stem: String,
+    pub lr: f32,
+    /// Display label, e.g. "r=32,lr=1e-3".
+    pub label: String,
+}
+
+/// Result of one (assignment, seed) run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub assignment: String,
+    pub seed: u64,
+    pub metric: f64,
+    pub epochs: usize,
+    pub steps: usize,
+}
+
+/// Aggregated over seeds per assignment + the flat score list.
+pub struct GridResult {
+    pub runs: Vec<RunResult>,
+}
+
+impl GridResult {
+    /// (median, std) over seeds for the best assignment (paper Table 2
+    /// reports median ± std of the best hyperparameter set).
+    pub fn best(&self) -> Option<(String, f64, f64)> {
+        let mut per: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+        for r in &self.runs {
+            per.entry(&r.assignment).or_default().push(r.metric);
+        }
+        per.into_iter()
+            .map(|(a, scores)| (a.to_string(), stats::median(&scores), stats::std(&scores)))
+            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+    }
+
+    /// All scores (assignment × seed), the EVP curve input.
+    pub fn all_scores(&self) -> Vec<f64> {
+        self.runs.iter().map(|r| r.metric).collect()
+    }
+}
+
+/// Drives the grid for one (model, method) over one task.
+pub struct GridSearch<'a> {
+    pub runtime: &'a Arc<Runtime>,
+    pub manifest: &'a Manifest,
+    pub weights: Arc<WeightCache>,
+    pub assignments: Vec<Assignment>,
+    pub seeds: Vec<u64>,
+    pub train_cfg: TrainConfig,
+}
+
+impl<'a> GridSearch<'a> {
+    pub fn run(&self, task: &TaskData) -> Result<GridResult> {
+        let mut runs = Vec::new();
+        for a in &self.assignments {
+            let trainer = Trainer::new(
+                self.runtime,
+                self.manifest,
+                Arc::clone(&self.weights),
+                &a.train_stem,
+                &a.eval_stem,
+            )?;
+            for &seed in &self.seeds {
+                let mut cfg = self.train_cfg.clone();
+                cfg.lr = a.lr;
+                cfg.seed = seed;
+                let result = trainer.run(task, &cfg)?;
+                crate::debugln!(
+                    "grid {} seed {} -> {:.4} ({} epochs)",
+                    a.label,
+                    seed,
+                    result.best_metric,
+                    result.epochs_run
+                );
+                runs.push(RunResult {
+                    assignment: a.label.clone(),
+                    seed,
+                    metric: result.best_metric,
+                    epochs: result.epochs_run,
+                    steps: result.steps_run,
+                });
+            }
+        }
+        Ok(GridResult { runs })
+    }
+}
+
+/// Build the grid assignments available in the manifest for a method.
+pub fn assignments_for(
+    manifest: &Manifest,
+    model: &str,
+    method: &str,
+    classes: usize,
+    lrs: &[f32],
+) -> Vec<Assignment> {
+    let mut out = Vec::new();
+    for train in manifest.find("train", model, method) {
+        if train.classes != classes {
+            continue;
+        }
+        // Find the eval artifact with matching hp.
+        let eval = manifest
+            .find("eval", model, method)
+            .into_iter()
+            .find(|e| {
+                e.classes == classes && e.rank == train.rank && e.prefix == train.prefix
+            });
+        let Some(eval) = eval else { continue };
+        for &lr in lrs {
+            let hp_label = if matches!(method, "pt1" | "pt2") {
+                format!("p={}", train.prefix)
+            } else if matches!(method, "lora" | "adapters" | "aot-kron" | "aot-fc") {
+                format!("r={}", train.rank)
+            } else {
+                "-".to_string()
+            };
+            out.push(Assignment {
+                train_stem: train.stem.clone(),
+                eval_stem: eval.stem.clone(),
+                lr,
+                label: format!("{method}[{hp_label},lr={lr}]"),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_result_best_picks_highest_median() {
+        let runs = vec![
+            RunResult { assignment: "a".into(), seed: 0, metric: 0.6, epochs: 1, steps: 8 },
+            RunResult { assignment: "a".into(), seed: 1, metric: 0.62, epochs: 1, steps: 8 },
+            RunResult { assignment: "b".into(), seed: 0, metric: 0.9, epochs: 1, steps: 8 },
+            RunResult { assignment: "b".into(), seed: 1, metric: 0.1, epochs: 1, steps: 8 },
+        ];
+        let g = GridResult { runs };
+        let (name, median, _std) = g.best().unwrap();
+        // a: median .61; b: median .5 -> a wins despite b's outlier
+        assert_eq!(name, "a");
+        assert!((median - 0.61).abs() < 1e-9);
+        assert_eq!(g.all_scores().len(), 4);
+    }
+
+    #[test]
+    fn assignments_for_finds_manifest_pairs() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let a = assignments_for(&m, "tiny", "aot-fc", 2, &[1e-3, 5e-3]);
+        // two ranks x two lrs
+        assert_eq!(a.len(), 4, "{a:?}");
+        assert!(a.iter().all(|x| x.train_stem.contains("train_tiny_aot-fc")));
+        assert!(a.iter().all(|x| x.eval_stem.contains("eval_tiny_aot-fc")));
+    }
+}

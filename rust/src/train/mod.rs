@@ -1,0 +1,272 @@
+//! The training driver: runs the paper's experimental protocol (§4.1) by
+//! executing AOT train-step computations from Rust.
+//!
+//! * one XLA call = `steps_per_call` scanned Adam steps (host round-trips
+//!   amortized — this xla-crate build cannot donate buffers);
+//! * constant learning rate, patience-based early stopping on the dev
+//!   metric (paper Appendix Table 6);
+//! * trainable parameters are materialized from the manifest's init specs
+//!   with the run's seed — Python is not involved in seed sweeps.
+
+pub mod evp;
+pub mod grid;
+pub mod state;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::config::Manifest;
+use crate::data::TaskData;
+use crate::runtime::{Executable, Runtime, WeightCache};
+use crate::tensor::Tensor;
+use crate::Result;
+
+pub use grid::{GridResult, GridSearch, RunResult};
+pub use state::TrainState;
+
+/// Hyperparameters of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub seed: u64,
+    pub max_epochs: usize,
+    pub patience: usize,
+    /// Cap on optimizer steps (0 = unlimited); keeps smoke runs fast.
+    pub max_steps: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { lr: 1e-3, seed: 0, max_epochs: 20, patience: 5, max_steps: 0 }
+    }
+}
+
+/// Outcome of one run.
+pub struct TrainResult {
+    pub best_metric: f64,
+    pub best_epoch: usize,
+    pub epochs_run: usize,
+    pub steps_run: usize,
+    /// Mean loss per train call, in order (the e2e loss curve).
+    pub losses: Vec<f32>,
+    /// Trainable tensors at the best dev epoch, keyed `t.<name>`.
+    pub best_state: BTreeMap<String, Tensor>,
+}
+
+/// Drives one (model, method, hp) pair over one task.
+pub struct Trainer {
+    train_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    weights: Arc<WeightCache>,
+}
+
+impl Trainer {
+    pub fn new(
+        runtime: &Arc<Runtime>,
+        manifest: &Manifest,
+        weights: Arc<WeightCache>,
+        train_stem: &str,
+        eval_stem: &str,
+    ) -> Result<Trainer> {
+        let train_exe = runtime.load(manifest, train_stem)?;
+        let eval_exe = runtime.load(manifest, eval_stem)?;
+        if train_exe.spec.trainable_order.is_empty() {
+            bail!("{train_stem} is not a training artifact");
+        }
+        Ok(Trainer { train_exe, eval_exe, weights })
+    }
+
+    pub fn spec(&self) -> &crate::config::ArtifactSpec {
+        &self.train_exe.spec
+    }
+
+    /// Run the full protocol on one task.
+    pub fn run(&self, task: &TaskData, cfg: &TrainConfig) -> Result<TrainResult> {
+        let spec = &self.train_exe.spec;
+        let (k, b, n) = (spec.steps_per_call, spec.batch, spec.seq);
+        if task.train.is_empty() || task.dev.is_empty() {
+            bail!("task {} has empty splits", task.name);
+        }
+        if task.train[0].ids.len() != n {
+            bail!(
+                "task {} packs to seq {}, artifact expects {}",
+                task.name,
+                task.train[0].ids.len(),
+                n
+            );
+        }
+
+        let mut state = TrainState::init(spec, &self.weights, cfg.seed)?;
+        let mut rng = crate::util::Pcg64::new(cfg.seed).fold(0x7EA1);
+
+        let mut best_metric = f64::NEG_INFINITY;
+        let mut best_epoch = 0;
+        let mut best_state = state.trainable_map(spec);
+        let mut losses = Vec::new();
+        let mut epochs_run = 0;
+        let mut steps_run = 0;
+        let mut since_best = 0;
+
+        'outer: for epoch in 0..cfg.max_epochs {
+            epochs_run = epoch + 1;
+            let order = rng.permutation(task.train.len());
+            // Pack the epoch into K-step super-batches of b examples.
+            let mut cursor = 0;
+            while cursor < order.len() {
+                let needed = k * b;
+                let mut ids = Vec::with_capacity(needed * n);
+                let mut mask = Vec::with_capacity(needed * n);
+                let mut labels = Vec::with_capacity(needed);
+                for slot in 0..needed {
+                    // wrap around so every super-batch is full
+                    let ex = &task.train[order[(cursor + slot) % order.len()]];
+                    ids.extend_from_slice(&ex.ids);
+                    mask.extend_from_slice(&ex.mask);
+                    labels.push(ex.label);
+                }
+                cursor += needed;
+
+                let loss = self.train_call(
+                    &mut state,
+                    Tensor::from_i32(&[k, b, n], ids),
+                    Tensor::from_f32(&[k, b, n], mask),
+                    Tensor::from_f32(&[k, b], labels),
+                    cfg,
+                )?;
+                losses.push(loss);
+                steps_run += k;
+                if cfg.max_steps > 0 && steps_run >= cfg.max_steps {
+                    let metric = self.evaluate(task, &state)?;
+                    if metric > best_metric {
+                        best_metric = metric;
+                        best_epoch = epochs_run;
+                        best_state = state.trainable_map(spec);
+                    }
+                    break 'outer;
+                }
+            }
+
+            let metric = self.evaluate(task, &state)?;
+            if metric > best_metric {
+                best_metric = metric;
+                best_epoch = epochs_run;
+                best_state = state.trainable_map(spec);
+                since_best = 0;
+            } else {
+                since_best += 1;
+                // Paper protocol: stop once the dev score has not improved
+                // for `patience` evaluations (Appendix Table 6).
+                if since_best >= cfg.patience {
+                    break;
+                }
+            }
+        }
+
+        Ok(TrainResult {
+            best_metric,
+            best_epoch,
+            epochs_run,
+            steps_run,
+            losses,
+            best_state,
+        })
+    }
+
+    /// One train-executable invocation (K optimizer steps).
+    fn train_call(
+        &self,
+        state: &mut TrainState,
+        ids: Tensor,
+        mask: Tensor,
+        labels: Tensor,
+        cfg: &TrainConfig,
+    ) -> Result<f32> {
+        let spec = &self.train_exe.spec;
+        let mut args: Vec<Tensor> = Vec::with_capacity(spec.inputs.len());
+        for input in &spec.inputs {
+            let t = if let Some(name) = input.name.strip_prefix("w.") {
+                self.weights.host(name)?.clone()
+            } else if input.name.starts_with("t.")
+                || input.name.starts_with("m.")
+                || input.name.starts_with("v.")
+            {
+                state.take(&input.name)?
+            } else {
+                match input.name.as_str() {
+                    "in.step" => Tensor::scalar_i32(state.step),
+                    "in.ids" => ids.clone(),
+                    "in.mask" => mask.clone(),
+                    "in.labels" => labels.clone(),
+                    "in.lr" => Tensor::scalar_f32(cfg.lr),
+                    "in.seed" => Tensor::scalar_i32(cfg.seed as i32),
+                    other => bail!("unexpected train input {other}"),
+                }
+            };
+            args.push(t);
+        }
+        let outs = self.train_exe.run(&args)?;
+        state.absorb(spec, outs)?;
+        Ok(state.last_loss)
+    }
+
+    /// Dev-set evaluation with the eval executable; returns the task metric.
+    pub fn evaluate(&self, task: &TaskData, state: &TrainState) -> Result<f64> {
+        let preds = self.predict(&task.dev, state)?;
+        let gold: Vec<i64> = task.dev.iter().map(|e| e.label as i64).collect();
+        Ok(task.metric.compute(&preds, &gold))
+    }
+
+    /// Argmax predictions for a split.
+    pub fn predict(
+        &self,
+        examples: &[crate::data::Example],
+        state: &TrainState,
+    ) -> Result<Vec<i64>> {
+        let spec = &self.eval_exe.spec;
+        let (eb, n) = (spec.batch, spec.seq);
+        let mut preds: Vec<i64> = Vec::with_capacity(examples.len());
+        let mut cursor = 0;
+        while cursor < examples.len() {
+            let take = (examples.len() - cursor).min(eb);
+            let mut ids = Vec::with_capacity(eb * n);
+            let mut mask = Vec::with_capacity(eb * n);
+            for j in 0..eb {
+                let ex = &examples[cursor + j.min(take - 1)];
+                ids.extend_from_slice(&ex.ids);
+                mask.extend_from_slice(&ex.mask);
+            }
+            let mut args: Vec<Tensor> = Vec::with_capacity(spec.inputs.len());
+            for input in &spec.inputs {
+                let t = if let Some(name) = input.name.strip_prefix("w.") {
+                    self.weights.host(name)?.clone()
+                } else if input.name.starts_with("t.") {
+                    state.peek(&input.name)?.clone()
+                } else {
+                    match input.name.as_str() {
+                        "in.ids" => Tensor::from_i32(&[eb, n], ids.clone()),
+                        "in.mask" => Tensor::from_f32(&[eb, n], mask.clone()),
+                        other => bail!("unexpected eval input {other}"),
+                    }
+                };
+                args.push(t);
+            }
+            let outs = self.eval_exe.run(&args)?;
+            let logits = outs[0].as_f32()?;
+            let classes = logits.len() / eb;
+            for j in 0..take {
+                let row = &logits[j * classes..(j + 1) * classes];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i64)
+                    .unwrap_or(0);
+                preds.push(arg);
+            }
+            cursor += take;
+        }
+        Ok(preds)
+    }
+}

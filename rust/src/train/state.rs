@@ -1,0 +1,192 @@
+//! Training state: trainable tensors + Adam moments, materialized from the
+//! manifest's init specs with a seed (the paper's zero-init conventions
+//! live in those specs — see `python/compile/peft.py`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::config::{ArtifactSpec, InitKind};
+use crate::runtime::WeightCache;
+use crate::tensor::{DType, Tensor};
+use crate::util::Pcg64;
+use crate::Result;
+
+pub struct TrainState {
+    tensors: BTreeMap<String, Option<Tensor>>,
+    pub step: i32,
+    pub last_loss: f32,
+}
+
+impl TrainState {
+    /// Materialize fresh state for `seed`.
+    pub fn init(spec: &ArtifactSpec, weights: &WeightCache, seed: u64) -> Result<TrainState> {
+        if spec.init.is_empty() {
+            bail!("{}: artifact carries no init specs", spec.stem);
+        }
+        let mut rng = Pcg64::new(seed).fold(0x1217);
+        let mut tensors = BTreeMap::new();
+        for entry in &spec.init {
+            let numel: usize = entry.shape.iter().product();
+            let t = match entry.kind {
+                InitKind::Zeros => Tensor::zeros(DType::F32, &entry.shape),
+                InitKind::Normal => {
+                    Tensor::from_f32(&entry.shape, rng.normal_vec(numel, entry.std))
+                }
+                InitKind::Backbone => {
+                    // fine-tune: start from the backbone copy (`ft.<name>`).
+                    let src = entry
+                        .name
+                        .strip_prefix("ft.")
+                        .ok_or_else(|| anyhow!("backbone init on non-ft tensor {}", entry.name))?;
+                    let w = weights.host(src)?;
+                    w.check_shape(&entry.shape)?;
+                    w.clone()
+                }
+            };
+            tensors.insert(format!("t.{}", entry.name), Some(t));
+            tensors.insert(
+                format!("m.{}", entry.name),
+                Some(Tensor::zeros(DType::F32, &entry.shape)),
+            );
+            tensors.insert(
+                format!("v.{}", entry.name),
+                Some(Tensor::zeros(DType::F32, &entry.shape)),
+            );
+        }
+        Ok(TrainState { tensors, step: 0, last_loss: f32::NAN })
+    }
+
+    /// Move a tensor out (feeding the executable without a copy).
+    pub fn take(&mut self, name: &str) -> Result<Tensor> {
+        self.tensors
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("train state has no tensor {name}"))?
+            .take()
+            .ok_or_else(|| anyhow!("tensor {name} already taken this call"))
+    }
+
+    /// Borrow a tensor (eval path).
+    pub fn peek(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .and_then(|o| o.as_ref())
+            .ok_or_else(|| anyhow!("train state has no tensor {name}"))
+    }
+
+    /// Absorb a train call's outputs back into the state.
+    pub fn absorb(&mut self, spec: &ArtifactSpec, outs: Vec<Tensor>) -> Result<()> {
+        if outs.len() != spec.outputs.len() {
+            bail!("absorb: {} outputs, expected {}", outs.len(), spec.outputs.len());
+        }
+        for (name, value) in spec.outputs.iter().zip(outs) {
+            match name.as_str() {
+                "step" => self.step = value.as_i32()?[0],
+                "loss" => self.last_loss = value.as_f32()?[0],
+                _ => {
+                    let slot = self
+                        .tensors
+                        .get_mut(name)
+                        .ok_or_else(|| anyhow!("absorb: unknown output {name}"))?;
+                    *slot = Some(value);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy of the current trainable tensors (`t.*` only).
+    pub fn trainable_map(&self, spec: &ArtifactSpec) -> BTreeMap<String, Tensor> {
+        let mut out = BTreeMap::new();
+        for name in &spec.trainable_order {
+            let key = format!("t.{name}");
+            if let Some(Some(t)) = self.tensors.get(&key) {
+                out.insert(key, t.clone());
+            }
+        }
+        out
+    }
+
+    /// Replace trainable tensors (e.g. to resume from a best checkpoint).
+    pub fn load_trainable(&mut self, map: &BTreeMap<String, Tensor>) -> Result<()> {
+        for (k, v) in map {
+            let slot = self
+                .tensors
+                .get_mut(k)
+                .ok_or_else(|| anyhow!("load_trainable: unknown tensor {k}"))?;
+            *slot = Some(v.clone());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{InitSpec, TensorSpec};
+
+    fn fake_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            stem: "test".into(),
+            file: "/dev/null".into(),
+            kind: "train".into(),
+            model: "tiny".into(),
+            method: "aot-fc".into(),
+            batch: 2,
+            seq: 4,
+            rank: 2,
+            prefix: 0,
+            classes: 2,
+            steps_per_call: 1,
+            inputs: vec![TensorSpec {
+                name: "t.fc.w1".into(),
+                shape: vec![2, 3],
+                dtype: DType::F32,
+            }],
+            outputs: vec!["t.fc.w1".into(), "step".into(), "loss".into()],
+            trainable_order: vec!["fc.w1".into()],
+            init: vec![
+                InitSpec { name: "fc.w1".into(), shape: vec![2, 3], kind: InitKind::Normal, std: 0.02 },
+            ],
+        }
+    }
+
+    fn weights() -> WeightCache {
+        // No backbone needed for these specs; build an empty cache.
+        let rt = crate::runtime::Runtime::new().unwrap();
+        WeightCache::from_tensors(&rt, BTreeMap::new()).unwrap()
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let spec = fake_spec();
+        let w = weights();
+        let a = TrainState::init(&spec, &w, 5).unwrap();
+        let b = TrainState::init(&spec, &w, 5).unwrap();
+        let c = TrainState::init(&spec, &w, 6).unwrap();
+        assert_eq!(
+            a.peek("t.fc.w1").unwrap().as_f32().unwrap(),
+            b.peek("t.fc.w1").unwrap().as_f32().unwrap()
+        );
+        assert_ne!(
+            a.peek("t.fc.w1").unwrap().as_f32().unwrap(),
+            c.peek("t.fc.w1").unwrap().as_f32().unwrap()
+        );
+        // moments start at zero
+        assert!(a.peek("m.fc.w1").unwrap().as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn take_absorb_cycle() {
+        let spec = fake_spec();
+        let w = weights();
+        let mut s = TrainState::init(&spec, &w, 1).unwrap();
+        let t = s.take("t.fc.w1").unwrap();
+        assert!(s.take("t.fc.w1").is_err(), "double take must fail");
+        let outs = vec![t, Tensor::scalar_i32(1), Tensor::scalar_f32(0.5)];
+        s.absorb(&spec, outs).unwrap();
+        assert_eq!(s.step, 1);
+        assert_eq!(s.last_loss, 0.5);
+        assert!(s.peek("t.fc.w1").is_ok());
+    }
+}

@@ -1,0 +1,11 @@
+//! Small in-tree substrates (no external crates are available offline):
+//! RNG, statistics, thread pool, logging, wall-clock timing.
+
+pub mod log;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Timer;

@@ -1,0 +1,219 @@
+//! Statistics used across the experiment harness: summaries (mean/std/
+//! median/percentiles) and the paper's task metrics (accuracy, F1,
+//! Matthews correlation, Pearson/Spearman) from Appendix Table 3.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (average of the middle two for even lengths).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Percentile in [0, 100] with linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[i64], gold: &[i64]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Binary F1 with `positive` as the positive class.
+pub fn f1_binary(pred: &[i64], gold: &[i64], positive: i64) -> f64 {
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut fndash = 0.0;
+    for (&p, &g) in pred.iter().zip(gold) {
+        if p == positive && g == positive {
+            tp += 1.0;
+        } else if p == positive {
+            fp += 1.0;
+        } else if g == positive {
+            fndash += 1.0;
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fndash);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Macro-averaged F1 over the classes present in `gold`.
+pub fn f1_macro(pred: &[i64], gold: &[i64]) -> f64 {
+    let mut classes: Vec<i64> = gold.to_vec();
+    classes.sort_unstable();
+    classes.dedup();
+    if classes.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = classes.iter().map(|&c| f1_binary(pred, gold, c)).sum();
+    total / classes.len() as f64
+}
+
+/// Matthews correlation coefficient (CoLA's metric).
+pub fn matthews(pred: &[i64], gold: &[i64]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fndash) = (0.0f64, 0.0, 0.0, 0.0);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p != 0, g != 0) {
+            (true, true) => tp += 1.0,
+            (false, false) => tn += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fndash += 1.0,
+        }
+    }
+    let denom = ((tp + fp) * (tp + fndash) * (tn + fp) * (tn + fndash)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fndash) / denom
+    }
+}
+
+/// Pearson correlation (STS-B).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        num += (a - mx) * (b - my);
+        dx += (a - mx) * (a - mx);
+        dy += (b - my) * (b - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx.sqrt() * dy.sqrt())
+    }
+}
+
+/// Spearman rank correlation (STS-B). Average ranks for ties.
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((std(&xs) - 1.118033988749895).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn accuracy_and_f1() {
+        let gold = [1, 1, 0, 0, 1];
+        let pred = [1, 0, 0, 1, 1];
+        assert!((accuracy(&pred, &gold) - 0.6).abs() < 1e-12);
+        // tp=2 fp=1 fn=1 -> precision 2/3, recall 2/3, f1 2/3
+        assert!((f1_binary(&pred, &gold, 1) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        let gold = [1, 0, 1, 0];
+        assert!((matthews(&gold, &gold) - 1.0).abs() < 1e-12);
+        let inv = [0, 1, 0, 1];
+        assert!((matthews(&inv, &gold) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_linear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone => rho = 1
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let x = [1.0, 2.0, 2.0, 3.0];
+        let y = [1.0, 2.0, 2.0, 3.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+}

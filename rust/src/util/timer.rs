@@ -1,0 +1,54 @@
+//! Wall-clock timing helpers for the bench harness.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.millis() >= 4.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

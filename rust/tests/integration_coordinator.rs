@@ -1,0 +1,172 @@
+//! Integration: the multi-task coordinator end to end — registration,
+//! mixed-task batching exactness, metrics, error paths.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use aotpt::config::Manifest;
+use aotpt::coordinator::{Coordinator, CoordinatorConfig, Request, TaskRegistry};
+use aotpt::runtime::{Runtime, WeightCache};
+use aotpt::tensor::Tensor;
+use aotpt::util::Pcg64;
+
+fn setup() -> (Arc<Runtime>, Manifest, TaskRegistry, WeightCache) {
+    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let runtime = Runtime::new().unwrap();
+    let model = manifest.model("tiny").unwrap();
+    let weights = WeightCache::from_ckpt(
+        &runtime,
+        &aotpt::artifacts_dir().join("backbone_tiny.aotckpt"),
+    )
+    .unwrap();
+    let registry = TaskRegistry::new(
+        model.n_layers,
+        model.vocab_size,
+        model.d_model,
+        manifest.multitask_classes,
+    );
+    (runtime, manifest, registry, weights)
+}
+
+fn register_random_task(
+    registry: &mut TaskRegistry,
+    emb: &Tensor,
+    model: &aotpt::config::ModelInfo,
+    name: &str,
+    seed: u64,
+    classes: usize,
+) {
+    let (l, d, r) = (model.n_layers, model.d_model, 8);
+    let mut rng = Pcg64::new(seed);
+    let mut tr = BTreeMap::new();
+    tr.insert("t.fc.w1".into(), Tensor::from_f32(&[l, d, r], rng.normal_vec(l * d * r, 0.05)));
+    tr.insert("t.fc.b1".into(), Tensor::from_f32(&[l, r], rng.normal_vec(l * r, 0.02)));
+    tr.insert("t.fc.w2".into(), Tensor::from_f32(&[l, r, d], rng.normal_vec(l * r * d, 0.05)));
+    tr.insert("t.fc.b2".into(), Tensor::from_f32(&[l, d], rng.normal_vec(l * d, 0.02)));
+    tr.insert("t.head_w".into(), Tensor::from_f32(&[d, classes], rng.normal_vec(d * classes, 0.05)));
+    tr.insert("t.head_b".into(), Tensor::from_f32(&[classes], rng.normal_vec(classes, 0.05)));
+    registry.register_fc(name, emb, &tr).unwrap();
+}
+
+fn coordinator() -> Coordinator {
+    let (runtime, manifest, mut registry, weights) = setup();
+    let model = manifest.model("tiny").unwrap().clone();
+    let emb = weights.host("emb_tok").unwrap().clone();
+    register_random_task(&mut registry, &emb, &model, "a", 1, 2);
+    register_random_task(&mut registry, &emb, &model, "b", 2, 3);
+    Coordinator::new(
+        runtime,
+        &manifest,
+        registry,
+        CoordinatorConfig { model: "tiny".into(), linger_ms: 5, signature: "aot".into() },
+    )
+    .unwrap()
+}
+
+fn ids(seed: u64, len: usize) -> Vec<i32> {
+    let mut rng = Pcg64::new(seed);
+    let mut v = vec![aotpt::tokenizer::CLS];
+    for _ in 0..len {
+        v.push(rng.range(5, 8192) as i32);
+    }
+    v
+}
+
+#[test]
+fn classify_returns_task_class_count() {
+    let c = coordinator();
+    let ra = c.classify("a", ids(3, 10)).unwrap();
+    assert_eq!(ra.logits.len(), 2);
+    let rb = c.classify("b", ids(3, 10)).unwrap();
+    assert_eq!(rb.logits.len(), 3);
+    assert!(ra.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn mixed_task_batch_equals_solo() {
+    let c = coordinator();
+    let ia = ids(4, 12);
+    let ib = ids(5, 9);
+    let solo_a = c.classify("a", ia.clone()).unwrap().logits;
+    let solo_b = c.classify("b", ib.clone()).unwrap().logits;
+    // Submit together so they share one invocation.
+    let rx_a = c.submit(Request { task: "a".into(), ids: ia }).unwrap();
+    let rx_b = c.submit(Request { task: "b".into(), ids: ib }).unwrap();
+    let mixed_a = rx_a.recv().unwrap().unwrap();
+    let mixed_b = rx_b.recv().unwrap().unwrap();
+    for (s, m) in solo_a.iter().zip(&mixed_a.logits) {
+        assert!((s - m).abs() < 1e-4, "{s} vs {m}");
+    }
+    for (s, m) in solo_b.iter().zip(&mixed_b.logits) {
+        assert!((s - m).abs() < 1e-4, "{s} vs {m}");
+    }
+}
+
+#[test]
+fn unknown_task_and_bad_lengths_rejected() {
+    let c = coordinator();
+    assert!(c.classify("nope", ids(1, 5)).is_err());
+    assert!(c.submit(Request { task: "a".into(), ids: vec![] }).is_err());
+    let too_long = ids(1, 4000);
+    assert!(c.submit(Request { task: "a".into(), ids: too_long }).is_err());
+}
+
+#[test]
+fn zero_table_task_equals_frozen_backbone_plus_head() {
+    // A zero P table must not perturb the backbone at all: two zero-table
+    // tasks with the same head give identical logits for the same input.
+    let (runtime, manifest, mut registry, _weights) = setup();
+    let model = manifest.model("tiny").unwrap().clone();
+    let mut rng = Pcg64::new(9);
+    let head_w = Tensor::from_f32(&[model.d_model, 2], rng.normal_vec(model.d_model * 2, 0.05));
+    let head_b = Tensor::from_f32(&[2], vec![0.1, -0.1]);
+    registry.register_zero("z1", &head_w, &head_b).unwrap();
+    registry.register_zero("z2", &head_w, &head_b).unwrap();
+    let c = Coordinator::new(
+        runtime,
+        &manifest,
+        registry,
+        CoordinatorConfig { model: "tiny".into(), linger_ms: 1, signature: "aot".into() },
+    )
+    .unwrap();
+    let input = ids(10, 8);
+    let r1 = c.classify("z1", input.clone()).unwrap();
+    let r2 = c.classify("z2", input).unwrap();
+    assert_eq!(r1.logits, r2.logits);
+}
+
+#[test]
+fn metrics_accumulate() {
+    let c = coordinator();
+    for i in 0..6 {
+        c.classify(if i % 2 == 0 { "a" } else { "b" }, ids(20 + i, 7)).unwrap();
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.requests, 6);
+    assert!(snap.batches >= 1 && snap.batches <= 6);
+    assert!(snap.mean_exec_ms > 0.0);
+    assert!(snap.gather_fraction >= 0.0 && snap.gather_fraction < 0.9);
+}
+
+#[test]
+fn concurrent_submitters_all_get_answers() {
+    let c = Arc::new(coordinator());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = Arc::clone(&c);
+        handles.push(std::thread::spawn(move || {
+            let task = if t % 2 == 0 { "a" } else { "b" };
+            let mut answers = Vec::new();
+            for i in 0..5 {
+                let resp = c.classify(task, ids(100 * t + i, 10)).unwrap();
+                answers.push(resp.argmax());
+            }
+            answers
+        }));
+    }
+    for h in handles {
+        let answers = h.join().unwrap();
+        assert_eq!(answers.len(), 5);
+    }
+    assert_eq!(c.metrics().snapshot().requests, 20);
+}

@@ -1,0 +1,226 @@
+//! Integration: the Rust training driver over AOT train-step executables.
+//! Loss must decrease, learned tasks must beat chance, fuse paths must
+//! agree, and the trained P must weight the task's cue tokens (§4.3).
+
+use std::sync::Arc;
+
+use aotpt::analyze;
+use aotpt::config::Manifest;
+use aotpt::data::{self, Lexicon};
+use aotpt::peft::fuse;
+use aotpt::runtime::{Runtime, WeightCache};
+use aotpt::tensor::Tensor;
+use aotpt::train::{grid, TrainConfig, Trainer};
+
+struct Ctx {
+    runtime: Arc<Runtime>,
+    manifest: Manifest,
+    weights: Arc<WeightCache>,
+    lex: Lexicon,
+}
+
+fn ctx() -> Ctx {
+    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let runtime = Runtime::new().unwrap();
+    let weights = Arc::new(
+        WeightCache::from_ckpt(&runtime, &aotpt::artifacts_dir().join("backbone_tiny.aotckpt"))
+            .unwrap(),
+    );
+    Ctx { runtime, manifest, weights, lex: Lexicon::generate(0) }
+}
+
+type Trained = (f64, Vec<f32>, std::collections::BTreeMap<String, Tensor>);
+
+fn train(c: &Ctx, method: &str, task_name: &str, steps: usize, seed: u64) -> Trained {
+    let classes = data::tasks::task_classes(task_name);
+    let task = data::make_task(&c.lex, task_name, 55, 384, 192, 64).unwrap();
+    let assignments = grid::assignments_for(&c.manifest, "tiny", method, classes, &[5e-3]);
+    let a = assignments.first().expect("artifact available");
+    let trainer =
+        Trainer::new(&c.runtime, &c.manifest, Arc::clone(&c.weights), &a.train_stem, &a.eval_stem)
+            .unwrap();
+    let result = trainer
+        .run(&task, &TrainConfig { lr: a.lr, seed, max_epochs: 8, patience: 4, max_steps: steps })
+        .unwrap();
+    (result.best_metric, result.losses, result.best_state)
+}
+
+#[test]
+fn aot_fc_learns_sst2_above_chance() {
+    let c = ctx();
+    let (metric, losses, _) = train(&c, "aot-fc", "sst2", 192, 0);
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+    assert!(metric > 0.65, "sst2 accuracy {metric} not above chance");
+}
+
+#[test]
+fn bitfit_learns_but_aot_fc_matches_or_beats_it() {
+    // The paper's core quality claim (Table 2): AoT P-Tuning outperforms
+    // BitFit.  At this scale we assert the weak ordering on a cue task.
+    let c = ctx();
+    let (bitfit, _, _) = train(&c, "bitfit", "sst2", 192, 0);
+    let (aot, _, _) = train(&c, "aot-fc", "sst2", 192, 0);
+    assert!(bitfit > 0.5, "bitfit should learn something: {bitfit}");
+    assert!(aot + 0.05 >= bitfit, "aot-fc {aot} far below bitfit {bitfit}");
+}
+
+#[test]
+fn training_is_seed_deterministic() {
+    let c = ctx();
+    let (m1, l1, _) = train(&c, "aot-fc", "rte", 64, 3);
+    let (m2, l2, _) = train(&c, "aot-fc", "rte", 64, 3);
+    assert_eq!(l1, l2);
+    assert!((m1 - m2).abs() < 1e-12);
+}
+
+#[test]
+fn fused_table_weights_cue_tokens() {
+    // §4.3 as a quantitative check: after training FC AoT on sst2, the
+    // top-norm rows of P must over-represent sentiment cue tokens.
+    let c = ctx();
+    let (_, _, state) = train(&c, "aot-fc", "sst2", 256, 0);
+    let emb = c.weights.host("emb_tok").unwrap();
+    let p = fuse::fuse_fc(emb, &state).unwrap();
+    let task = data::make_task(&c.lex, "sst2", 55, 8, 8, 64).unwrap();
+    let last = p.layers - 1;
+    let recall = analyze::cue_recall_at(&p, last, 50, &task.cue_tokens);
+    // cue tokens are 300 of 8192 (3.7%); any real signal blows past 10x.
+    assert!(recall > 0.3, "cue recall@50 only {recall}");
+}
+
+#[test]
+fn host_fuse_matches_hlo_fuse_artifact() {
+    // The two fuse paths (rust host math vs fuse_fc_*.hlo.txt) must agree.
+    let c = ctx();
+    let spec = c.manifest.artifact("fuse_fc_tiny_r32").unwrap();
+    let exe = c.runtime.load(&c.manifest, &spec.stem).unwrap();
+    let mut rng = aotpt::util::Pcg64::new(17);
+    let mut trained = std::collections::BTreeMap::new();
+    let mut args: Vec<Tensor> = Vec::new();
+    for input in &exe.spec.inputs {
+        let t = if input.name == "w.emb_tok" {
+            c.weights.host("emb_tok").unwrap().clone()
+        } else {
+            Tensor::from_f32(&input.shape, rng.normal_vec(input.numel(), 0.05))
+        };
+        if input.name.starts_with("t.") {
+            trained.insert(input.name.clone(), t.clone());
+        }
+        args.push(t);
+    }
+    let hlo_p = exe.run(&args).unwrap().remove(0);
+    let host_p = fuse::fuse_fc(c.weights.host("emb_tok").unwrap(), &trained).unwrap();
+    let hlo = hlo_p.as_f32().unwrap();
+    let vocab = c.manifest.vocab_size;
+    let d = c.manifest.model("tiny").unwrap().d_model;
+    for layer in 0..2 {
+        for tok in (0..vocab).step_by(997) {
+            let row = host_p.row(layer, tok);
+            let base = (layer * vocab + tok) * d;
+            for (i, &x) in row.iter().enumerate() {
+                let y = hlo[base + i];
+                assert!(
+                    (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                    "l{layer} t{tok} i{i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mlm_pretraining_reduces_loss() {
+    // The synthetic-pretraining substrate: a few MLM super-steps on the
+    // corpus must reduce the masked-token loss.
+    let c = ctx();
+    let spec = c.manifest.artifact("pretrain_tiny_mlm_b16n64").unwrap().clone();
+    let exe = c.runtime.load(&c.manifest, &spec.stem).unwrap();
+    let (k, b, n) = (spec.steps_per_call, spec.batch, spec.seq);
+    let corpus = data::corpus(&c.lex, 3, k * b * 4, n - 2);
+    let mut rng = aotpt::util::Pcg64::new(8);
+
+    // state = backbone copy; moments = zeros
+    let mut state: Vec<Tensor> = exe
+        .spec
+        .inputs
+        .iter()
+        .filter_map(|i| i.name.strip_prefix("t.").map(|nm| c.weights.host(nm).unwrap().clone()))
+        .collect();
+    let mut moments: Vec<Tensor> = exe
+        .spec
+        .inputs
+        .iter()
+        .filter(|i| i.name.starts_with("m.") || i.name.starts_with("v."))
+        .map(|i| Tensor::zeros(i.dtype, &i.shape))
+        .collect();
+    let mut step = 0i32;
+    let mut losses = Vec::new();
+
+    for call in 0..3 {
+        let mut ids = Vec::with_capacity(k * b * n);
+        let mut mask = Vec::with_capacity(k * b * n);
+        let mut labels = Vec::with_capacity(k * b * n);
+        for s in 0..k * b {
+            let sent = &corpus[(call * k * b + s) % corpus.len()];
+            let mut row = vec![aotpt::tokenizer::CLS];
+            row.extend_from_slice(sent);
+            row.push(aotpt::tokenizer::SEP);
+            row.truncate(n);
+            let used = row.len();
+            row.resize(n, aotpt::tokenizer::PAD);
+            for t in 0..n {
+                let tok = row[t];
+                let maskable = t > 0 && t + 1 < used;
+                if maskable && rng.bool(0.15) {
+                    labels.push(tok as f32);
+                    row[t] = aotpt::tokenizer::MASK;
+                } else {
+                    labels.push(-100.0);
+                }
+                mask.push(if t < used { 1.0 } else { 0.0 });
+            }
+            ids.extend_from_slice(&row);
+        }
+        let mut args: Vec<Tensor> = Vec::new();
+        let mut ti = 0;
+        let mut mi = 0;
+        for input in &exe.spec.inputs {
+            let t = if input.name.starts_with("t.") {
+                ti += 1;
+                state[ti - 1].clone()
+            } else if input.name.starts_with("m.") || input.name.starts_with("v.") {
+                mi += 1;
+                moments[mi - 1].clone()
+            } else {
+                match input.name.as_str() {
+                    "in.step" => Tensor::scalar_i32(step),
+                    "in.ids" => Tensor::from_i32(&[k, b, n], ids.clone()),
+                    "in.mask" => Tensor::from_f32(&[k, b, n], mask.clone()),
+                    "in.labels" => Tensor::from_f32(&[k, b, n], labels.clone()),
+                    "in.lr" => Tensor::scalar_f32(3e-4),
+                    other => panic!("unexpected input {other}"),
+                }
+            };
+            args.push(t);
+        }
+        let outs = exe.run(&args).unwrap();
+        let mut t_out = Vec::new();
+        let mut m_out = Vec::new();
+        for (name, value) in exe.spec.outputs.iter().zip(outs) {
+            if name == "step" {
+                step = value.as_i32().unwrap()[0];
+            } else if name == "loss" {
+                losses.push(value.as_f32().unwrap()[0]);
+            } else if name.starts_with("t.") {
+                t_out.push(value);
+            } else {
+                m_out.push(value);
+            }
+        }
+        state = t_out;
+        moments = m_out;
+    }
+    assert_eq!(losses.len(), 3);
+    assert!(losses[2] < losses[0], "MLM loss did not decrease: {losses:?}");
+    assert_eq!(step, 3 * k as i32);
+}

@@ -1,0 +1,152 @@
+//! Property tests (seeded-fuzz style, no proptest crate offline) on the
+//! coordinator's pure invariants: bucket selection, gather correctness,
+//! batch packing, EVP monotonicity, metric bounds.
+
+use aotpt::coordinator::{Bucket, BucketSet};
+use aotpt::peft::{PStore, TaskP};
+use aotpt::train::evp;
+use aotpt::util::{stats, Pcg64};
+
+const TRIALS: usize = 300;
+
+/// Invariant: `select` always returns a fitting bucket, minimal in padded
+/// area among the fitting ones.
+#[test]
+fn prop_bucket_selection_fits_and_is_minimal() {
+    let mut rng = Pcg64::new(1);
+    for _ in 0..TRIALS {
+        let n_buckets = rng.range(1, 8) as usize;
+        let buckets: Vec<Bucket> = (0..n_buckets)
+            .map(|_| Bucket {
+                batch: 1 << rng.range(0, 7),
+                seq: 8 << rng.range(0, 6),
+            })
+            .collect();
+        let set = BucketSet::new(buckets.clone());
+        let count = rng.range(1, 130) as usize;
+        let len = rng.range(1, 600) as usize;
+        match set.select(count, len) {
+            Ok(chosen) => {
+                assert!(chosen.batch >= count && chosen.seq >= len);
+                for b in set.all() {
+                    if b.batch >= count && b.seq >= len {
+                        assert!(
+                            chosen.batch * chosen.seq <= b.batch * b.seq,
+                            "chosen {chosen:?} not minimal vs {b:?}"
+                        );
+                    }
+                }
+            }
+            Err(_) => {
+                // Must only fail when NOTHING fits.
+                assert!(
+                    !set.all().iter().any(|b| b.batch >= count && b.seq >= len),
+                    "select failed though a bucket fits"
+                );
+            }
+        }
+    }
+}
+
+/// Invariant: gather output equals element-wise table lookup for random
+/// stores, assignments and id matrices.
+#[test]
+fn prop_gather_matches_lookup() {
+    let mut rng = Pcg64::new(2);
+    for trial in 0..60 {
+        let layers = rng.range(1, 4) as usize;
+        let vocab = rng.range(8, 64) as usize;
+        let d = (rng.range(1, 5) as usize) * 2;
+        let n_tasks = rng.range(1, 4) as usize;
+        let mut store = PStore::new(layers, vocab, d);
+        let names: Vec<String> = (0..n_tasks).map(|i| format!("t{i}")).collect();
+        for name in &names {
+            let data = rng.normal_vec(layers * vocab * d, 1.0);
+            store.insert(name, TaskP::new(layers, vocab, d, data).unwrap()).unwrap();
+        }
+        let b = rng.range(1, 6) as usize;
+        let n = rng.range(1, 12) as usize;
+        let assignments: Vec<&str> =
+            (0..b).map(|_| names[rng.below(n_tasks as u64) as usize].as_str()).collect();
+        let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, vocab as i64) as i32).collect();
+        let out = store.gather(&assignments, &ids, n).unwrap();
+        let data = out.as_f32().unwrap();
+        for layer in 0..layers {
+            for (j, task) in assignments.iter().enumerate() {
+                for t in 0..n {
+                    let tok = ids[j * n + t] as usize;
+                    let expect = store.get(task).unwrap().row(layer, tok);
+                    let base = ((layer * b + j) * n + t) * d;
+                    assert_eq!(&data[base..base + d], expect, "trial {trial}");
+                }
+            }
+        }
+    }
+}
+
+/// Invariant: EVP curves are monotone non-decreasing and bounded by the
+/// max score, for random score pools.
+#[test]
+fn prop_evp_monotone_and_bounded() {
+    let mut rng = Pcg64::new(3);
+    for _ in 0..TRIALS {
+        let n = rng.range(1, 40) as usize;
+        let scores: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let max = scores.iter().cloned().fold(f64::MIN, f64::max);
+        let curve = evp::evp_curve(&scores, 30);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12);
+        }
+        assert!(curve.last().unwrap().1 <= max + 1e-12);
+        let mean = scores.iter().sum::<f64>() / n as f64;
+        assert!((curve[0].1 - mean).abs() < 1e-9);
+    }
+}
+
+/// Invariant: every classification metric stays within its bounds on
+/// random prediction/gold pairs.
+#[test]
+fn prop_metrics_bounded() {
+    let mut rng = Pcg64::new(4);
+    for _ in 0..TRIALS {
+        let n = rng.range(2, 60) as usize;
+        let classes = rng.range(2, 4) as i64;
+        let gold: Vec<i64> = (0..n).map(|_| rng.range(0, classes)).collect();
+        let pred: Vec<i64> = (0..n).map(|_| rng.range(0, classes)).collect();
+        let acc = stats::accuracy(&pred, &gold);
+        assert!((0.0..=1.0).contains(&acc));
+        let f1 = stats::f1_macro(&pred, &gold);
+        assert!((0.0..=1.0).contains(&f1));
+        let mcc = stats::matthews(&pred, &gold);
+        assert!((-1.0..=1.0).contains(&mcc));
+        let gf: Vec<f64> = gold.iter().map(|&x| x as f64).collect();
+        let pf: Vec<f64> = pred.iter().map(|&x| x as f64).collect();
+        let rho = stats::spearman(&pf, &gf);
+        assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&rho));
+    }
+}
+
+/// Invariant: the pack_pair layout always starts with CLS, masks exactly
+/// the used prefix, and never exceeds the requested length.
+#[test]
+fn prop_pack_pair_layout() {
+    let mut rng = Pcg64::new(5);
+    for _ in 0..TRIALS {
+        let a_len = rng.range(0, 30) as usize;
+        let b_len = rng.range(0, 30) as usize;
+        let seq = rng.range(4, 70) as usize;
+        let a: Vec<i32> = (0..a_len).map(|_| rng.range(5, 100) as i32).collect();
+        let b: Vec<i32> = (0..b_len).map(|_| rng.range(5, 100) as i32).collect();
+        let with_b = rng.bool(0.5);
+        let (ids, mask) =
+            aotpt::tokenizer::pack_pair(&a, if with_b { Some(&b) } else { None }, seq);
+        assert_eq!(ids.len(), seq);
+        assert_eq!(mask.len(), seq);
+        assert_eq!(ids[0], aotpt::tokenizer::CLS);
+        // mask is a prefix of ones
+        let used = mask.iter().filter(|&&m| m > 0.0).count();
+        assert!(mask[..used].iter().all(|&m| m == 1.0));
+        assert!(mask[used..].iter().all(|&m| m == 0.0));
+        assert!(ids[used..].iter().all(|&i| i == aotpt::tokenizer::PAD));
+    }
+}
