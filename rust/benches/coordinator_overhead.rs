@@ -16,7 +16,10 @@ use aotpt::tensor::Tensor;
 use aotpt::util::Pcg64;
 
 fn main() {
-    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let Ok(manifest) = Manifest::load(&aotpt::artifacts_dir()) else {
+        eprintln!("coordinator_overhead: artifacts missing (run `make artifacts`); skipping");
+        return;
+    };
     let runtime = Runtime::new().unwrap();
     let model = manifest.model("small").unwrap().clone();
     let weights = WeightCache::from_ckpt(
@@ -44,13 +47,18 @@ fn main() {
         tr.insert("t.head_b".into(), Tensor::from_f32(&[2], vec![0.0; 2]));
         registry.register_fc(name, &emb, &tr).unwrap();
     }
-    let coordinator = Coordinator::new(
+    let coordinator = match Coordinator::new(
         Arc::clone(&runtime),
         &manifest,
         registry,
         CoordinatorConfig { model: "small".into(), linger_ms: 1, signature: "aot".into() },
-    )
-    .unwrap();
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("coordinator_overhead: cannot build PJRT coordinator ({e:#}); skipping");
+            return;
+        }
+    };
 
     let make_ids = |seed: u64| {
         let mut r = Pcg64::new(seed);
@@ -106,8 +114,15 @@ fn main() {
     ]);
     println!("{}", render_table(&["case", "mean ms", "iters"], &rows));
     println!(
-        "gather fraction of device work: {:.2}% (target: small) — {}",
+        "gather fraction of device work: {:.2}% (target: small; must stay below the \
+         pre-pipeline baseline) — {}",
         snap.gather_fraction * 100.0,
         snap.render()
+    );
+    println!(
+        "pipeline: backend={} arena allocs={} reuses={} (allocs must stay flat in steady state)",
+        coordinator.pipeline().backend_name(),
+        coordinator.pipeline().arena().allocs(),
+        coordinator.pipeline().arena().reuses(),
     );
 }

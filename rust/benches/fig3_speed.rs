@@ -11,7 +11,10 @@ use aotpt::experiments::speed;
 use aotpt::runtime::Runtime;
 
 fn main() {
-    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let Ok(manifest) = Manifest::load(&aotpt::artifacts_dir()) else {
+        eprintln!("fig3_speed: artifacts missing (run `make artifacts`); skipping");
+        return;
+    };
     let runtime = Runtime::new().unwrap();
     // b=64 @ n384 on `large` needs minutes/iteration on one core — the
     // bench covers b=1 and b=16; `aotpt exp fig3 --scale full` adds b=64.

@@ -8,7 +8,10 @@ use aotpt::experiments::speed;
 use aotpt::runtime::Runtime;
 
 fn main() {
-    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+    let Ok(manifest) = Manifest::load(&aotpt::artifacts_dir()) else {
+        eprintln!("fig8_speed: artifacts missing (run `make artifacts`); skipping");
+        return;
+    };
     let runtime = Runtime::new().unwrap();
     let mut all = Vec::new();
     for model in ["small", "base"] {

@@ -1,4 +1,5 @@
-//! Bucket selection for the dynamic batcher.
+//! Bucket selection for the dynamic batcher (consumed by the pipeline's
+//! batch-planning stage, `pipeline::BatchPlanner`).
 //!
 //! Artifacts are compiled for static (batch, seq) buckets; the batcher
 //! maps `(pending requests, max token length)` onto the cheapest bucket

@@ -1,25 +1,74 @@
-//! Serving metrics: request latency, batch sizes, and the split between
-//! the AoT gather and the backbone execute (the L3 perf targets of
-//! DESIGN.md §9).
+//! Serving metrics: request latency, batch sizes, per-stage timings and
+//! the split between the AoT gather and the backbone execute (the L3 perf
+//! targets of DESIGN.md §9).
+//!
+//! Storage is bounded: distributions live in fixed-capacity ring buffers
+//! (recent-window percentiles), while counts and time sums are monotonic
+//! totals — under sustained traffic the metrics footprint is constant.
+//! The staged pipeline additionally reports its queue depth and the
+//! gather-arena reuse/alloc counters.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats;
 
-#[derive(Default)]
+/// Ring capacity for each latency/size distribution (recent window).
+pub const WINDOW: usize = 1024;
+
+/// Fixed-capacity ring of f64 samples.
+struct Ring {
+    buf: Vec<f64>,
+    cap: usize,
+    next: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        assert!(cap > 0);
+        Ring { buf: Vec::with_capacity(cap), cap, next: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Samples currently held (unordered; fine for percentiles/means).
+    fn window(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
 struct MetricsInner {
-    request_latencies: Vec<f64>,
-    batch_sizes: Vec<usize>,
-    batch_total_secs: Vec<f64>,
-    gather_secs: Vec<f64>,
-    exec_secs: Vec<f64>,
+    request_latencies: Ring,
+    gather_secs: Ring,
+    exec_secs: Ring,
+    // Monotonic totals (never trimmed).
+    requests_total: u64,
+    batches_total: u64,
+    batch_rows_total: u64,
+    batch_secs_total: f64,
+    gather_secs_total: f64,
+    exec_secs_total: f64,
 }
 
 pub struct Metrics {
     inner: Mutex<MetricsInner>,
+    /// Requests admitted but not yet answered (pipeline queue depth).
+    queue_depth: AtomicUsize,
+    /// Latest arena counters, copied in by the pipeline after each batch.
+    arena_allocs: AtomicUsize,
+    arena_reuses: AtomicUsize,
 }
 
-/// A point-in-time summary.
+/// A point-in-time summary.  Counts are monotonic totals; millisecond
+/// figures are over the recent [`WINDOW`]-sample ring; `gather_fraction`
+/// is total gather time / total device-path time since startup.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub requests: usize,
@@ -32,43 +81,98 @@ pub struct MetricsSnapshot {
     /// gather / (gather + execute): must stay small — the coordinator's
     /// own work must not dominate the backbone (L3 target).
     pub gather_fraction: f64,
+    /// Total wall time spent processing batches since startup.
+    pub busy_secs: f64,
+    /// Admitted-but-unanswered requests at snapshot time (approximate
+    /// while a shutdown is racing in-flight work).
+    pub queue_depth: usize,
+    /// Gather-arena counters: fresh allocations (flat in steady state)
+    /// and pool hits.
+    pub arena_allocs: usize,
+    pub arena_reuses: usize,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics { inner: Mutex::new(MetricsInner::default()) }
+        Metrics {
+            inner: Mutex::new(MetricsInner {
+                request_latencies: Ring::new(WINDOW),
+                gather_secs: Ring::new(WINDOW),
+                exec_secs: Ring::new(WINDOW),
+                requests_total: 0,
+                batches_total: 0,
+                batch_rows_total: 0,
+                batch_secs_total: 0.0,
+                gather_secs_total: 0.0,
+                exec_secs_total: 0.0,
+            }),
+            queue_depth: AtomicUsize::new(0),
+            arena_allocs: AtomicUsize::new(0),
+            arena_reuses: AtomicUsize::new(0),
+        }
     }
 
     pub fn observe_request(&self, latency_secs: f64) {
-        self.inner.lock().unwrap().request_latencies.push(latency_secs);
+        let mut m = self.inner.lock().unwrap();
+        m.requests_total += 1;
+        m.request_latencies.push(latency_secs);
     }
 
     pub fn observe_batch(&self, size: usize, total: f64, gather: f64, exec: f64) {
         let mut m = self.inner.lock().unwrap();
-        m.batch_sizes.push(size);
-        m.batch_total_secs.push(total);
+        m.batches_total += 1;
+        m.batch_rows_total += size as u64;
+        m.batch_secs_total += total;
+        m.gather_secs_total += gather;
+        m.exec_secs_total += exec;
         m.gather_secs.push(gather);
         m.exec_secs.push(exec);
     }
 
+    /// Pipeline bookkeeping: a request entered the queue.
+    pub fn incr_queue_depth(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pipeline bookkeeping: a request was answered (ok or error).
+    pub fn decr_queue_depth(&self) {
+        // Saturating: shutdown sentinels never incremented.
+        let _ = self.queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            Some(d.saturating_sub(1))
+        });
+    }
+
+    /// Copy the gather-arena counters into the exported metrics.
+    pub fn set_arena_counters(&self, allocs: usize, reuses: usize) {
+        self.arena_allocs.store(allocs, Ordering::Relaxed);
+        self.arena_reuses.store(reuses, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
-        let sizes: Vec<f64> = m.batch_sizes.iter().map(|&s| s as f64).collect();
-        let gather_total: f64 = m.gather_secs.iter().sum();
-        let exec_total: f64 = m.exec_secs.iter().sum();
+        let gather_total = m.gather_secs_total;
+        let exec_total = m.exec_secs_total;
         MetricsSnapshot {
-            requests: m.request_latencies.len(),
-            batches: m.batch_sizes.len(),
-            mean_batch_size: stats::mean(&sizes),
-            latency_p50_ms: stats::percentile(&m.request_latencies, 50.0) * 1e3,
-            latency_p99_ms: stats::percentile(&m.request_latencies, 99.0) * 1e3,
-            mean_gather_ms: stats::mean(&m.gather_secs) * 1e3,
-            mean_exec_ms: stats::mean(&m.exec_secs) * 1e3,
+            requests: m.requests_total as usize,
+            batches: m.batches_total as usize,
+            mean_batch_size: if m.batches_total > 0 {
+                m.batch_rows_total as f64 / m.batches_total as f64
+            } else {
+                0.0
+            },
+            latency_p50_ms: stats::percentile(m.request_latencies.window(), 50.0) * 1e3,
+            latency_p99_ms: stats::percentile(m.request_latencies.window(), 99.0) * 1e3,
+            mean_gather_ms: stats::mean(m.gather_secs.window()) * 1e3,
+            mean_exec_ms: stats::mean(m.exec_secs.window()) * 1e3,
             gather_fraction: if gather_total + exec_total > 0.0 {
                 gather_total / (gather_total + exec_total)
             } else {
                 0.0
             },
+            busy_secs: m.batch_secs_total,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            arena_allocs: self.arena_allocs.load(Ordering::Relaxed),
+            arena_reuses: self.arena_reuses.load(Ordering::Relaxed),
         }
     }
 }
@@ -83,7 +187,8 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} p50={:.2}ms p99={:.2}ms \
-             gather={:.3}ms exec={:.3}ms gather_frac={:.1}%",
+             gather={:.3}ms exec={:.3}ms gather_frac={:.1}% queue={} \
+             arena_reuse={}/{}",
             self.requests,
             self.batches,
             self.mean_batch_size,
@@ -91,7 +196,10 @@ impl MetricsSnapshot {
             self.latency_p99_ms,
             self.mean_gather_ms,
             self.mean_exec_ms,
-            self.gather_fraction * 100.0
+            self.gather_fraction * 100.0,
+            self.queue_depth,
+            self.arena_reuses,
+            self.arena_reuses + self.arena_allocs,
         )
     }
 }
@@ -120,5 +228,44 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.gather_fraction, 0.0);
+        assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn rings_bound_memory_but_totals_keep_counting() {
+        let m = Metrics::new();
+        for i in 0..(3 * WINDOW) {
+            m.observe_request(i as f64);
+            m.observe_batch(1, 0.001, 0.0005, 0.0005);
+        }
+        let s = m.snapshot();
+        // Totals are exact even though the rings dropped old samples.
+        assert_eq!(s.requests, 3 * WINDOW);
+        assert_eq!(s.batches, 3 * WINDOW);
+        // The latency window only sees the most recent WINDOW samples.
+        let oldest_kept = (2 * WINDOW) as f64;
+        assert!(s.latency_p50_ms >= oldest_kept * 1e3);
+        assert!((s.gather_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_depth_saturates_at_zero() {
+        let m = Metrics::new();
+        m.decr_queue_depth();
+        assert_eq!(m.snapshot().queue_depth, 0);
+        m.incr_queue_depth();
+        m.incr_queue_depth();
+        m.decr_queue_depth();
+        assert_eq!(m.snapshot().queue_depth, 1);
+    }
+
+    #[test]
+    fn arena_counters_exported() {
+        let m = Metrics::new();
+        m.set_arena_counters(5, 95);
+        let s = m.snapshot();
+        assert_eq!(s.arena_allocs, 5);
+        assert_eq!(s.arena_reuses, 95);
+        assert!(s.render().contains("arena_reuse=95/100"));
     }
 }

@@ -5,29 +5,34 @@
 //!
 //! ```text
 //!            ┌────────────┐   per-task fused P (host RAM)
-//! requests → │   router    │   ┌──────────────┐
-//! (task,ids) │  + batcher  │ → │ AoT gather    │ → [ids,mask,bias,heads]
-//!            │ cross-task  │   │ P[l,ids,:]    │        │
+//! requests → │  admission  │   ┌──────────────┐
+//! (task,ids) │ + batch     │ → │ AoT gather    │ → [ids,mask,bias,heads]
+//!            │   planning  │   │ P[l,ids,:]    │        │
 //!            └────────────┘   └──────────────┘        ▼
-//!                                            PJRT executable (shared
+//!                                            device execute (shared
 //!                                            backbone, device-resident
-//!                                            weights) → logits → split
+//!                                            weights) → logits → fan-out
 //!                                            back per request
 //! ```
 //!
-//! * the **router/batcher** packs requests *from different tasks* into one
-//!   batch (the paper's multi-task inference claim);
+//! * the **admission/planning** stages pack requests *from different
+//!   tasks* into one batch (the paper's multi-task inference claim);
 //! * the **registry** holds per-task fused `P` (RAM) + classification
 //!   heads;
-//! * the **gather** is the ahead-of-time lookup the method is named for;
+//! * the **gather** is the ahead-of-time lookup the method is named for,
+//!   served from a reusable arena and parallel across layers;
 //! * Python is nowhere on this path.
+//!
+//! The stages live in [`pipeline`] as named, individually testable types
+//! (DESIGN.md §6); this module owns the worker thread, the linger-based
+//! flush loop and the public `submit`/`classify` API.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pipeline;
 pub mod registry;
 pub mod request;
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -37,13 +42,15 @@ use std::time::Instant;
 use anyhow::{anyhow, bail};
 
 use crate::config::Manifest;
-use crate::runtime::{Executable, Runtime, WeightCache};
-use crate::tensor::Tensor;
-use crate::tokenizer::PAD;
+use crate::runtime::Runtime;
 use crate::Result;
 
 pub use batcher::{Bucket, BucketSet};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use pipeline::{
+    Admission, Backend, BatchBuffers, BatchPlan, BatchPlanner, FanOut, GatherStage, HostBackend,
+    Pipeline, PjrtBackend, WorkItem,
+};
 pub use registry::{TaskRegistry, TaskState};
 pub use request::{Request, Response};
 
@@ -64,7 +71,8 @@ impl Default for CoordinatorConfig {
 }
 
 /// The coordinator. `submit` is thread-safe; one worker thread owns the
-/// PJRT execute loop (the CPU plugin is effectively single-streamed here).
+/// execute loop (the PJRT CPU plugin is effectively single-streamed here)
+/// and drives the staged pipeline batch by batch.
 pub struct Coordinator {
     inner: Arc<Inner>,
     worker: Mutex<Option<JoinHandle<()>>>,
@@ -72,29 +80,18 @@ pub struct Coordinator {
 }
 
 struct Inner {
-    runtime: Arc<Runtime>,
-    weights: WeightCache,
-    registry: TaskRegistry,
-    buckets: BucketSet,
-    executables: Mutex<HashMap<(usize, usize), Arc<Executable>>>,
-    manifest_dir: std::path::PathBuf,
-    stems: HashMap<(usize, usize), String>,
+    pipeline: Pipeline,
+    registry: Arc<TaskRegistry>,
+    metrics: Arc<Metrics>,
     cfg: CoordinatorConfig,
-    metrics: Metrics,
     running: AtomicBool,
-    d_model: usize,
-    classes: usize,
-}
-
-struct WorkItem {
-    request: Request,
-    enqueued: Instant,
-    respond: Sender<Result<Response>>,
 }
 
 impl Coordinator {
-    /// Build a coordinator for `cfg.model`, loading backbone weights and
-    /// discovering the bucket set from the manifest.
+    /// Build a PJRT-backed coordinator for `cfg.model`: load backbone
+    /// weights, discover the bucket set from the manifest and **prewarm**
+    /// (compile) every bucket executable up front — the request path never
+    /// touches the manifest or the compiler again.
     pub fn new(
         runtime: Arc<Runtime>,
         manifest: &Manifest,
@@ -102,38 +99,59 @@ impl Coordinator {
         cfg: CoordinatorConfig,
     ) -> Result<Coordinator> {
         let info = manifest.model(&cfg.model)?;
-        let weights = WeightCache::from_ckpt(
-            &runtime,
-            &manifest.dir.join(format!("backbone_{}.aotckpt", cfg.model)),
-        )?;
+        if registry.d_model() != info.d_model {
+            bail!(
+                "registry d_model {} != model {} d_model {}",
+                registry.d_model(),
+                cfg.model,
+                info.d_model
+            );
+        }
+        let (backend, buckets) = PjrtBackend::prewarm(&runtime, manifest, &cfg)?;
+        Self::with_backend(
+            registry,
+            buckets,
+            manifest.multitask_classes,
+            cfg,
+            Arc::new(backend),
+        )
+    }
 
-        // Discover serving buckets + artifact stems for this signature.
-        let mut stems = HashMap::new();
-        let mut buckets = Vec::new();
-        for a in manifest.find("fwd", &cfg.model, &cfg.signature) {
-            buckets.push(Bucket { batch: a.batch, seq: a.seq });
-            stems.insert((a.batch, a.seq), a.stem.clone());
-        }
+    /// Build a coordinator over an explicit bucket set and an arbitrary
+    /// execute backend (tests and accelerator-free builds use
+    /// [`HostBackend`]; production uses [`PjrtBackend`] via [`Self::new`]).
+    pub fn with_backend(
+        registry: TaskRegistry,
+        buckets: Vec<Bucket>,
+        classes: usize,
+        cfg: CoordinatorConfig,
+        backend: Arc<dyn Backend>,
+    ) -> Result<Coordinator> {
         if buckets.is_empty() {
-            bail!("no fwd_{}_{} artifacts in manifest", cfg.model, cfg.signature);
+            bail!("coordinator needs at least one serving bucket");
         }
+        let registry = Arc::new(registry);
+        let metrics = Arc::new(Metrics::new());
+        let gather_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let pipeline = Pipeline::new(
+            Arc::clone(&registry),
+            buckets,
+            classes,
+            backend,
+            Arc::clone(&metrics),
+            gather_threads,
+        );
 
         let (tx, rx) = channel::<WorkItem>();
         let inner = Arc::new(Inner {
-            runtime,
-            weights,
+            pipeline,
             registry,
-            buckets: BucketSet::new(buckets),
-            executables: Mutex::new(HashMap::new()),
-            manifest_dir: manifest.dir.clone(),
-            stems,
-            metrics: Metrics::new(),
-            running: AtomicBool::new(true),
-            d_model: info.d_model,
-            classes: manifest.multitask_classes,
+            metrics,
             cfg,
+            running: AtomicBool::new(true),
         });
-
         let worker_inner = Arc::clone(&inner);
         let worker = std::thread::Builder::new()
             .name("aotpt-coordinator".into())
@@ -148,18 +166,14 @@ impl Coordinator {
         if !self.inner.running.load(Ordering::SeqCst) {
             bail!("coordinator is shut down");
         }
-        self.inner.registry.get(&request.task)?; // fail fast on unknown task
-        if request.ids.is_empty() || request.ids.len() > self.inner.buckets.max_seq() {
-            bail!(
-                "request length {} outside (0, {}]",
-                request.ids.len(),
-                self.inner.buckets.max_seq()
-            );
-        }
+        self.inner.pipeline.admission.admit(&request)?;
         let (respond, receiver) = channel();
-        self.tx
-            .send(WorkItem { request, enqueued: Instant::now(), respond })
-            .map_err(|_| anyhow!("coordinator worker exited"))?;
+        self.inner.metrics.incr_queue_depth();
+        if self.tx.send(WorkItem { request, enqueued: Instant::now(), respond }).is_err() {
+            // Undo the increment: the item never reached the queue.
+            self.inner.metrics.decr_queue_depth();
+            bail!("coordinator worker exited");
+        }
         Ok(receiver)
     }
 
@@ -170,11 +184,17 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> &Metrics {
-        &self.inner.metrics
+        self.inner.metrics.as_ref()
     }
 
     pub fn registry(&self) -> &TaskRegistry {
-        &self.inner.registry
+        self.inner.registry.as_ref()
+    }
+
+    /// The staged pipeline (stage-level introspection: arena counters,
+    /// bucket limits, backend name).
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.inner.pipeline
     }
 
     /// Stop the worker and join it.
@@ -203,6 +223,7 @@ impl Drop for Coordinator {
 
 fn worker_loop(inner: Arc<Inner>, rx: Receiver<WorkItem>) {
     let linger = std::time::Duration::from_millis(inner.cfg.linger_ms);
+    let max_batch = inner.pipeline.max_batch();
     loop {
         // Block for the first item.
         let first = match rx.recv() {
@@ -215,7 +236,7 @@ fn worker_loop(inner: Arc<Inner>, rx: Receiver<WorkItem>) {
         let mut pending = vec![first];
         // Linger to accumulate batch-mates, bounded by the largest bucket.
         let deadline = Instant::now() + linger;
-        while pending.len() < inner.buckets.max_batch() {
+        while pending.len() < max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -230,159 +251,9 @@ fn worker_loop(inner: Arc<Inner>, rx: Receiver<WorkItem>) {
                 Err(_) => break,
             }
         }
-        execute_batch(&inner, pending);
+        inner.pipeline.process(pending);
         if !inner.running.load(Ordering::SeqCst) {
             break;
         }
     }
-}
-
-fn execute_batch(inner: &Arc<Inner>, items: Vec<WorkItem>) {
-    let t_batch = Instant::now();
-    match build_and_run(inner, &items) {
-        Ok((logits, bucket, gather_secs, exec_secs)) => {
-            let classes = inner.classes;
-            for (j, item) in items.iter().enumerate() {
-                let row = &logits[j * classes..(j + 1) * classes];
-                let state = inner.registry.get(&item.request.task).expect("validated");
-                let response = Response {
-                    logits: row[..state.classes].to_vec(),
-                    task: item.request.task.clone(),
-                    batch_size: items.len(),
-                    bucket_batch: bucket.batch,
-                    bucket_seq: bucket.seq,
-                };
-                inner
-                    .metrics
-                    .observe_request(item.enqueued.elapsed().as_secs_f64());
-                let _ = item.respond.send(Ok(response));
-            }
-            inner.metrics.observe_batch(
-                items.len(),
-                t_batch.elapsed().as_secs_f64(),
-                gather_secs,
-                exec_secs,
-            );
-        }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for item in items {
-                let _ = item.respond.send(Err(anyhow!("{msg}")));
-            }
-        }
-    }
-}
-
-/// Assemble the bucket inputs and run the backbone once for the batch.
-#[allow(clippy::type_complexity)]
-fn build_and_run(
-    inner: &Arc<Inner>,
-    items: &[WorkItem],
-) -> Result<(Vec<f32>, Bucket, f64, f64)> {
-    let count = items.len();
-    let max_len = items.iter().map(|i| i.request.ids.len()).max().unwrap_or(1);
-    let bucket = inner.buckets.select(count, max_len)?;
-    let (b, n) = (bucket.batch, bucket.seq);
-    let d = inner.d_model;
-    let classes = inner.classes;
-
-    // Pad ids/mask to the bucket; surplus rows repeat row 0's task with an
-    // all-PAD sequence (their logits are dropped after execute).
-    let mut ids = vec![PAD; b * n];
-    let mut mask = vec![0f32; b * n];
-    let mut assignments: Vec<&str> = Vec::with_capacity(b);
-    for (j, item) in items.iter().enumerate() {
-        let req = &item.request;
-        for (t, &tok) in req.ids.iter().enumerate() {
-            ids[j * n + t] = tok;
-            mask[j * n + t] = 1.0;
-        }
-        assignments.push(&req.task);
-    }
-    let filler_task = items[0].request.task.as_str();
-    for _ in count..b {
-        assignments.push(filler_task);
-    }
-
-    // Heads: [b, d, C] / [b, C], zero-padded to the multitask class count.
-    let mut head_w = vec![0f32; b * d * classes];
-    let mut head_b = vec![0f32; b * classes];
-    for (j, task) in assignments.iter().enumerate() {
-        let state = inner.registry.get(task)?;
-        for di in 0..d {
-            let src = &state.head_w[di * state.classes..(di + 1) * state.classes];
-            head_w[(j * d + di) * classes..(j * d + di) * classes + state.classes]
-                .copy_from_slice(src);
-        }
-        head_b[j * classes..j * classes + state.classes].copy_from_slice(&state.head_b);
-    }
-
-    // THE ahead-of-time gather (paper Equation 1's serving form).
-    let t_gather = Instant::now();
-    let bias = inner.registry.pstore().gather(&assignments, &ids, n)?;
-    let gather_secs = t_gather.elapsed().as_secs_f64();
-
-    let exe = load_bucket(inner, bucket)?;
-
-    // Assemble positional args: weights from the device cache, per-call
-    // tensors uploaded here.
-    let ids_t = Tensor::from_i32(&[b, n], ids);
-    let mask_t = Tensor::from_f32(&[b, n], mask);
-    let head_w_t = Tensor::from_f32(&[b, d, classes], head_w);
-    let head_b_t = Tensor::from_f32(&[b, classes], head_b);
-
-    let mut uploads = Vec::new();
-    for spec in &exe.spec.inputs {
-        let host: Option<&Tensor> = match spec.name.as_str() {
-            "in.ids" => Some(&ids_t),
-            "in.mask" => Some(&mask_t),
-            "in.bias" => Some(&bias),
-            "in.head_w" => Some(&head_w_t),
-            "in.head_b" => Some(&head_b_t),
-            _ => None,
-        };
-        match host {
-            Some(t) => uploads.push(Some(exe.upload(t)?)),
-            None => uploads.push(None),
-        }
-    }
-    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(exe.spec.inputs.len());
-    for (spec, upload) in exe.spec.inputs.iter().zip(&uploads) {
-        match upload {
-            Some(buf) => args.push(buf),
-            None => {
-                let name = spec
-                    .name
-                    .strip_prefix("w.")
-                    .ok_or_else(|| anyhow!("unexpected serving input {}", spec.name))?;
-                args.push(inner.weights.buffer(name)?);
-            }
-        }
-    }
-
-    let t_exec = Instant::now();
-    let outs = exe.run_buffers(&args)?;
-    let exec_secs = t_exec.elapsed().as_secs_f64();
-
-    let logits = outs[0].as_f32()?.to_vec();
-    Ok((logits, bucket, gather_secs, exec_secs))
-}
-
-fn load_bucket(inner: &Arc<Inner>, bucket: Bucket) -> Result<Arc<Executable>> {
-    let key = (bucket.batch, bucket.seq);
-    if let Some(exe) = inner.executables.lock().unwrap().get(&key) {
-        return Ok(Arc::clone(exe));
-    }
-    let stem = inner
-        .stems
-        .get(&key)
-        .ok_or_else(|| anyhow!("no artifact for bucket b{}n{}", bucket.batch, bucket.seq))?;
-    let manifest = Manifest::load(&inner.manifest_dir)?;
-    let exe = inner.runtime.load(&manifest, stem)?;
-    inner
-        .executables
-        .lock()
-        .unwrap()
-        .insert(key, Arc::clone(&exe));
-    Ok(exe)
 }

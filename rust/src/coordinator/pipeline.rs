@@ -1,0 +1,659 @@
+//! The staged serving pipeline (SionFlowRT-style explicit stages):
+//!
+//! ```text
+//! admission → batch planning → AoT gather → device execute → fan-out
+//! ```
+//!
+//! Each stage is a named type so it can be unit-tested, property-tested
+//! and benchmarked on its own (DESIGN.md §6):
+//!
+//! * [`Admission`] — rejects unknown tasks and out-of-range lengths at
+//!   submit time, before anything is queued;
+//! * [`BatchPlanner`] — selects the serving bucket for a set of pending
+//!   requests ([`BatchPlan`]) and stages ids/mask/heads into reusable
+//!   [`BatchBuffers`];
+//! * [`GatherStage`] — the ahead-of-time P-row gather (paper §3.3),
+//!   parallel across layers and skipping filler rows;
+//! * [`Backend`] — the device execute, behind a trait: [`PjrtBackend`]
+//!   runs prewarmed PJRT executables, [`HostBackend`] is a deterministic
+//!   CPU reference used by tests and accelerator-free builds;
+//! * [`FanOut`] — splits batch logits back into per-request responses.
+//!
+//! All large host staging buffers come from a [`GatherArena`], so the
+//! steady-state hot path performs no heap allocation (DESIGN.md §9).
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail};
+
+use crate::config::Manifest;
+use crate::peft::GatherArena;
+use crate::runtime::{Executable, Runtime, WeightCache};
+use crate::tokenizer::PAD;
+use crate::Result;
+
+use super::batcher::{Bucket, BucketSet};
+use super::metrics::Metrics;
+use super::registry::TaskRegistry;
+use super::request::{Request, Response};
+use super::CoordinatorConfig;
+
+/// One queued request plus its response channel.
+pub struct WorkItem {
+    pub request: Request,
+    pub enqueued: Instant,
+    pub respond: Sender<Result<Response>>,
+}
+
+/// The batch-planning decision for one flush: which bucket serves the
+/// pending requests, and which task each live row belongs to.  Filler
+/// rows (indices `live()..bucket.batch`) carry no task — they are skipped
+/// by the gather and their logits are dropped by the fan-out.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub bucket: Bucket,
+    /// Task of each live row, in submission order.
+    pub tasks: Vec<String>,
+}
+
+impl BatchPlan {
+    pub fn live(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+/// Reusable host staging buffers for one bucket, checked out of the
+/// [`GatherArena`] per batch and checked back in after the execute.
+pub struct BatchBuffers {
+    pub bucket: Bucket,
+    pub layers: usize,
+    pub d_model: usize,
+    /// The multitask class-pad width (serving artifact's head shape).
+    pub classes: usize,
+    /// `[b, n]` token ids, PAD-filled outside live tokens.
+    pub ids: Vec<i32>,
+    /// `[b, n]` attention mask (1.0 over live tokens).
+    pub mask: Vec<f32>,
+    /// `[l, b, n, d]` gathered AoT bias; filler rows may hold stale
+    /// (finite) values from earlier batches — backbone rows are
+    /// independent, and filler logits are dropped.
+    pub bias: Vec<f32>,
+    /// `[b, d, classes]` per-row head weights, zero-padded.
+    pub head_w: Vec<f32>,
+    /// `[b, classes]` per-row head biases, zero-padded.
+    pub head_b: Vec<f32>,
+}
+
+/// Stage 1: admission control, run on the submitter's thread.
+pub struct Admission {
+    registry: Arc<TaskRegistry>,
+    max_seq: usize,
+}
+
+impl Admission {
+    pub fn new(registry: Arc<TaskRegistry>, max_seq: usize) -> Admission {
+        Admission { registry, max_seq }
+    }
+
+    /// Fail fast on unknown tasks and lengths no bucket can hold.
+    pub fn admit(&self, request: &Request) -> Result<()> {
+        self.registry.get(&request.task)?;
+        if request.ids.is_empty() || request.ids.len() > self.max_seq {
+            bail!(
+                "request length {} outside (0, {}]",
+                request.ids.len(),
+                self.max_seq
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Stage 2: bucket selection + host-side batch assembly.
+pub struct BatchPlanner {
+    buckets: BucketSet,
+    registry: Arc<TaskRegistry>,
+}
+
+impl BatchPlanner {
+    pub fn new(buckets: BucketSet, registry: Arc<TaskRegistry>) -> BatchPlanner {
+        BatchPlanner { buckets, registry }
+    }
+
+    pub fn buckets(&self) -> &BucketSet {
+        &self.buckets
+    }
+
+    /// Pure planning: pick the minimal bucket that fits the pending
+    /// requests and record each live row's task.
+    pub fn plan(&self, requests: &[&Request]) -> Result<BatchPlan> {
+        if requests.is_empty() {
+            bail!("cannot plan an empty batch");
+        }
+        let max_len = requests.iter().map(|r| r.ids.len()).max().unwrap_or(1);
+        let bucket = self.buckets.select(requests.len(), max_len)?;
+        Ok(BatchPlan {
+            bucket,
+            tasks: requests.iter().map(|r| r.task.clone()).collect(),
+        })
+    }
+
+    /// Stage ids, mask and per-row heads into the buffers.  Every region
+    /// this stage owns is overwritten in full (ids/mask over the whole
+    /// bucket, heads zero-padded per row), so reused arena buffers never
+    /// leak previous batches into the inputs.
+    pub fn stage(
+        &self,
+        plan: &BatchPlan,
+        requests: &[&Request],
+        bufs: &mut BatchBuffers,
+    ) -> Result<()> {
+        let (b, n) = (plan.bucket.batch, plan.bucket.seq);
+        let (d, classes) = (bufs.d_model, bufs.classes);
+        if requests.len() != plan.live() {
+            bail!("stage: {} requests for a plan of {}", requests.len(), plan.live());
+        }
+        if plan.live() > b {
+            bail!("stage: {} live rows exceed bucket batch {b}", plan.live());
+        }
+
+        bufs.ids.fill(PAD);
+        bufs.mask.fill(0.0);
+        for (j, req) in requests.iter().enumerate() {
+            if req.ids.len() > n {
+                bail!("stage: request length {} exceeds bucket seq {n}", req.ids.len());
+            }
+            bufs.ids[j * n..j * n + req.ids.len()].copy_from_slice(&req.ids);
+            bufs.mask[j * n..j * n + req.ids.len()].fill(1.0);
+        }
+
+        // Heads: [b, d, C] / [b, C], zero-padded to the multitask class
+        // count; filler rows stay all-zero.
+        bufs.head_w.fill(0.0);
+        bufs.head_b.fill(0.0);
+        for (j, task) in plan.tasks.iter().enumerate() {
+            let state = self.registry.get(task)?;
+            for di in 0..d {
+                let src = &state.head_w[di * state.classes..(di + 1) * state.classes];
+                bufs.head_w[(j * d + di) * classes..(j * d + di) * classes + state.classes]
+                    .copy_from_slice(src);
+            }
+            bufs.head_b[j * classes..j * classes + state.classes]
+                .copy_from_slice(&state.head_b);
+        }
+        Ok(())
+    }
+}
+
+/// Stage 3: THE ahead-of-time gather (paper Equation 1's serving form),
+/// parallel across layers on scoped threads, skipping filler rows.
+pub struct GatherStage {
+    registry: Arc<TaskRegistry>,
+    threads: usize,
+}
+
+impl GatherStage {
+    pub fn new(registry: Arc<TaskRegistry>, threads: usize) -> GatherStage {
+        GatherStage { registry, threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn gather(&self, plan: &BatchPlan, bufs: &mut BatchBuffers) -> Result<()> {
+        let (b, n) = (bufs.bucket.batch, bufs.bucket.seq);
+        let assignments: Vec<&str> = plan.tasks.iter().map(String::as_str).collect();
+        self.registry.pstore().gather_batch(
+            &assignments,
+            &bufs.ids,
+            n,
+            b,
+            self.threads,
+            &mut bufs.bias,
+        )
+    }
+}
+
+/// Stage 4: the device execute, behind a trait so the pipeline can run
+/// against PJRT hardware or a host reference interchangeably.
+pub trait Backend: Send + Sync {
+    /// Run the backbone for one staged batch; returns flat logits
+    /// `[bucket.batch * classes]` (filler rows included, dropped later).
+    fn execute(&self, plan: &BatchPlan, bufs: &BatchBuffers) -> Result<Vec<f32>>;
+
+    /// Human-readable backend name (metrics/logs).
+    fn name(&self) -> &'static str;
+}
+
+/// PJRT-backed execute: device-resident backbone weights + prewarmed
+/// (compiled-at-startup) per-bucket executables.  No manifest re-reads
+/// and no compilation ever happen on the request path.
+pub struct PjrtBackend {
+    weights: WeightCache,
+    executables: HashMap<(usize, usize), Arc<Executable>>,
+}
+
+impl PjrtBackend {
+    /// The prewarm stage: load backbone weights onto the device and
+    /// compile every serving bucket of `(cfg.model, cfg.signature)` once,
+    /// up front.  Returns the backend plus the discovered bucket set.
+    pub fn prewarm(
+        runtime: &Arc<Runtime>,
+        manifest: &Manifest,
+        cfg: &CoordinatorConfig,
+    ) -> Result<(PjrtBackend, Vec<Bucket>)> {
+        let weights = WeightCache::from_ckpt(
+            runtime,
+            &manifest.dir.join(format!("backbone_{}.aotckpt", cfg.model)),
+        )?;
+        let mut buckets = Vec::new();
+        let mut executables = HashMap::new();
+        for a in manifest.find("fwd", &cfg.model, &cfg.signature) {
+            let exe = runtime.load(manifest, &a.stem)?;
+            buckets.push(Bucket { batch: a.batch, seq: a.seq });
+            executables.insert((a.batch, a.seq), exe);
+        }
+        if buckets.is_empty() {
+            bail!("no fwd_{}_{} artifacts in manifest", cfg.model, cfg.signature);
+        }
+        Ok((PjrtBackend { weights, executables }, buckets))
+    }
+
+    /// Compiled bucket executables (all of them, after prewarm).
+    pub fn bucket_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(&self, _plan: &BatchPlan, bufs: &BatchBuffers) -> Result<Vec<f32>> {
+        let (b, n) = (bufs.bucket.batch, bufs.bucket.seq);
+        let (l, d, classes) = (bufs.layers, bufs.d_model, bufs.classes);
+        let exe = self
+            .executables
+            .get(&(b, n))
+            .ok_or_else(|| anyhow!("no prewarmed executable for bucket b{b}n{n}"))?;
+
+        // Per-call tensors are uploaded straight from the arena buffers;
+        // weights come from the device-resident cache.
+        let mut uploads = Vec::with_capacity(exe.spec.inputs.len());
+        for spec in &exe.spec.inputs {
+            let upload = match spec.name.as_str() {
+                "in.ids" => Some(exe.upload_i32(&[b, n], &bufs.ids)?),
+                "in.mask" => Some(exe.upload_f32(&[b, n], &bufs.mask)?),
+                "in.bias" => Some(exe.upload_f32(&[l, b, n, d], &bufs.bias)?),
+                "in.head_w" => Some(exe.upload_f32(&[b, d, classes], &bufs.head_w)?),
+                "in.head_b" => Some(exe.upload_f32(&[b, classes], &bufs.head_b)?),
+                _ => None,
+            };
+            uploads.push(upload);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(exe.spec.inputs.len());
+        for (spec, upload) in exe.spec.inputs.iter().zip(&uploads) {
+            match upload {
+                Some(buf) => args.push(buf),
+                None => {
+                    let name = spec
+                        .name
+                        .strip_prefix("w.")
+                        .ok_or_else(|| anyhow!("unexpected serving input {}", spec.name))?;
+                    args.push(self.weights.buffer(name)?);
+                }
+            }
+        }
+        let outs = exe.run_buffers(&args)?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Deterministic host reference backend: a fixed pseudo-embedding bag
+/// model over unmasked tokens, plus the summed AoT bias, projected
+/// through the per-row head.  Rows are computed independently and masked
+/// positions are skipped entirely, so a row's logits are bit-identical
+/// whether it is served solo or packed into any mixed batch — exactly the
+/// invariant the concurrency tests assert.
+pub struct HostBackend;
+
+impl HostBackend {
+    fn pseudo_embed(tok: i32, k: usize) -> f32 {
+        ((tok as f32) * 0.013).sin() / (k as f32 + 1.0)
+    }
+}
+
+impl Backend for HostBackend {
+    fn execute(&self, plan: &BatchPlan, bufs: &BatchBuffers) -> Result<Vec<f32>> {
+        let (b, n) = (bufs.bucket.batch, bufs.bucket.seq);
+        let (l, d, classes) = (bufs.layers, bufs.d_model, bufs.classes);
+        let mut logits = vec![0f32; b * classes];
+        let mut h = vec![0f32; d];
+        for j in 0..plan.live() {
+            h.fill(0.0);
+            for t in 0..n {
+                if bufs.mask[j * n + t] == 0.0 {
+                    continue;
+                }
+                let tok = bufs.ids[j * n + t];
+                for (k, hk) in h.iter_mut().enumerate() {
+                    let mut bias_sum = 0.0f32;
+                    for layer in 0..l {
+                        bias_sum += bufs.bias[((layer * b + j) * n + t) * d + k];
+                    }
+                    *hk += Self::pseudo_embed(tok, k) + bias_sum;
+                }
+            }
+            for c in 0..classes {
+                let mut acc = bufs.head_b[j * classes + c];
+                for (k, hk) in h.iter().enumerate() {
+                    acc += hk * bufs.head_w[(j * d + k) * classes + c];
+                }
+                logits[j * classes + c] = acc;
+            }
+        }
+        Ok(logits)
+    }
+
+    fn name(&self) -> &'static str {
+        "host-reference"
+    }
+}
+
+/// Stage 5: split batch logits into per-request responses.
+pub struct FanOut {
+    registry: Arc<TaskRegistry>,
+    metrics: Arc<Metrics>,
+    classes: usize,
+}
+
+impl FanOut {
+    pub fn new(registry: Arc<TaskRegistry>, metrics: Arc<Metrics>, classes: usize) -> FanOut {
+        FanOut { registry, metrics, classes }
+    }
+
+    pub fn respond(&self, plan: &BatchPlan, items: &[WorkItem], logits: &[f32]) {
+        for (j, item) in items.iter().enumerate() {
+            let result = self.registry.get(&item.request.task).map(|state| {
+                let row = &logits[j * self.classes..(j + 1) * self.classes];
+                Response {
+                    logits: row[..state.classes].to_vec(),
+                    task: item.request.task.clone(),
+                    batch_size: items.len(),
+                    bucket_batch: plan.bucket.batch,
+                    bucket_seq: plan.bucket.seq,
+                }
+            });
+            self.metrics.observe_request(item.enqueued.elapsed().as_secs_f64());
+            self.metrics.decr_queue_depth();
+            let _ = item.respond.send(result);
+        }
+    }
+
+    /// Deliver one error to every pending item of a failed batch.
+    pub fn respond_error(&self, items: &[WorkItem], error: &anyhow::Error) {
+        let msg = format!("{error:#}");
+        for item in items {
+            self.metrics.decr_queue_depth();
+            let _ = item.respond.send(Err(anyhow!("{msg}")));
+        }
+    }
+}
+
+/// The assembled pipeline: owns every stage, the arena and the metrics.
+pub struct Pipeline {
+    pub admission: Admission,
+    planner: BatchPlanner,
+    gather: GatherStage,
+    backend: Arc<dyn Backend>,
+    fanout: FanOut,
+    arena: GatherArena,
+    metrics: Arc<Metrics>,
+    layers: usize,
+    d_model: usize,
+    classes: usize,
+}
+
+impl Pipeline {
+    pub fn new(
+        registry: Arc<TaskRegistry>,
+        buckets: Vec<Bucket>,
+        classes: usize,
+        backend: Arc<dyn Backend>,
+        metrics: Arc<Metrics>,
+        gather_threads: usize,
+    ) -> Pipeline {
+        let buckets = BucketSet::new(buckets);
+        let max_seq = buckets.max_seq();
+        Pipeline {
+            admission: Admission::new(Arc::clone(&registry), max_seq),
+            planner: BatchPlanner::new(buckets, Arc::clone(&registry)),
+            gather: GatherStage::new(Arc::clone(&registry), gather_threads),
+            backend,
+            fanout: FanOut::new(Arc::clone(&registry), Arc::clone(&metrics), classes),
+            arena: GatherArena::new(),
+            metrics,
+            layers: registry.layers(),
+            d_model: registry.d_model(),
+            classes,
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.planner.buckets().max_batch()
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.planner.buckets().max_seq()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn arena(&self) -> &GatherArena {
+        &self.arena
+    }
+
+    /// Run one flushed batch through planning → gather → execute →
+    /// fan-out, recording stage timings and arena counters.
+    pub fn process(&self, items: Vec<WorkItem>) {
+        let t_batch = Instant::now();
+        let requests: Vec<&Request> = items.iter().map(|i| &i.request).collect();
+        match self.run_stages(&requests) {
+            Ok((plan, logits, gather_secs, exec_secs)) => {
+                self.fanout.respond(&plan, &items, &logits);
+                self.metrics.observe_batch(
+                    items.len(),
+                    t_batch.elapsed().as_secs_f64(),
+                    gather_secs,
+                    exec_secs,
+                );
+            }
+            Err(e) => self.fanout.respond_error(&items, &e),
+        }
+        self.metrics.set_arena_counters(self.arena.allocs(), self.arena.reuses());
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn run_stages(&self, requests: &[&Request]) -> Result<(BatchPlan, Vec<f32>, f64, f64)> {
+        let plan = self.planner.plan(requests)?;
+        let mut bufs = self.checkout(plan.bucket);
+        let staged: Result<(Vec<f32>, f64, f64)> = (|| {
+            self.planner.stage(&plan, requests, &mut bufs)?;
+            let t_gather = Instant::now();
+            self.gather.gather(&plan, &mut bufs)?;
+            let gather_secs = t_gather.elapsed().as_secs_f64();
+            let t_exec = Instant::now();
+            let logits = self.backend.execute(&plan, &bufs)?;
+            let exec_secs = t_exec.elapsed().as_secs_f64();
+            Ok((logits, gather_secs, exec_secs))
+        })();
+        // Buffers go back to the arena on success AND failure.
+        self.check_in(bufs);
+        staged.map(|(logits, gather_secs, exec_secs)| (plan, logits, gather_secs, exec_secs))
+    }
+
+    /// Check a full buffer set out of the arena for one bucket.
+    pub fn checkout(&self, bucket: Bucket) -> BatchBuffers {
+        let (b, n) = (bucket.batch, bucket.seq);
+        let (l, d, c) = (self.layers, self.d_model, self.classes);
+        BatchBuffers {
+            bucket,
+            layers: l,
+            d_model: d,
+            classes: c,
+            ids: self.arena.take_i32(b, n, "ids", b * n),
+            mask: self.arena.take_f32(b, n, "mask", b * n),
+            bias: self.arena.take_f32(b, n, "bias", l * b * n * d),
+            head_w: self.arena.take_f32(b, n, "head_w", b * d * c),
+            head_b: self.arena.take_f32(b, n, "head_b", b * c),
+        }
+    }
+
+    /// Return a buffer set to the arena.
+    pub fn check_in(&self, bufs: BatchBuffers) {
+        let (b, n) = (bufs.bucket.batch, bufs.bucket.seq);
+        self.arena.put_i32(b, n, "ids", bufs.ids);
+        self.arena.put_f32(b, n, "mask", bufs.mask);
+        self.arena.put_f32(b, n, "bias", bufs.bias);
+        self.arena.put_f32(b, n, "head_w", bufs.head_w);
+        self.arena.put_f32(b, n, "head_b", bufs.head_b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn registry(layers: usize, vocab: usize, d: usize, classes: usize) -> Arc<TaskRegistry> {
+        let mut reg = TaskRegistry::new(layers, vocab, d, classes);
+        let head_w = Tensor::from_f32(&[d, 2], vec![0.1; d * 2]);
+        let head_b = Tensor::from_f32(&[2], vec![0.5, -0.5]);
+        reg.register_zero("a", &head_w, &head_b).unwrap();
+        reg.register_zero("b", &head_w, &head_b).unwrap();
+        Arc::new(reg)
+    }
+
+    fn buckets() -> Vec<Bucket> {
+        vec![
+            Bucket { batch: 1, seq: 8 },
+            Bucket { batch: 4, seq: 8 },
+            Bucket { batch: 4, seq: 16 },
+        ]
+    }
+
+    fn pipeline() -> Pipeline {
+        let reg = registry(2, 50, 4, 3);
+        Pipeline::new(
+            reg,
+            buckets(),
+            3,
+            Arc::new(HostBackend),
+            Arc::new(Metrics::new()),
+            2,
+        )
+    }
+
+    #[test]
+    fn admission_rejects_unknown_and_oversize() {
+        let p = pipeline();
+        assert!(p.admission.admit(&Request { task: "a".into(), ids: vec![1, 2] }).is_ok());
+        assert!(p.admission.admit(&Request { task: "nope".into(), ids: vec![1] }).is_err());
+        assert!(p.admission.admit(&Request { task: "a".into(), ids: vec![] }).is_err());
+        assert!(p.admission.admit(&Request { task: "a".into(), ids: vec![1; 17] }).is_err());
+    }
+
+    #[test]
+    fn planner_selects_bucket_and_stages_rows() {
+        let reg = registry(2, 50, 4, 3);
+        let planner = BatchPlanner::new(BucketSet::new(buckets()), Arc::clone(&reg));
+        let r1 = Request { task: "a".into(), ids: vec![1, 2, 3] };
+        let r2 = Request { task: "b".into(), ids: vec![4, 5] };
+        let reqs = [&r1, &r2];
+        let plan = planner.plan(&reqs).unwrap();
+        assert_eq!(plan.bucket, Bucket { batch: 4, seq: 8 });
+        assert_eq!(plan.tasks, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(plan.live(), 2);
+
+        let p = pipeline();
+        let mut bufs = p.checkout(plan.bucket);
+        // Poison the reusable regions to prove staging overwrites them.
+        bufs.ids.fill(77);
+        bufs.mask.fill(5.0);
+        bufs.head_w.fill(9.0);
+        planner.stage(&plan, &reqs, &mut bufs).unwrap();
+        assert_eq!(&bufs.ids[..3], &[1, 2, 3]);
+        assert_eq!(bufs.ids[3], PAD);
+        assert_eq!(&bufs.ids[8..10], &[4, 5]);
+        assert_eq!(&bufs.mask[..4], &[1.0, 1.0, 1.0, 0.0]);
+        // Row 2 and 3 are filler: fully PAD / zero.
+        assert!(bufs.ids[16..].iter().all(|&i| i == PAD));
+        assert!(bufs.mask[16..].iter().all(|&m| m == 0.0));
+        // Heads: classes=2 packed into the 3-wide pad; third column zero.
+        assert_eq!(bufs.head_b[0], 0.5);
+        assert_eq!(bufs.head_b[2], 0.0);
+        assert!(bufs.head_w[2 * 4 * 3..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn planner_rejects_mismatched_stage_inputs() {
+        let reg = registry(2, 50, 4, 3);
+        let planner = BatchPlanner::new(BucketSet::new(buckets()), Arc::clone(&reg));
+        let r1 = Request { task: "a".into(), ids: vec![1] };
+        let plan = planner.plan(&[&r1]).unwrap();
+        let p = pipeline();
+        let mut bufs = p.checkout(plan.bucket);
+        let r2 = Request { task: "b".into(), ids: vec![2] };
+        assert!(planner.stage(&plan, &[&r1, &r2], &mut bufs).is_err());
+    }
+
+    #[test]
+    fn host_backend_rows_are_independent() {
+        let p = pipeline();
+        let r1 = Request { task: "a".into(), ids: vec![7, 9] };
+        let r2 = Request { task: "b".into(), ids: vec![3, 4, 5] };
+
+        let solo = |req: &Request| -> Vec<f32> {
+            let plan = p.planner.plan(&[req]).unwrap();
+            let mut bufs = p.checkout(plan.bucket);
+            p.planner.stage(&plan, &[req], &mut bufs).unwrap();
+            p.gather.gather(&plan, &mut bufs).unwrap();
+            let logits = p.backend.execute(&plan, &bufs).unwrap();
+            p.check_in(bufs);
+            logits[..p.classes].to_vec()
+        };
+        let solo1 = solo(&r1);
+        let solo2 = solo(&r2);
+
+        let plan = p.planner.plan(&[&r1, &r2]).unwrap();
+        let mut bufs = p.checkout(plan.bucket);
+        p.planner.stage(&plan, &[&r1, &r2], &mut bufs).unwrap();
+        p.gather.gather(&plan, &mut bufs).unwrap();
+        let mixed = p.backend.execute(&plan, &bufs).unwrap();
+        p.check_in(bufs);
+
+        assert_eq!(&mixed[..p.classes], &solo1[..], "row 0 changed in a mixed batch");
+        assert_eq!(&mixed[p.classes..2 * p.classes], &solo2[..], "row 1 changed");
+    }
+
+    #[test]
+    fn checkout_reuses_after_check_in() {
+        let p = pipeline();
+        let bucket = Bucket { batch: 4, seq: 8 };
+        let before = p.arena().allocs();
+        let bufs = p.checkout(bucket);
+        p.check_in(bufs);
+        assert_eq!(p.arena().allocs(), before + 5);
+        let bufs = p.checkout(bucket);
+        p.check_in(bufs);
+        assert_eq!(p.arena().allocs(), before + 5, "second checkout must not allocate");
+        assert!(p.arena().reuses() >= 5);
+    }
+}

@@ -4,7 +4,7 @@
 //! training-time rank `r` (the paper's Figure 2 point).
 
 use std::collections::BTreeMap;
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, bail};
 
@@ -27,7 +27,7 @@ pub struct TaskRegistry {
     d_model: usize,
     max_classes: usize,
     pstore: PStore,
-    tasks: RwLock<BTreeMap<String, TaskState>>,
+    tasks: RwLock<BTreeMap<String, Arc<TaskState>>>,
 }
 
 impl TaskRegistry {
@@ -58,11 +58,11 @@ impl TaskRegistry {
         self.pstore.insert(name, p)?;
         self.tasks.write().unwrap().insert(
             name.to_string(),
-            TaskState {
+            Arc::new(TaskState {
                 classes,
                 head_w: head_w.as_f32()?.to_vec(),
                 head_b: head_b.as_f32()?.to_vec(),
-            },
+            }),
         );
         Ok(())
     }
@@ -107,7 +107,9 @@ impl TaskRegistry {
         )
     }
 
-    pub fn get(&self, name: &str) -> Result<TaskState> {
+    /// Cheap shared handle to a task's serving state (the hot path packs
+    /// heads straight from the shared slices — no per-lookup cloning).
+    pub fn get(&self, name: &str) -> Result<Arc<TaskState>> {
         self.tasks
             .read()
             .unwrap()
@@ -118,6 +120,23 @@ impl TaskRegistry {
 
     pub fn pstore(&self) -> &PStore {
         &self.pstore
+    }
+
+    /// Geometry accessors (the serving pipeline sizes buffers from these).
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    pub fn max_classes(&self) -> usize {
+        self.max_classes
     }
 
     pub fn task_names(&self) -> Vec<String> {

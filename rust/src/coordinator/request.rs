@@ -1,4 +1,6 @@
-//! Request/response types for the serving API.
+//! Request/response types for the serving API.  A `Request` enters the
+//! pipeline through the admission stage (`pipeline::Admission`); the
+//! matching `Response` leaves through the fan-out stage.
 
 /// A classification request: token ids already packed (`[CLS] … [SEP]`,
 /// unpadded — the batcher pads to the chosen bucket).

@@ -10,7 +10,15 @@
 //!   tasks from a single backbone executable (fused per-task `P` matrices
 //!   resident in host RAM, ahead-of-time row gather on the request path)
 //!   and a training driver that reproduces the paper's experimental
-//!   protocol by executing AOT train-step computations.
+//!   protocol by executing AOT train-step computations.  Serving runs as
+//!   a staged pipeline — admission → batch planning → AoT gather →
+//!   device execute → fan-out (`coordinator::pipeline`) — with all host
+//!   staging buffers drawn from a reusable [`peft::GatherArena`], so the
+//!   steady-state hot path allocates nothing.
+//!
+//! Builds without an accelerator use the in-tree `xla` CPU stub
+//! (`rust/xla`); enable the `pjrt` cargo feature with a vendored PJRT
+//! `xla` crate to execute real artifacts.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 

@@ -1,0 +1,187 @@
+//! The gather arena: per-bucket reusable host staging buffers.
+//!
+//! The serving hot path needs five host buffers per batch (token ids,
+//! attention mask, the gathered `[l, b, n, d]` AoT bias, and the packed
+//! per-row classification heads).  Allocating them per batch made the Rust
+//! side rival the backbone execute at small models — exactly the overhead
+//! the paper says AoT serving must not have.  The arena checks buffers out
+//! by `(batch, seq, slot)` key and checks them back in after the device
+//! execute, so the steady state performs **zero heap allocation** on the
+//! gather path (DESIGN.md §9; verified by the reuse counters and
+//! `benches/gather_hotpath.rs`).
+//!
+//! Lifecycle and staleness rules:
+//! * a buffer is zero-initialized once, when first allocated;
+//! * checked-in buffers keep their previous contents — every stage that
+//!   writes a slot either overwrites the full region it owns (ids, mask,
+//!   heads) or is allowed to leave stale-but-finite rows (the bias filler
+//!   rows, whose logits are dropped after execute);
+//! * geometry is part of the key, so a bucket change never resizes a
+//!   buffer in place; a stale-length buffer is dropped and re-allocated.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Identifies one staging slot of one serving bucket.
+type Key = (usize, usize, &'static str);
+
+/// Reusable pool of per-bucket staging buffers with reuse accounting.
+#[derive(Default)]
+pub struct GatherArena {
+    f32_pools: Mutex<HashMap<Key, Vec<Vec<f32>>>>,
+    i32_pools: Mutex<HashMap<Key, Vec<Vec<i32>>>>,
+    allocs: AtomicUsize,
+    reuses: AtomicUsize,
+}
+
+impl GatherArena {
+    pub fn new() -> GatherArena {
+        GatherArena::default()
+    }
+
+    /// Check out an f32 buffer of exactly `len` for `(batch, seq, slot)`.
+    /// Fresh buffers are zeroed; reused buffers keep prior contents.
+    pub fn take_f32(&self, batch: usize, seq: usize, slot: &'static str, len: usize) -> Vec<f32> {
+        let pooled = self
+            .f32_pools
+            .lock()
+            .unwrap()
+            .get_mut(&(batch, seq, slot))
+            .and_then(Vec::pop);
+        match pooled {
+            Some(buf) if buf.len() == len => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            _ => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Check an f32 buffer back in for later reuse.
+    pub fn put_f32(&self, batch: usize, seq: usize, slot: &'static str, buf: Vec<f32>) {
+        self.f32_pools
+            .lock()
+            .unwrap()
+            .entry((batch, seq, slot))
+            .or_default()
+            .push(buf);
+    }
+
+    /// Check out an i32 buffer of exactly `len` for `(batch, seq, slot)`.
+    pub fn take_i32(&self, batch: usize, seq: usize, slot: &'static str, len: usize) -> Vec<i32> {
+        let pooled = self
+            .i32_pools
+            .lock()
+            .unwrap()
+            .get_mut(&(batch, seq, slot))
+            .and_then(Vec::pop);
+        match pooled {
+            Some(buf) if buf.len() == len => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            _ => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0; len]
+            }
+        }
+    }
+
+    /// Check an i32 buffer back in for later reuse.
+    pub fn put_i32(&self, batch: usize, seq: usize, slot: &'static str, buf: Vec<i32>) {
+        self.i32_pools
+            .lock()
+            .unwrap()
+            .entry((batch, seq, slot))
+            .or_default()
+            .push(buf);
+    }
+
+    /// Buffers allocated fresh (should stay flat once every bucket has
+    /// been visited — the zero-alloc steady-state invariant).
+    pub fn allocs(&self) -> usize {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Buffers served from the pool without allocating.
+    pub fn reuses(&self) -> usize {
+        self.reuses.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently checked in, across all keys (tests/metrics).
+    pub fn pooled(&self) -> usize {
+        let f: usize = self.f32_pools.lock().unwrap().values().map(Vec::len).sum();
+        let i: usize = self.i32_pools.lock().unwrap().values().map(Vec::len).sum();
+        f + i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_then_reuse() {
+        let arena = GatherArena::new();
+        let a = arena.take_f32(4, 16, "bias", 64);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|&x| x == 0.0));
+        assert_eq!(arena.allocs(), 1);
+        assert_eq!(arena.reuses(), 0);
+
+        arena.put_f32(4, 16, "bias", a);
+        assert_eq!(arena.pooled(), 1);
+        let b = arena.take_f32(4, 16, "bias", 64);
+        assert_eq!(arena.allocs(), 1);
+        assert_eq!(arena.reuses(), 1);
+        assert_eq!(b.len(), 64);
+        assert_eq!(arena.pooled(), 0);
+    }
+
+    #[test]
+    fn reuse_keeps_contents() {
+        let arena = GatherArena::new();
+        let mut a = arena.take_f32(1, 8, "bias", 4);
+        a[2] = 7.0;
+        arena.put_f32(1, 8, "bias", a);
+        let b = arena.take_f32(1, 8, "bias", 4);
+        assert_eq!(b[2], 7.0, "checked-in buffers keep prior contents");
+    }
+
+    #[test]
+    fn distinct_keys_do_not_share() {
+        let arena = GatherArena::new();
+        arena.put_f32(1, 8, "bias", vec![1.0; 4]);
+        // Different bucket, different slot: both miss the pool.
+        let a = arena.take_f32(2, 8, "bias", 4);
+        assert!(a.iter().all(|&x| x == 0.0));
+        let b = arena.take_f32(1, 8, "mask", 4);
+        assert!(b.iter().all(|&x| x == 0.0));
+        assert_eq!(arena.allocs(), 2);
+    }
+
+    #[test]
+    fn stale_length_is_dropped_not_reused() {
+        let arena = GatherArena::new();
+        arena.put_f32(1, 8, "bias", vec![3.0; 5]);
+        let a = arena.take_f32(1, 8, "bias", 4);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|&x| x == 0.0));
+        assert_eq!(arena.allocs(), 1);
+        assert_eq!(arena.reuses(), 0);
+    }
+
+    #[test]
+    fn i32_pool_roundtrip() {
+        let arena = GatherArena::new();
+        let ids = arena.take_i32(2, 4, "ids", 8);
+        arena.put_i32(2, 4, "ids", ids);
+        let again = arena.take_i32(2, 4, "ids", 8);
+        assert_eq!(again.len(), 8);
+        assert_eq!(arena.reuses(), 1);
+    }
+}

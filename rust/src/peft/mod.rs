@@ -9,10 +9,14 @@
 //!   coordinator's hot path.
 //! * `fuse` — host-side implementations of the FC/Kronecker fuse math,
 //!   cross-checked against the `fuse_*` HLO artifacts in tests.
+//! * `arena` — reusable per-bucket staging buffers so the steady-state
+//!   serving gather allocates nothing (DESIGN.md §9).
 
+pub mod arena;
 pub mod fuse;
 pub mod store;
 
+pub use arena::GatherArena;
 pub use store::{PStore, TaskP};
 
 /// Every fine-tuning method of the paper (Table 1).

@@ -71,6 +71,10 @@ impl TaskP {
     }
 }
 
+/// Minimum live elements per layer before the gather fans out to scoped
+/// threads (below this, spawn overhead rivals the copy itself).
+const PARALLEL_MIN_ELEMS: usize = 16 * 1024;
+
 /// All registered tasks' tables.
 pub struct PStore {
     layers: usize,
@@ -115,6 +119,20 @@ impl PStore {
         self.tasks.values().map(|p| p.bytes()).sum()
     }
 
+    /// Table geometry accessors (the serving pipeline sizes its arena
+    /// buffers from these).
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
     /// THE hot path: gather bias `[l, b, n, d]` for a multi-task batch.
     ///
     /// `assignments[j]` names the task of batch row `j`; `ids` is the
@@ -132,7 +150,8 @@ impl PStore {
         Ok(Tensor::from_f32(&[self.layers, b, n, d], out))
     }
 
-    /// Allocation-free variant for a caller-managed buffer.
+    /// Allocation-free serial variant for a caller-managed buffer, one
+    /// assignment per bucket row (the pre-pipeline behavior).
     pub fn gather_into(
         &self,
         assignments: &[&str],
@@ -140,30 +159,109 @@ impl PStore {
         n: usize,
         out: &mut [f32],
     ) -> Result<()> {
-        let b = assignments.len();
+        self.gather_batch(assignments, ids, n, assignments.len(), 1, out)
+    }
+
+    /// The serving pipeline's gather: fill `out = [l, b, n, d]` for a
+    /// bucket of `b` rows of which only the first `assignments.len()` are
+    /// live requests.  Filler rows (their logits are dropped after the
+    /// execute) are skipped entirely — their region of `out` keeps
+    /// whatever finite values it held, which is safe because backbone
+    /// rows are computed independently.  Layers are gathered on up to
+    /// `threads` scoped threads.
+    ///
+    /// Token ids of live rows are validated against the vocabulary and
+    /// rejected with an error — a bad id must never panic the worker
+    /// (release builds would otherwise die on the slice bound).
+    pub fn gather_batch(
+        &self,
+        assignments: &[&str],
+        ids: &[i32],
+        n: usize,
+        b: usize,
+        threads: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let live = assignments.len();
         let d = self.d_model;
-        if out.len() != self.layers * b * n * d {
-            bail!("gather_into: output buffer has wrong length");
+        if live > b {
+            bail!("gather_batch: {live} live rows exceed bucket batch {b}");
         }
+        if ids.len() != b * n {
+            bail!("gather_batch: ids length {} != {b}x{n}", ids.len());
+        }
+        if out.len() != self.layers * b * n * d {
+            bail!(
+                "gather_batch: output length {} != {}x{b}x{n}x{d}",
+                out.len(),
+                self.layers
+            );
+        }
+        if live * n * d * self.layers == 0 {
+            return Ok(()); // degenerate geometry or no live rows: nothing to copy
+        }
+        self.validate_ids(&ids[..live * n])?;
         // Resolve tasks once per row, not once per token.
         let tables: Vec<&Arc<TaskP>> = assignments
             .iter()
             .map(|t| self.get(t))
             .collect::<Result<_>>()?;
-        for layer in 0..self.layers {
-            let layer_base = layer * b * n * d;
-            for (j, table) in tables.iter().enumerate() {
-                let row_base = layer_base + j * n * d;
-                for t in 0..n {
-                    let tok = ids[j * n + t];
-                    debug_assert!((tok as usize) < self.vocab);
-                    let src = table.row(layer, tok as usize);
-                    let dst = &mut out[row_base + t * d..row_base + (t + 1) * d];
-                    dst.copy_from_slice(src);
-                }
+
+        let layer_block = b * n * d;
+        // Scoped threads cost tens of microseconds to spawn; only go
+        // parallel when the per-layer copy is large enough to repay that
+        // (single-row/short-sequence batches stay serial).
+        let threads = if live * n * d < PARALLEL_MIN_ELEMS {
+            1
+        } else {
+            threads.clamp(1, self.layers)
+        };
+        if threads == 1 {
+            for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
+                gather_layer(&tables, layer, ids, n, d, layer_out);
+            }
+            return Ok(());
+        }
+        let layers_per = self.layers.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (chunk_idx, chunk) in out.chunks_mut(layers_per * layer_block).enumerate() {
+                let tables = &tables;
+                scope.spawn(move || {
+                    for (i, layer_out) in chunk.chunks_mut(layer_block).enumerate() {
+                        gather_layer(tables, chunk_idx * layers_per + i, ids, n, d, layer_out);
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+
+    fn validate_ids(&self, ids: &[i32]) -> Result<()> {
+        for &tok in ids {
+            if tok < 0 || tok as usize >= self.vocab {
+                bail!("token id {tok} outside vocabulary [0, {})", self.vocab);
             }
         }
         Ok(())
+    }
+}
+
+/// Copy one layer's rows for every live assignment (ids pre-validated).
+fn gather_layer(
+    tables: &[&Arc<TaskP>],
+    layer: usize,
+    ids: &[i32],
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    for (j, table) in tables.iter().enumerate() {
+        let row_base = j * n * d;
+        for t in 0..n {
+            let tok = ids[j * n + t] as usize;
+            let src = table.row(layer, tok);
+            out[row_base + t * d..row_base + (t + 1) * d].copy_from_slice(src);
+        }
     }
 }
 
@@ -241,5 +339,83 @@ mod tests {
     fn ram_accounting() {
         let s = store(2, 10, 4);
         assert_eq!(s.bytes(), 2 * 2 * 10 * 4 * 4);
+    }
+
+    #[test]
+    fn oov_token_is_an_error_not_a_panic() {
+        let s = store(2, 10, 4);
+        assert!(s.gather(&["a"], &[0, 9, 3], 3).is_ok());
+        let err = s.gather(&["a"], &[0, 10, 3], 3).unwrap_err();
+        assert!(err.to_string().contains("outside vocabulary"), "{err}");
+        assert!(s.gather(&["a"], &[0, -1, 3], 3).is_err());
+    }
+
+    #[test]
+    fn gather_batch_parallel_matches_serial() {
+        // live * n * d exceeds PARALLEL_MIN_ELEMS so the scoped-thread
+        // path actually runs (smaller batches fall back to serial).
+        let (l, v, d, b, n) = (5, 40, 64, 8, 40);
+        assert!(b * n * d >= super::PARALLEL_MIN_ELEMS);
+        let s = store(l, v, d);
+        let mut rng = Pcg64::new(3);
+        let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let assignments = ["a", "b", "a", "b", "a", "b", "a", "b"];
+        let mut serial = vec![0f32; l * b * n * d];
+        s.gather_into(&assignments, &ids, n, &mut serial).unwrap();
+        for threads in [2, 3, 8] {
+            let mut parallel = vec![0f32; l * b * n * d];
+            s.gather_batch(&assignments, &ids, n, b, threads, &mut parallel).unwrap();
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop_not_a_panic() {
+        let s = store(2, 10, 4);
+        // The seed's gather_into accepted empty assignment lists; the
+        // staged path must keep that a no-op.
+        let mut empty: Vec<f32> = Vec::new();
+        assert!(s.gather_into(&[], &[], 3, &mut empty).is_ok());
+        // No live rows in a real bucket: buffer untouched, no panic.
+        let mut out = vec![7.0f32; 2 * 2 * 3 * 4];
+        s.gather_batch(&[], &[0; 6], 3, 2, 4, &mut out).unwrap();
+        assert!(out.iter().all(|&x| x == 7.0));
+    }
+
+    #[test]
+    fn gather_batch_skips_filler_rows() {
+        let (l, v, d, b, n) = (2, 20, 4, 3, 5);
+        let s = store(l, v, d);
+        let mut rng = Pcg64::new(4);
+        let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let sentinel = 9.0f32;
+        let mut out = vec![sentinel; l * b * n * d];
+        // One live row out of three.
+        s.gather_batch(&["a"], &ids, n, b, 2, &mut out).unwrap();
+        let table = s.get("a").unwrap();
+        for layer in 0..l {
+            let layer_base = layer * b * n * d;
+            for t in 0..n {
+                let got = &out[layer_base + t * d..layer_base + (t + 1) * d];
+                assert_eq!(got, table.row(layer, ids[t] as usize));
+            }
+            // Filler rows 1..3 are untouched.
+            for x in &out[layer_base + n * d..layer_base + b * n * d] {
+                assert_eq!(*x, sentinel);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_batch_rejects_bad_geometry() {
+        let s = store(2, 10, 4);
+        let mut out = vec![0f32; 2 * 2 * 3 * 4];
+        // live > bucket rows
+        assert!(s.gather_batch(&["a", "b", "a"], &[0; 6], 3, 2, 1, &mut out).is_err());
+        // wrong ids length
+        assert!(s.gather_batch(&["a"], &[0; 5], 3, 2, 1, &mut out).is_err());
+        // wrong out length
+        let mut short = vec![0f32; 5];
+        assert!(s.gather_batch(&["a"], &[0; 6], 3, 2, 1, &mut short).is_err());
     }
 }

@@ -18,14 +18,30 @@ pub fn tensor_to_buffer(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjR
     // The typed entry point is used (not raw bytes): the crate's raw-bytes
     // variant passes the wrong enum discriminant to the C layer.
     match t.dtype {
-        DType::F32 => client
-            .buffer_from_host_buffer::<f32>(t.as_f32()?, &t.shape, None)
-            .map_err(wrap),
-        DType::I32 => client
-            .buffer_from_host_buffer::<i32>(t.as_i32()?, &t.shape, None)
-            .map_err(wrap),
+        DType::F32 => f32_to_buffer(client, &t.shape, t.as_f32()?),
+        DType::I32 => i32_to_buffer(client, &t.shape, t.as_i32()?),
         DType::I64 => Err(anyhow!("i64 upload not needed by any artifact")),
     }
+}
+
+/// Host f32 slice -> device buffer.  The serving hot path uploads straight
+/// from arena-managed buffers, so no `Tensor` (and no copy into one) is
+/// ever materialized per batch.
+pub fn f32_to_buffer(
+    client: &xla::PjRtClient,
+    dims: &[usize],
+    data: &[f32],
+) -> Result<xla::PjRtBuffer> {
+    client.buffer_from_host_buffer::<f32>(data, dims, None).map_err(wrap)
+}
+
+/// Host i32 slice -> device buffer (see [`f32_to_buffer`]).
+pub fn i32_to_buffer(
+    client: &xla::PjRtClient,
+    dims: &[usize],
+    data: &[i32],
+) -> Result<xla::PjRtBuffer> {
+    client.buffer_from_host_buffer::<i32>(data, dims, None).map_err(wrap)
 }
 
 /// Host literal -> host tensor.

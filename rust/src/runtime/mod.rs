@@ -26,7 +26,9 @@ use crate::config::{ArtifactSpec, Manifest};
 use crate::tensor::Tensor;
 use crate::Result;
 
-pub use literal::{literal_to_tensor, tensor_to_buffer, tensor_to_literal};
+pub use literal::{
+    f32_to_buffer, i32_to_buffer, literal_to_tensor, tensor_to_buffer, tensor_to_literal,
+};
 pub use weights::WeightCache;
 
 /// Shared PJRT client + compiled-executable cache.
@@ -146,6 +148,17 @@ impl Executable {
     /// Upload a host tensor to the device (for caller-managed buffers).
     pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
         tensor_to_buffer(&self.runtime.client, t)
+    }
+
+    /// Upload an f32 slice without materializing a `Tensor` (the staged
+    /// pipeline uploads arena buffers directly).
+    pub fn upload_f32(&self, dims: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        literal::f32_to_buffer(&self.runtime.client, dims, data)
+    }
+
+    /// Upload an i32 slice without materializing a `Tensor`.
+    pub fn upload_i32(&self, dims: &[usize], data: &[i32]) -> Result<xla::PjRtBuffer> {
+        literal::i32_to_buffer(&self.runtime.client, dims, data)
     }
 
     fn check_args(&self, args: &[Tensor]) -> Result<()> {

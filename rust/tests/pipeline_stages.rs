@@ -1,0 +1,185 @@
+//! Integration tests for the staged serving pipeline that need **no AOT
+//! artifacts and no accelerator**: the coordinator runs end to end over
+//! the deterministic [`HostBackend`], so admission, planning, the arena
+//! gather, execute dispatch and fan-out are all exercised in CI.
+
+use std::sync::Arc;
+
+use aotpt::coordinator::{
+    Bucket, Coordinator, CoordinatorConfig, HostBackend, Request, TaskRegistry,
+};
+use aotpt::peft::TaskP;
+use aotpt::tensor::Tensor;
+use aotpt::util::Pcg64;
+
+const LAYERS: usize = 3;
+const VOCAB: usize = 200;
+const D: usize = 8;
+const CLASSES: usize = 4;
+
+fn registry() -> TaskRegistry {
+    let mut reg = TaskRegistry::new(LAYERS, VOCAB, D, CLASSES);
+    let mut rng = Pcg64::new(42);
+    for (name, classes) in [("a", 2usize), ("b", 3usize)] {
+        let table = TaskP::new(LAYERS, VOCAB, D, rng.normal_vec(LAYERS * VOCAB * D, 0.5)).unwrap();
+        let head_w = Tensor::from_f32(&[D, classes], rng.normal_vec(D * classes, 0.2));
+        let head_b = Tensor::from_f32(&[classes], rng.normal_vec(classes, 0.2));
+        reg.register_fused(name, table, &head_w, &head_b).unwrap();
+    }
+    reg
+}
+
+fn buckets() -> Vec<Bucket> {
+    vec![
+        Bucket { batch: 1, seq: 16 },
+        Bucket { batch: 4, seq: 16 },
+        Bucket { batch: 16, seq: 16 },
+        Bucket { batch: 16, seq: 64 },
+    ]
+}
+
+fn coordinator(linger_ms: u64) -> Coordinator {
+    Coordinator::with_backend(
+        registry(),
+        buckets(),
+        CLASSES,
+        CoordinatorConfig { model: "host".into(), linger_ms, signature: "aot".into() },
+        Arc::new(HostBackend),
+    )
+    .unwrap()
+}
+
+fn ids(seed: u64, len: usize) -> Vec<i32> {
+    let mut rng = Pcg64::new(seed);
+    (0..len).map(|_| rng.range(0, VOCAB as i64) as i32).collect()
+}
+
+#[test]
+fn classify_returns_task_class_count() {
+    let c = coordinator(1);
+    let ra = c.classify("a", ids(1, 10)).unwrap();
+    assert_eq!(ra.logits.len(), 2);
+    let rb = c.classify("b", ids(2, 5)).unwrap();
+    assert_eq!(rb.logits.len(), 3);
+    assert!(ra.logits.iter().all(|x| x.is_finite()));
+    assert_eq!(c.pipeline().backend_name(), "host-reference");
+}
+
+#[test]
+fn admission_rejects_bad_requests() {
+    let c = coordinator(1);
+    assert!(c.classify("nope", ids(1, 5)).is_err());
+    assert!(c.submit(Request { task: "a".into(), ids: vec![] }).is_err());
+    assert!(c.submit(Request { task: "a".into(), ids: vec![1; 65] }).is_err());
+}
+
+#[test]
+fn mixed_task_batch_equals_solo_exactly() {
+    let c = coordinator(10);
+    let ia = ids(3, 12);
+    let ib = ids(4, 7);
+    let solo_a = c.classify("a", ia.clone()).unwrap().logits;
+    let solo_b = c.classify("b", ib.clone()).unwrap().logits;
+    let rx_a = c.submit(Request { task: "a".into(), ids: ia }).unwrap();
+    let rx_b = c.submit(Request { task: "b".into(), ids: ib }).unwrap();
+    let mixed_a = rx_a.recv().unwrap().unwrap();
+    let mixed_b = rx_b.recv().unwrap().unwrap();
+    // The host backend computes rows independently, so mixing tasks in a
+    // batch must be *bit-exact*, not just close.
+    assert_eq!(solo_a, mixed_a.logits);
+    assert_eq!(solo_b, mixed_b.logits);
+    assert!(mixed_a.batch_size >= 1);
+}
+
+/// The satellite concurrency test: many submitter threads, every response
+/// must equal a single-threaded reference run bit for bit.
+#[test]
+fn concurrent_submitters_match_single_threaded_reference() {
+    // Reference: a dedicated coordinator served one request at a time.
+    let reference = coordinator(0);
+    let cases: Vec<(String, Vec<i32>)> = (0..32)
+        .map(|i| {
+            let task = if i % 2 == 0 { "a" } else { "b" };
+            (task.to_string(), ids(1000 + i as u64, 3 + (i % 14)))
+        })
+        .collect();
+    let expected: Vec<Vec<f32>> = cases
+        .iter()
+        .map(|(task, ids)| reference.classify(task, ids.clone()).unwrap().logits)
+        .collect();
+
+    // Concurrent: 8 threads × 4 requests against one shared coordinator
+    // with a linger window that forces mixed batches.
+    let c = Arc::new(coordinator(3));
+    let cases = Arc::new(cases);
+    let expected = Arc::new(expected);
+    let mut handles = Vec::new();
+    for thread in 0..8usize {
+        let c = Arc::clone(&c);
+        let cases = Arc::clone(&cases);
+        let expected = Arc::clone(&expected);
+        handles.push(std::thread::spawn(move || {
+            for i in (thread * 4)..(thread * 4 + 4) {
+                let (task, ids) = &cases[i];
+                let got = c.classify(task, ids.clone()).unwrap();
+                assert_eq!(
+                    got.logits, expected[i],
+                    "request {i} diverged from the single-threaded reference"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.requests, 32);
+    assert_eq!(snap.queue_depth, 0, "queue must drain");
+    assert!(snap.batches <= 32);
+}
+
+#[test]
+fn out_of_vocab_token_errors_without_killing_worker() {
+    let c = coordinator(1);
+    let bad = vec![5, (VOCAB as i32) + 3, 7];
+    let err = c.classify("a", bad).unwrap_err();
+    assert!(err.to_string().contains("outside vocabulary"), "{err}");
+    // The worker survives and keeps serving.
+    let ok = c.classify("a", ids(9, 6)).unwrap();
+    assert_eq!(ok.logits.len(), 2);
+}
+
+#[test]
+fn steady_state_reuses_arena_buffers() {
+    let c = coordinator(0);
+    // Warm every slot of the bucket this shape selects.
+    c.classify("a", ids(20, 10)).unwrap();
+    let allocs_after_warm = c.pipeline().arena().allocs();
+    for i in 0..10 {
+        c.classify("a", ids(21 + i, 10)).unwrap();
+    }
+    assert_eq!(
+        c.pipeline().arena().allocs(),
+        allocs_after_warm,
+        "steady-state batches must not allocate staging buffers"
+    );
+    assert!(c.pipeline().arena().reuses() >= 50, "5 buffers x 10 batches");
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.arena_allocs, allocs_after_warm);
+}
+
+#[test]
+fn metrics_accumulate_and_shutdown_is_idempotent() {
+    let c = coordinator(1);
+    for i in 0..6 {
+        c.classify(if i % 2 == 0 { "a" } else { "b" }, ids(30 + i, 7)).unwrap();
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.requests, 6);
+    assert!(snap.batches >= 1 && snap.batches <= 6);
+    assert!(snap.mean_exec_ms >= 0.0);
+    assert!(snap.gather_fraction >= 0.0 && snap.gather_fraction <= 1.0);
+    c.shutdown();
+    c.shutdown();
+    assert!(c.classify("a", ids(1, 3)).is_err(), "post-shutdown submits fail");
+}

@@ -1,9 +1,16 @@
 //! Property tests (seeded-fuzz style, no proptest crate offline) on the
 //! coordinator's pure invariants: bucket selection, gather correctness,
-//! batch packing, EVP monotonicity, metric bounds.
+//! batch packing, staged-pipeline/legacy-assembly equivalence, EVP
+//! monotonicity, metric bounds.
 
-use aotpt::coordinator::{Bucket, BucketSet};
+use std::sync::Arc;
+
+use aotpt::coordinator::{
+    BatchBuffers, BatchPlanner, Bucket, BucketSet, GatherStage, Request, TaskRegistry,
+};
 use aotpt::peft::{PStore, TaskP};
+use aotpt::tensor::Tensor;
+use aotpt::tokenizer::PAD;
 use aotpt::train::evp;
 use aotpt::util::{stats, Pcg64};
 
@@ -80,6 +87,135 @@ fn prop_gather_matches_lookup() {
                     assert_eq!(&data[base..base + d], expect, "trial {trial}");
                 }
             }
+        }
+    }
+}
+
+/// Invariant: for random request mixes, the staged pipeline's batch plan
+/// and staged buffers equal the pre-refactor `build_and_run` assembly —
+/// same bucket, same padded ids/mask, same packed heads and same gathered
+/// bias for every live row.  (Filler rows are the one intended change:
+/// the legacy path gathered real data for them and packed row-0's head;
+/// the pipeline skips their gather and zeroes their head.)
+#[test]
+fn prop_staged_plan_matches_legacy_assembly() {
+    let mut rng = Pcg64::new(7);
+    for trial in 0..40 {
+        // Random geometry + registry.
+        let layers = rng.range(1, 4) as usize;
+        let vocab = rng.range(20, 60) as usize;
+        let d = (rng.range(1, 5) as usize) * 2;
+        let max_classes = 4usize;
+        let mut reg = TaskRegistry::new(layers, vocab, d, max_classes);
+        let n_tasks = rng.range(1, 4) as usize;
+        let names: Vec<String> = (0..n_tasks).map(|i| format!("t{i}")).collect();
+        for name in &names {
+            let classes = rng.range(2, 5) as usize;
+            let table =
+                TaskP::new(layers, vocab, d, rng.normal_vec(layers * vocab * d, 1.0)).unwrap();
+            let head_w = Tensor::from_f32(&[d, classes], rng.normal_vec(d * classes, 0.3));
+            let head_b = Tensor::from_f32(&[classes], rng.normal_vec(classes, 0.3));
+            reg.register_fused(name, table, &head_w, &head_b).unwrap();
+        }
+        let reg = Arc::new(reg);
+
+        let buckets = vec![
+            Bucket { batch: 1, seq: 8 },
+            Bucket { batch: 2, seq: 8 },
+            Bucket { batch: 4, seq: 16 },
+            Bucket { batch: 8, seq: 32 },
+        ];
+        let planner = BatchPlanner::new(BucketSet::new(buckets.clone()), Arc::clone(&reg));
+
+        // Random request mix that always fits the largest bucket.
+        let count = rng.range(1, 9) as usize;
+        let requests: Vec<Request> = (0..count)
+            .map(|_| Request {
+                task: names[rng.below(n_tasks as u64) as usize].clone(),
+                ids: (0..rng.range(1, 33) as usize)
+                    .map(|_| rng.range(0, vocab as i64) as i32)
+                    .collect(),
+            })
+            .collect();
+        let refs: Vec<&Request> = requests.iter().collect();
+
+        // ---- legacy assembly (the old build_and_run, verbatim) ----------
+        let max_len = requests.iter().map(|r| r.ids.len()).max().unwrap();
+        let legacy_bucket = BucketSet::new(buckets).select(count, max_len).unwrap();
+        let (b, n) = (legacy_bucket.batch, legacy_bucket.seq);
+        let mut legacy_ids = vec![PAD; b * n];
+        let mut legacy_mask = vec![0f32; b * n];
+        let mut legacy_assignments: Vec<&str> = Vec::with_capacity(b);
+        for (j, req) in requests.iter().enumerate() {
+            for (t, &tok) in req.ids.iter().enumerate() {
+                legacy_ids[j * n + t] = tok;
+                legacy_mask[j * n + t] = 1.0;
+            }
+            legacy_assignments.push(&req.task);
+        }
+        for _ in count..b {
+            legacy_assignments.push(&requests[0].task);
+        }
+        let mut legacy_head_w = vec![0f32; b * d * max_classes];
+        let mut legacy_head_b = vec![0f32; b * max_classes];
+        for (j, task) in legacy_assignments.iter().enumerate() {
+            let state = reg.get(task).unwrap();
+            for di in 0..d {
+                let src = &state.head_w[di * state.classes..(di + 1) * state.classes];
+                legacy_head_w[(j * d + di) * max_classes
+                    ..(j * d + di) * max_classes + state.classes]
+                    .copy_from_slice(src);
+            }
+            legacy_head_b[j * max_classes..j * max_classes + state.classes]
+                .copy_from_slice(&state.head_b);
+        }
+        let legacy_bias = reg.pstore().gather(&legacy_assignments, &legacy_ids, n).unwrap();
+        let legacy_bias = legacy_bias.as_f32().unwrap();
+
+        // ---- staged pipeline ---------------------------------------------
+        let plan = planner.plan(&refs).unwrap();
+        assert_eq!(plan.bucket, legacy_bucket, "trial {trial}: bucket diverged");
+        assert_eq!(plan.live(), count);
+        let mut bufs = BatchBuffers {
+            bucket: plan.bucket,
+            layers,
+            d_model: d,
+            classes: max_classes,
+            // Poisoned buffers prove the staging overwrites its regions.
+            ids: vec![77; b * n],
+            mask: vec![5.0; b * n],
+            bias: vec![1234.5; layers * b * n * d],
+            head_w: vec![9.0; b * d * max_classes],
+            head_b: vec![9.0; b * max_classes],
+        };
+        planner.stage(&plan, &refs, &mut bufs).unwrap();
+        let gather = GatherStage::new(Arc::clone(&reg), rng.range(1, 4) as usize);
+        gather.gather(&plan, &mut bufs).unwrap();
+
+        assert_eq!(bufs.ids, legacy_ids, "trial {trial}: ids diverged");
+        assert_eq!(bufs.mask, legacy_mask, "trial {trial}: mask diverged");
+        // Heads: identical over live rows; zero over filler rows.
+        let live_w = count * d * max_classes;
+        assert_eq!(
+            &bufs.head_w[..live_w],
+            &legacy_head_w[..live_w],
+            "trial {trial}: live head_w diverged"
+        );
+        assert!(bufs.head_w[live_w..].iter().all(|&x| x == 0.0));
+        let live_b = count * max_classes;
+        assert_eq!(&bufs.head_b[..live_b], &legacy_head_b[..live_b]);
+        assert!(bufs.head_b[live_b..].iter().all(|&x| x == 0.0));
+        // Bias: identical over live rows of every layer; filler rows are
+        // untouched (still the poison value).
+        for layer in 0..layers {
+            let base = layer * b * n * d;
+            let live = count * n * d;
+            assert_eq!(
+                &bufs.bias[base..base + live],
+                &legacy_bias[base..base + live],
+                "trial {trial}: layer {layer} live bias diverged"
+            );
+            assert!(bufs.bias[base + live..base + b * n * d].iter().all(|&x| x == 1234.5));
         }
     }
 }

@@ -1,0 +1,349 @@
+//! CPU-only stub of the `xla` crate (PJRT C API bindings) API surface that
+//! `aotpt` uses.
+//!
+//! The real dependency wraps the PJRT C API and needs a system XLA plugin,
+//! which is not available on a bare build machine.  This stub keeps the
+//! whole crate compiling and makes the *host-side* pieces genuinely work:
+//!
+//! * [`Literal`] is a real host container (shape + dtype + bytes), so
+//!   tensor ⇄ literal marshalling round-trips and its unit tests pass;
+//! * [`PjRtBuffer`] wraps a host literal, so upload → `to_literal_sync`
+//!   round-trips too;
+//! * compilation and execution entry points return a descriptive
+//!   [`Error`] — anything that actually needs an accelerator fails loudly
+//!   instead of silently, and callers (the coordinator's prewarm stage,
+//!   the experiment drivers) surface the error at startup.
+//!
+//! To run real artifacts, vendor a PJRT-backed `xla` crate and point the
+//! workspace at it:
+//!
+//! ```toml
+//! [patch."crates-io"]        # or a [patch] of this path dependency
+//! xla = { path = "third_party/xla-rs" }
+//! ```
+//!
+//! then build with `--features pjrt`.
+
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires a real PJRT-backed `xla` crate; \
+     replace the rust/xla stub (e.g. via [patch]) to run on hardware"
+);
+
+use std::fmt;
+
+/// Stub error type; mirrors the real crate's `xla::Error` Display surface.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the PJRT backend, which is not compiled in \
+         (this build uses the CPU stub; see rust/xla/src/lib.rs)"
+    ))
+}
+
+/// Element types mirrored from the real crate (subset + padding variants so
+/// wildcard match arms stay reachable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Host element marker, used to type `copy_raw_to` / host uploads.
+pub trait ArrayElement: Copy {
+    const TY: ElementType;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl ArrayElement for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A literal's shape: an array or a tuple of shapes.
+#[derive(Clone, Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host tensor container (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, Error> {
+        let count: usize = dims.iter().product();
+        let expect = count * ty.byte_size();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "literal: {} bytes for {:?} {:?} (expected {})",
+                data.len(),
+                ty,
+                dims,
+                expect
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn shape(&self) -> Result<Shape, Error> {
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty: self.ty }))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+
+    pub fn copy_raw_to<T: ArrayElement>(&self, dst: &mut [T]) -> Result<(), Error> {
+        if T::TY != self.ty {
+            return Err(Error(format!(
+                "copy_raw_to: literal is {:?}, destination is {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let have = std::mem::size_of_val(dst);
+        if have != self.data.len() {
+            return Err(Error(format!(
+                "copy_raw_to: destination holds {have} bytes, literal has {}",
+                self.data.len()
+            )));
+        }
+        // Raw byte copy; T is Copy (via ArrayElement) and sizes match.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                dst.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+        }
+        Ok(())
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(Error("stub literal is an array, not a tuple".into()))
+    }
+}
+
+/// A "device" buffer — in the stub, a host literal.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Parsed HLO module — never constructible in the stub (parsing errors).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// An XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// The PJRT client.  The stub "CPU platform" supports host marshalling
+/// (buffer upload / literal readback) but not compilation or execution.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("XLA compilation"))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        let count: usize = dims.iter().product();
+        if data.len() != count {
+            return Err(Error(format!(
+                "buffer_from_host_buffer: {} elements for shape {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        Ok(PjRtBuffer {
+            literal: Literal::create_from_shape_and_untyped_data(T::TY, dims, bytes)?,
+        })
+    }
+}
+
+/// A compiled executable — never constructible in the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("executable.execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("executable.execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let values = [1.0f32, -2.5, 3.0];
+        let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        let mut out = [0f32; 3];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, values);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+    }
+
+    #[test]
+    fn literal_rejects_bad_sizes() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 7]).is_err()
+        );
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0u8; 4])
+            .unwrap();
+        let mut wrong_ty = [0i32; 1];
+        assert!(lit.copy_raw_to(&mut wrong_ty).is_err());
+        let mut wrong_len = [0f32; 2];
+        assert!(lit.copy_raw_to(&mut wrong_len).is_err());
+    }
+
+    #[test]
+    fn client_upload_roundtrip() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let buf = client.buffer_from_host_buffer::<i32>(&[7, 8], &[2], None).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        let mut out = [0i32; 2];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, [7, 8]);
+    }
+
+    #[test]
+    fn compile_paths_error_cleanly() {
+        assert!(HloModuleProto::from_text_file("nope.hlo").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { _private: () };
+        assert!(client.compile(&comp).is_err());
+    }
+}
