@@ -38,7 +38,7 @@ fn main() -> aotpt::Result<()> {
     let lex = Lexicon::generate(0);
 
     // ---- Phase 1: fine-tune each task with FC AoT P-Tuning --------------
-    let mut registry = TaskRegistry::new(
+    let registry = TaskRegistry::new(
         info.n_layers,
         info.vocab_size,
         info.d_model,

@@ -22,7 +22,7 @@ fn main() -> aotpt::Result<()> {
     )?;
     let emb = weights.host("emb_tok")?.clone();
 
-    let mut registry = TaskRegistry::new(
+    let registry = TaskRegistry::new(
         model.n_layers,
         model.vocab_size,
         model.d_model,

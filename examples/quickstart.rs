@@ -22,7 +22,7 @@ fn main() -> aotpt::Result<()> {
     // 1. Register tasks.  Real deployments load trained state (see the
     //    e2e_train_serve example); here we use seeded stand-in heads + FC
     //    reparametrization weights to show the fuse-at-registration flow.
-    let mut registry = TaskRegistry::new(
+    let registry = TaskRegistry::new(
         model.n_layers,
         model.vocab_size,
         model.d_model,

@@ -29,7 +29,7 @@ fn main() {
     .unwrap();
     let emb = weights.host("emb_tok").unwrap().clone();
 
-    let mut registry = TaskRegistry::new(
+    let registry = TaskRegistry::new(
         model.n_layers,
         model.vocab_size,
         model.d_model,

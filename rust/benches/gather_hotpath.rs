@@ -1,17 +1,22 @@
 //! Bench: the L3 hot path — the ahead-of-time P-row gather from host RAM.
 //!
-//! Compares the pre-pipeline path (fresh `[l, b, n, d]` buffer per batch,
-//! serial over layers, filler rows gathered and discarded) against the
-//! staged pipeline's path (arena-reused buffer, layer-parallel
+//! Part 1 compares the pre-pipeline path (fresh `[l, b, n, d]` buffer per
+//! batch, serial over layers, filler rows gathered and discarded) against
+//! the staged pipeline's path (arena-reused buffer, layer-parallel
 //! `gather_batch`, filler rows skipped).  DESIGN.md §9 targets: effective
 //! copy bandwidth in the GB/s range, **zero steady-state allocations**
 //! (verified here via the arena counters), and a measurable speedup at
 //! b ≥ 16.
 //!
+//! Part 2 compares the f32 resident tier against the f16 tier (DESIGN.md
+//! §10): the f16 gather pays a per-element dequant to halve resident RAM;
+//! this table prices that trade, and the outputs are asserted within the
+//! 1e-2 tier tolerance.
+//!
 //!     cargo bench --bench gather_hotpath
 
 use aotpt::bench::{measure, render_table, BenchConfig};
-use aotpt::peft::{GatherArena, PStore, TaskP};
+use aotpt::peft::{AdapterConfig, AdapterDType, GatherArena, PStore, TaskP};
 use aotpt::util::Pcg64;
 
 fn main() {
@@ -21,7 +26,7 @@ fn main() {
     // (layers, d) per model analog, over representative bucket shapes.
     for (model, l, d) in [("small", 4usize, 128usize), ("base", 6, 256), ("large", 12, 512)] {
         let vocab = 8192;
-        let mut store = PStore::new(l, vocab, d);
+        let store = PStore::new(l, vocab, d);
         let mut rng = Pcg64::new(1);
         for name in ["t0", "t1", "t2", "t3"] {
             store
@@ -86,4 +91,78 @@ fn main() {
         )
     );
     println!("(speedup column should exceed 1.00x at b>=16; allocs asserted == 1 per cell)");
+
+    // ---- Part 2: f32 resident tier vs f16 tier (DESIGN.md §10) ----------
+    let mut tier_rows = Vec::new();
+    for (model, l, d) in [("small", 4usize, 128usize), ("base", 6, 256)] {
+        let vocab = 8192;
+        let f32_store = PStore::new(l, vocab, d);
+        let f16_store = PStore::with_config(
+            l,
+            vocab,
+            d,
+            AdapterConfig { dtype: AdapterDType::F16, ..Default::default() },
+        );
+        let mut rng = Pcg64::new(2);
+        for name in ["t0", "t1", "t2", "t3"] {
+            let data = rng.normal_vec(l * vocab * d, 1.0);
+            f32_store
+                .insert(name, TaskP::new(l, vocab, d, data.clone()).unwrap())
+                .unwrap();
+            f16_store.insert(name, TaskP::new(l, vocab, d, data).unwrap()).unwrap();
+        }
+        for (b, n) in [(16usize, 64usize), (64, 128)] {
+            let assignments: Vec<&str> = (0..b).map(|i| ["t0", "t1", "t2", "t3"][i % 4]).collect();
+            let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, vocab as i64) as i32).collect();
+            let cfg =
+                BenchConfig { warmup_iters: 2, min_iters: 10, max_iters: 200, budget_secs: 2.0 };
+
+            // Correctness first: the tiers agree within tolerance.
+            let mut f32_out = vec![0f32; l * b * n * d];
+            let mut f16_out = vec![0f32; l * b * n * d];
+            f32_store.gather_batch(&assignments, &ids, n, b, threads, &mut f32_out).unwrap();
+            f16_store.gather_batch(&assignments, &ids, n, b, threads, &mut f16_out).unwrap();
+            for (x, y) in f16_out.iter().zip(&f32_out) {
+                assert!((x - y).abs() < 1e-2, "f16 tier diverged: {x} vs {y}");
+            }
+
+            let arena = GatherArena::new();
+            let t32 = measure(&format!("{model}/b{b}n{n}/f32"), &cfg, || {
+                let mut out = arena.take_f32(b, n, "bias32", l * b * n * d);
+                f32_store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
+                std::hint::black_box(&out);
+                arena.put_f32(b, n, "bias32", out);
+            });
+            let t16 = measure(&format!("{model}/b{b}n{n}/f16"), &cfg, || {
+                let mut out = arena.take_f32(b, n, "bias16", l * b * n * d);
+                f16_store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
+                std::hint::black_box(&out);
+                arena.put_f32(b, n, "bias16", out);
+            });
+            // Both tiers stay zero-alloc in steady state (one checkout
+            // per slot key, ever).
+            assert_eq!(arena.allocs(), 2, "resident tiers must not allocate per batch");
+
+            tier_rows.push(vec![
+                model.to_string(),
+                format!("b{b}n{n}"),
+                format!("{:.3}", t32.mean_secs * 1e3),
+                format!("{:.3}", t16.mean_secs * 1e3),
+                format!("{:.2}x", t32.mean_secs / t16.mean_secs),
+                format!(
+                    "{:.0}/{:.0}",
+                    f32_store.bytes() as f64 / (1 << 20) as f64,
+                    f16_store.bytes() as f64 / (1 << 20) as f64
+                ),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "bucket", "f32 ms", "f16 ms", "f16 speed", "MiB f32/f16"],
+            &tier_rows,
+        )
+    );
+    println!("(f16 halves resident MiB; dequant cost shows in the f16 ms column)");
 }

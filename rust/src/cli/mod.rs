@@ -144,6 +144,17 @@ impl Args {
         v.parse().map_err(|e| format!("--{name}={v}: {e}"))
     }
 
+    /// Parse an option through a custom parser (byte sizes, dtypes, …),
+    /// attributing failures to the flag in the error message.
+    pub fn get_via<T>(
+        &self,
+        name: &str,
+        parse: impl Fn(&str) -> anyhow::Result<T>,
+    ) -> Result<T, String> {
+        let v = self.require(name)?;
+        parse(&v).map_err(|e| format!("--{name}={v}: {e}"))
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
@@ -192,6 +203,22 @@ mod tests {
         assert!(base().parse(&argv(&["--nope"])).is_err());
         assert!(base().parse(&argv(&["--steps"])).is_err());
         assert!(base().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn get_via_attributes_parse_errors_to_the_flag() {
+        let args = Args::new("test", "t")
+            .opt("budget", Some("4k"), "bytes")
+            .parse(&argv(&[]))
+            .unwrap();
+        let ok = args.get_via("budget", crate::peft::parse_bytes).unwrap();
+        assert_eq!(ok, 4096);
+        let args = Args::new("test", "t")
+            .opt("budget", None, "bytes")
+            .parse(&argv(&["--budget", "nope"]))
+            .unwrap();
+        let err = args.get_via("budget", crate::peft::parse_bytes).unwrap_err();
+        assert!(err.contains("--budget=nope"), "{err}");
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::peft::AdapterStats;
 use crate::util::stats;
 
 /// Ring capacity for each latency/size distribution (recent window).
@@ -64,6 +65,9 @@ pub struct Metrics {
     /// Latest arena counters, copied in by the pipeline after each batch.
     arena_allocs: AtomicUsize,
     arena_reuses: AtomicUsize,
+    /// Latest adapter-store residency counters (DESIGN.md §10), copied in
+    /// by the pipeline after each batch.
+    adapter: Mutex<AdapterStats>,
 }
 
 /// A point-in-time summary.  Counts are monotonic totals; millisecond
@@ -90,6 +94,9 @@ pub struct MetricsSnapshot {
     /// and pool hits.
     pub arena_allocs: usize,
     pub arena_reuses: usize,
+    /// Adapter-store residency: bytes/tasks per tier plus hit, fault,
+    /// cold-serve and eviction totals (DESIGN.md §10).
+    pub adapter: AdapterStats,
 }
 
 impl Metrics {
@@ -109,6 +116,7 @@ impl Metrics {
             queue_depth: AtomicUsize::new(0),
             arena_allocs: AtomicUsize::new(0),
             arena_reuses: AtomicUsize::new(0),
+            adapter: Mutex::new(AdapterStats::default()),
         }
     }
 
@@ -148,6 +156,12 @@ impl Metrics {
         self.arena_reuses.store(reuses, Ordering::Relaxed);
     }
 
+    /// Copy the adapter-store residency counters into the exported
+    /// metrics.
+    pub fn set_adapter_counters(&self, stats: AdapterStats) {
+        *self.adapter.lock().unwrap() = stats;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let gather_total = m.gather_secs_total;
@@ -173,6 +187,7 @@ impl Metrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             arena_allocs: self.arena_allocs.load(Ordering::Relaxed),
             arena_reuses: self.arena_reuses.load(Ordering::Relaxed),
+            adapter: *self.adapter.lock().unwrap(),
         }
     }
 }
@@ -188,7 +203,8 @@ impl MetricsSnapshot {
         format!(
             "requests={} batches={} mean_batch={:.2} p50={:.2}ms p99={:.2}ms \
              gather={:.3}ms exec={:.3}ms gather_frac={:.1}% queue={} \
-             arena_reuse={}/{}",
+             arena_reuse={}/{} adapters={}r/{}s {:.1}MiB \
+             hit={} fault={} cold={} evict={}",
             self.requests,
             self.batches,
             self.mean_batch_size,
@@ -200,6 +216,13 @@ impl MetricsSnapshot {
             self.queue_depth,
             self.arena_reuses,
             self.arena_reuses + self.arena_allocs,
+            self.adapter.resident_tasks,
+            self.adapter.spilled_tasks,
+            self.adapter.resident_bytes as f64 / (1024.0 * 1024.0),
+            self.adapter.hits,
+            self.adapter.faults,
+            self.adapter.cold_serves,
+            self.adapter.evictions,
         )
     }
 }
@@ -267,5 +290,27 @@ mod tests {
         assert_eq!(s.arena_allocs, 5);
         assert_eq!(s.arena_reuses, 95);
         assert!(s.render().contains("arena_reuse=95/100"));
+    }
+
+    #[test]
+    fn adapter_counters_exported() {
+        let m = Metrics::new();
+        let stats = AdapterStats {
+            resident_bytes: 3 << 20,
+            resident_tasks: 2,
+            spilled_tasks: 5,
+            hits: 40,
+            faults: 7,
+            cold_serves: 3,
+            evictions: 9,
+            spill_writes: 5,
+        };
+        m.set_adapter_counters(stats);
+        let s = m.snapshot();
+        assert_eq!(s.adapter, stats);
+        let r = s.render();
+        assert!(r.contains("adapters=2r/5s"), "{r}");
+        assert!(r.contains("fault=7"), "{r}");
+        assert!(r.contains("evict=9"), "{r}");
     }
 }

@@ -17,8 +17,9 @@
 //!
 //! * the **admission/planning** stages pack requests *from different
 //!   tasks* into one batch (the paper's multi-task inference claim);
-//! * the **registry** holds per-task fused `P` (RAM) + classification
-//!   heads;
+//! * the **registry** holds per-task fused `P` (the tiered adapter
+//!   store: resident f32/f16 under a RAM budget, LRU-spilled to disk —
+//!   DESIGN.md §10) + classification heads, hot-mutable while serving;
 //! * the **gather** is the ahead-of-time lookup the method is named for,
 //!   served from a reusable arena and parallel across layers;
 //! * Python is nowhere on this path.
@@ -45,6 +46,7 @@ use crate::config::Manifest;
 use crate::runtime::Runtime;
 use crate::Result;
 
+pub use crate::peft::{AdapterConfig, AdapterDType, AdapterStats};
 pub use batcher::{Bucket, BucketSet};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pipeline::{

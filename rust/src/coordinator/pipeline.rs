@@ -414,6 +414,7 @@ pub struct Pipeline {
     fanout: FanOut,
     arena: GatherArena,
     metrics: Arc<Metrics>,
+    registry: Arc<TaskRegistry>,
     layers: usize,
     d_model: usize,
     classes: usize,
@@ -440,6 +441,7 @@ impl Pipeline {
             metrics,
             layers: registry.layers(),
             d_model: registry.d_model(),
+            registry,
             classes,
         }
     }
@@ -464,20 +466,35 @@ impl Pipeline {
     /// fan-out, recording stage timings and arena counters.
     pub fn process(&self, items: Vec<WorkItem>) {
         let t_batch = Instant::now();
-        let requests: Vec<&Request> = items.iter().map(|i| &i.request).collect();
-        match self.run_stages(&requests) {
-            Ok((plan, logits, gather_secs, exec_secs)) => {
-                self.fanout.respond(&plan, &items, &logits);
-                self.metrics.observe_batch(
-                    items.len(),
-                    t_batch.elapsed().as_secs_f64(),
-                    gather_secs,
-                    exec_secs,
-                );
+        // The hot task lifecycle means a task can be unregistered between
+        // admission and this flush: fail only that task's requests here,
+        // instead of letting the gather error poison the whole mixed
+        // batch.  (A failure *inside* the stages — e.g. a disk-tier read
+        // error — still fails the batch; those are not request-specific.)
+        let mut live = Vec::with_capacity(items.len());
+        for item in items {
+            match self.registry.get(&item.request.task) {
+                Ok(_) => live.push(item),
+                Err(e) => self.fanout.respond_error(std::slice::from_ref(&item), &e),
             }
-            Err(e) => self.fanout.respond_error(&items, &e),
+        }
+        if !live.is_empty() {
+            let requests: Vec<&Request> = live.iter().map(|i| &i.request).collect();
+            match self.run_stages(&requests) {
+                Ok((plan, logits, gather_secs, exec_secs)) => {
+                    self.fanout.respond(&plan, &live, &logits);
+                    self.metrics.observe_batch(
+                        live.len(),
+                        t_batch.elapsed().as_secs_f64(),
+                        gather_secs,
+                        exec_secs,
+                    );
+                }
+                Err(e) => self.fanout.respond_error(&live, &e),
+            }
         }
         self.metrics.set_arena_counters(self.arena.allocs(), self.arena.reuses());
+        self.metrics.set_adapter_counters(self.registry.adapter_stats());
     }
 
     #[allow(clippy::type_complexity)]
@@ -533,7 +550,7 @@ mod tests {
     use crate::tensor::Tensor;
 
     fn registry(layers: usize, vocab: usize, d: usize, classes: usize) -> Arc<TaskRegistry> {
-        let mut reg = TaskRegistry::new(layers, vocab, d, classes);
+        let reg = TaskRegistry::new(layers, vocab, d, classes);
         let head_w = Tensor::from_f32(&[d, 2], vec![0.1; d * 2]);
         let head_b = Tensor::from_f32(&[2], vec![0.5, -0.5]);
         reg.register_zero("a", &head_w, &head_b).unwrap();
@@ -641,6 +658,33 @@ mod tests {
 
         assert_eq!(&mixed[..p.classes], &solo1[..], "row 0 changed in a mixed batch");
         assert_eq!(&mixed[p.classes..2 * p.classes], &solo2[..], "row 1 changed");
+    }
+
+    #[test]
+    fn vanished_task_fails_only_its_own_requests() {
+        // A task can disappear between admission and the flush (hot
+        // unregister); its requests error individually while the rest of
+        // the batch still serves.
+        let p = pipeline();
+        let (tx_a, rx_a) = std::sync::mpsc::channel();
+        let (tx_bad, rx_bad) = std::sync::mpsc::channel();
+        let items = vec![
+            WorkItem {
+                request: Request { task: "a".into(), ids: vec![1, 2] },
+                enqueued: Instant::now(),
+                respond: tx_a,
+            },
+            WorkItem {
+                request: Request { task: "ghost".into(), ids: vec![3] },
+                enqueued: Instant::now(),
+                respond: tx_bad,
+            },
+        ];
+        p.process(items);
+        let ok = rx_a.recv().unwrap().unwrap();
+        assert_eq!(ok.logits.len(), 2);
+        let err = rx_bad.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("unknown task"), "{err}");
     }
 
     #[test]

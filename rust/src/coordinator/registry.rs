@@ -1,14 +1,21 @@
-//! The task registry: per-task fused `P` tables (host RAM, via `PStore`)
-//! plus per-task classification heads.  Registering a task is the fuse
-//! step of §3.3 — after it, serving cost is independent of the method's
-//! training-time rank `r` (the paper's Figure 2 point).
+//! The task registry: per-task fused `P` tables (tiered adapter store,
+//! via `PStore`) plus per-task classification heads.  Registering a task
+//! is the fuse step of §3.3 — after it, serving cost is independent of
+//! the method's training-time rank `r` (the paper's Figure 2 point).
+//!
+//! Every lifecycle operation takes `&self`: tasks are registered,
+//! replaced, unregistered and pinned **while the pipeline is serving**
+//! (the task map sits behind a `RwLock`, the table store behind the
+//! residency manager's interior mutability — DESIGN.md §10).  In-flight
+//! batches hold `Arc` snapshots of both the head state and the table, so
+//! a concurrent unregister/replace never corrupts them.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, bail};
 
-use crate::peft::{fuse, PStore, TaskP};
+use crate::peft::{fuse, AdapterConfig, AdapterStats, PStore, TaskP};
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -28,28 +35,55 @@ pub struct TaskRegistry {
     max_classes: usize,
     pstore: PStore,
     tasks: RwLock<BTreeMap<String, Arc<TaskState>>>,
+    /// Serializes register/unregister so the head map and the table
+    /// store always move together: without it, an unregister racing a
+    /// re-register of the same name could delete the fresh table while
+    /// leaving the fresh head (admission would then accept requests no
+    /// gather can serve).  Reads (gathers, admission) never take this.
+    lifecycle: Mutex<()>,
 }
 
 impl TaskRegistry {
     pub fn new(layers: usize, vocab: usize, d_model: usize, max_classes: usize) -> TaskRegistry {
+        TaskRegistry::with_adapter_config(
+            layers,
+            vocab,
+            d_model,
+            max_classes,
+            AdapterConfig::default(),
+        )
+    }
+
+    /// A registry with explicit adapter tiering (storage dtype, RAM
+    /// budget, spill directory — CLI `--adapter-dtype` /
+    /// `--adapter-ram-budget`).
+    pub fn with_adapter_config(
+        layers: usize,
+        vocab: usize,
+        d_model: usize,
+        max_classes: usize,
+        cfg: AdapterConfig,
+    ) -> TaskRegistry {
         TaskRegistry {
             layers,
             vocab,
             d_model,
             max_classes,
-            pstore: PStore::new(layers, vocab, d_model),
+            pstore: PStore::with_config(layers, vocab, d_model, cfg),
             tasks: RwLock::new(BTreeMap::new()),
+            lifecycle: Mutex::new(()),
         }
     }
 
-    /// Register a task from an already-fused table.
+    /// Register (or hot-replace) a task from an already-fused table.
     pub fn register_fused(
-        &mut self,
+        &self,
         name: &str,
         p: TaskP,
         head_w: &Tensor,
         head_b: &Tensor,
     ) -> Result<()> {
+        let _lifecycle = self.lifecycle.lock().unwrap();
         let classes = head_b.len();
         if classes > self.max_classes {
             bail!("task {name}: {classes} classes exceeds serving max {}", self.max_classes);
@@ -70,7 +104,7 @@ impl TaskRegistry {
     /// Register an FC-AoT task from its *trained reparametrized* weights:
     /// runs the fuse (Equation 3) host-side, then stores the dense table.
     pub fn register_fc(
-        &mut self,
+        &self,
         name: &str,
         emb: &Tensor,
         trained: &BTreeMap<String, Tensor>,
@@ -82,7 +116,7 @@ impl TaskRegistry {
 
     /// Register a Kronecker-AoT task (Equation 2 fuse).
     pub fn register_kron(
-        &mut self,
+        &self,
         name: &str,
         trained: &BTreeMap<String, Tensor>,
     ) -> Result<()> {
@@ -94,7 +128,7 @@ impl TaskRegistry {
     /// Register a task with a zero table (serves the frozen backbone +
     /// head; used as the BitFit-style sanity baseline and in tests).
     pub fn register_zero(
-        &mut self,
+        &self,
         name: &str,
         head_w: &Tensor,
         head_b: &Tensor,
@@ -105,6 +139,26 @@ impl TaskRegistry {
             head_w,
             head_b,
         )
+    }
+
+    /// Unregister a task while serving.  In-flight batches finish on
+    /// their snapshots; subsequent admissions for the task are rejected.
+    pub fn unregister(&self, name: &str) -> Result<()> {
+        let _lifecycle = self.lifecycle.lock().unwrap();
+        let removed = self.tasks.write().unwrap().remove(name);
+        if removed.is_none() {
+            bail!("unknown task {name}");
+        }
+        // The head map is authoritative for admission; the table is
+        // removed second, best-effort (a half-registered task cannot
+        // exist: register inserts the table first, the head second).
+        let _ = self.pstore.remove(name);
+        Ok(())
+    }
+
+    /// Pin a task's table into RAM (exempt from eviction) or release it.
+    pub fn pin_task(&self, name: &str, pinned: bool) -> Result<()> {
+        self.pstore.pin(name, pinned)
     }
 
     /// Cheap shared handle to a task's serving state (the hot path packs
@@ -120,6 +174,12 @@ impl TaskRegistry {
 
     pub fn pstore(&self) -> &PStore {
         &self.pstore
+    }
+
+    /// Residency/tier counters of the adapter store (exported through
+    /// `MetricsSnapshot`).
+    pub fn adapter_stats(&self) -> AdapterStats {
+        self.pstore.stats()
     }
 
     /// Geometry accessors (the serving pipeline sizes buffers from these).
@@ -139,6 +199,8 @@ impl TaskRegistry {
         self.max_classes
     }
 
+    /// Registered task names, sorted (same order and type as
+    /// `PStore::task_names`).
     pub fn task_names(&self) -> Vec<String> {
         self.tasks.read().unwrap().keys().cloned().collect()
     }
@@ -151,7 +213,8 @@ impl TaskRegistry {
         self.len() == 0
     }
 
-    /// Host RAM held by all fused tables (the paper's §3.3 trade-off).
+    /// Host RAM held by resident fused tables (the paper's §3.3
+    /// trade-off, now bounded by the adapter RAM budget).
     pub fn ram_bytes(&self) -> usize {
         self.pstore.bytes()
     }
@@ -172,24 +235,71 @@ fn heads_from(trained: &BTreeMap<String, Tensor>) -> Result<(Tensor, Tensor)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::peft::AdapterDType;
     use crate::tensor::DType;
 
     #[test]
     fn register_and_lookup() {
-        let mut reg = TaskRegistry::new(2, 100, 8, 4);
+        let reg = TaskRegistry::new(2, 100, 8, 4);
         let head_w = Tensor::from_f32(&[8, 2], vec![0.1; 16]);
         let head_b = Tensor::from_f32(&[2], vec![0.0, 0.0]);
         reg.register_zero("sst2", &head_w, &head_b).unwrap();
         let state = reg.get("sst2").unwrap();
         assert_eq!(state.classes, 2);
         assert_eq!(reg.task_names(), vec!["sst2".to_string()]);
+        assert_eq!(reg.task_names(), reg.pstore().task_names());
         assert!(reg.get("nope").is_err());
         assert_eq!(reg.ram_bytes(), 2 * 100 * 8 * 4);
     }
 
     #[test]
+    fn unregister_removes_head_and_table() {
+        let reg = TaskRegistry::new(2, 50, 8, 4);
+        let head_w = Tensor::from_f32(&[8, 2], vec![0.1; 16]);
+        let head_b = Tensor::from_f32(&[2], vec![0.0, 0.0]);
+        reg.register_zero("gone", &head_w, &head_b).unwrap();
+        assert_eq!(reg.len(), 1);
+        reg.unregister("gone").unwrap();
+        assert_eq!(reg.len(), 0);
+        assert!(reg.get("gone").is_err());
+        assert!(reg.pstore().get("gone").is_err());
+        assert_eq!(reg.ram_bytes(), 0);
+        assert!(reg.unregister("gone").is_err());
+    }
+
+    #[test]
+    fn replace_swaps_head_and_table() {
+        let reg = TaskRegistry::new(1, 10, 4, 4);
+        let w2 = Tensor::from_f32(&[4, 2], vec![0.1; 8]);
+        let b2 = Tensor::from_f32(&[2], vec![0.0; 2]);
+        let w3 = Tensor::from_f32(&[4, 3], vec![0.2; 12]);
+        let b3 = Tensor::from_f32(&[3], vec![0.0; 3]);
+        reg.register_zero("t", &w2, &b2).unwrap();
+        assert_eq!(reg.get("t").unwrap().classes, 2);
+        reg.register_zero("t", &w3, &b3).unwrap();
+        assert_eq!(reg.get("t").unwrap().classes, 3);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.pstore().len(), 1);
+    }
+
+    #[test]
+    fn adapter_config_flows_through() {
+        let cfg = AdapterConfig { dtype: AdapterDType::F16, ..Default::default() };
+        let reg = TaskRegistry::with_adapter_config(2, 40, 8, 4, cfg);
+        let head_w = Tensor::from_f32(&[8, 2], vec![0.1; 16]);
+        let head_b = Tensor::from_f32(&[2], vec![0.0, 0.0]);
+        reg.register_zero("q", &head_w, &head_b).unwrap();
+        // Half the f32 footprint, and the stats surface is wired.
+        assert_eq!(reg.ram_bytes(), 2 * 40 * 8 * 2);
+        assert_eq!(reg.adapter_stats().resident_tasks, 1);
+        reg.pin_task("q", true).unwrap();
+        reg.pin_task("q", false).unwrap();
+        assert!(reg.pin_task("missing", true).is_err());
+    }
+
+    #[test]
     fn rejects_too_many_classes() {
-        let mut reg = TaskRegistry::new(2, 100, 8, 2);
+        let reg = TaskRegistry::new(2, 100, 8, 2);
         let head_w = Tensor::from_f32(&[8, 3], vec![0.0; 24]);
         let head_b = Tensor::from_f32(&[3], vec![0.0; 3]);
         assert!(reg.register_zero("big", &head_w, &head_b).is_err());
@@ -197,7 +307,7 @@ mod tests {
 
     #[test]
     fn rejects_wrong_head_shape() {
-        let mut reg = TaskRegistry::new(2, 100, 8, 4);
+        let reg = TaskRegistry::new(2, 100, 8, 4);
         let head_w = Tensor::zeros(DType::F32, &[7, 2]);
         let head_b = Tensor::zeros(DType::F32, &[2]);
         assert!(reg.register_zero("bad", &head_w, &head_b).is_err());
@@ -206,7 +316,7 @@ mod tests {
     #[test]
     fn register_fc_fuses_and_serves() {
         let (l, v, d, r) = (2, 30, 8, 4);
-        let mut reg = TaskRegistry::new(l, v, d, 4);
+        let reg = TaskRegistry::new(l, v, d, 4);
         let mut rng = crate::util::Pcg64::new(5);
         let emb = Tensor::from_f32(&[v, d], rng.normal_vec(v * d, 1.0));
         let mut tr = BTreeMap::new();
@@ -219,6 +329,9 @@ mod tests {
         reg.register_fc("wic", &emb, &tr).unwrap();
         // A non-degenerate table must have non-zero norms.
         let p = reg.pstore().get("wic").unwrap();
-        assert!(p.row_norms(0).iter().any(|&n| n > 0.0));
+        assert!(crate::peft::row_norms(p.as_ref(), 0)
+            .unwrap()
+            .iter()
+            .any(|&n| n > 0.0));
     }
 }

@@ -8,13 +8,15 @@
 //!   once at build time, and are lowered to HLO-text artifacts.
 //! * **L3** is this crate: a Rust coordinator that serves many fine-tuned
 //!   tasks from a single backbone executable (fused per-task `P` matrices
-//!   resident in host RAM, ahead-of-time row gather on the request path)
-//!   and a training driver that reproduces the paper's experimental
-//!   protocol by executing AOT train-step computations.  Serving runs as
-//!   a staged pipeline — admission → batch planning → AoT gather →
-//!   device execute → fan-out (`coordinator::pipeline`) — with all host
-//!   staging buffers drawn from a reusable [`peft::GatherArena`], so the
-//!   steady-state hot path allocates nothing.
+//!   in a tiered adapter store — resident f32/f16 under a RAM budget,
+//!   LRU-spilled to disk, hot-mutable while serving; ahead-of-time row
+//!   gather on the request path) and a training driver that reproduces
+//!   the paper's experimental protocol by executing AOT train-step
+//!   computations.  Serving runs as a staged pipeline — admission →
+//!   batch planning → AoT gather → device execute → fan-out
+//!   (`coordinator::pipeline`) — with all host staging buffers drawn
+//!   from a reusable [`peft::GatherArena`], so the steady-state hot path
+//!   allocates nothing (DESIGN.md §9–§10).
 //!
 //! Builds without an accelerator use the in-tree `xla` CPU stub
 //! (`rust/xla`); enable the `pjrt` cargo feature with a vendored PJRT

@@ -4,14 +4,22 @@
 //!   table1                         print the method property matrix
 //!   exp <id>                       run one experiment (fig3|fig8|fig9|
 //!                                  table2|table5|norms)
+//!   adapters                       artifact-free tiered adapter-store
+//!                                  demo (spill + fault-in under a RAM
+//!                                  budget; HostBackend)
 //!   info                           manifest / model inventory
 
 use std::sync::Arc;
 
 use aotpt::cli::Args;
 use aotpt::config::{Manifest, Scale};
+use aotpt::coordinator::{
+    AdapterConfig, AdapterDType, Bucket, Coordinator, CoordinatorConfig, HostBackend, TaskRegistry,
+};
 use aotpt::experiments::{norms, quality, speed, table1};
+use aotpt::peft::{parse_bytes, TaskP};
 use aotpt::runtime::Runtime;
+use aotpt::util::Pcg64;
 use aotpt::Result;
 
 fn main() {
@@ -30,6 +38,14 @@ fn run(argv: &[String]) -> Result<()> {
     .opt("scale", Some("quick"), "experiment scale: smoke|quick|full")
     .opt("model", None, "override model shape")
     .opt("budget", Some("8"), "per-cell bench budget seconds (speed figures)")
+    .opt(
+        "adapter-ram-budget",
+        Some("0"),
+        "max resident adapter-table bytes (e.g. 512MiB; 0 = unlimited)",
+    )
+    .opt("adapter-dtype", Some("f32"), "adapter table storage dtype: f32|f16")
+    .opt("tasks", Some("8"), "task count (adapters demo)")
+    .opt("requests", Some("64"), "request count (adapters demo)")
     .flag("verbose", "debug logging")
     .parse(argv)
     .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -38,9 +54,15 @@ fn run(argv: &[String]) -> Result<()> {
         aotpt::util::log::set_level(aotpt::util::log::Level::Debug);
     }
 
-    let manifest = Manifest::load(&aotpt::artifacts_dir())?;
     let positional = args.positional().to_vec();
     let command = positional.first().map(String::as_str).unwrap_or("info");
+
+    // The adapters demo is artifact-free (HostBackend); everything else
+    // reads the manifest.
+    if command == "adapters" {
+        return run_adapters_demo(&args);
+    }
+    let manifest = Manifest::load(&aotpt::artifacts_dir())?;
 
     match command {
         "info" => {
@@ -72,8 +94,94 @@ fn run(argv: &[String]) -> Result<()> {
             let runtime = Runtime::new()?;
             run_experiment(&runtime, &manifest, id, scale, &args)?;
         }
-        other => anyhow::bail!("unknown command {other} (info|table1|exp)"),
+        other => anyhow::bail!("unknown command {other} (info|table1|exp|adapters)"),
     }
+    Ok(())
+}
+
+/// Artifact-free demo of the tiered adapter store (DESIGN.md §10):
+/// registers more task bytes than `--adapter-ram-budget` allows, serves a
+/// mixed multi-task burst through the HostBackend pipeline, and prints
+/// the residency counters that flowed into `MetricsSnapshot`.
+fn run_adapters_demo(args: &Args) -> Result<()> {
+    let ram_budget = args
+        .get_via("adapter-ram-budget", parse_bytes)
+        .map_err(anyhow::Error::msg)?;
+    let dtype = args
+        .get_via("adapter-dtype", AdapterDType::parse)
+        .map_err(anyhow::Error::msg)?;
+    let n_tasks = args.get_usize("tasks").map_err(anyhow::Error::msg)?.max(1);
+    let n_requests = args.get_usize("requests").map_err(anyhow::Error::msg)?.max(1);
+
+    // A small-model analog: big enough that a handful of tasks outgrow a
+    // few-MiB budget, small enough to run in seconds on a laptop.
+    let (layers, vocab, d_model, classes) = (4usize, 2048usize, 64usize, 4usize);
+    let table_bytes = layers * vocab * d_model * dtype.size();
+    let cfg = AdapterConfig { ram_budget_bytes: ram_budget, dtype, spill_dir: None };
+    let registry = TaskRegistry::with_adapter_config(layers, vocab, d_model, classes, cfg);
+
+    let mut rng = Pcg64::new(17);
+    let mut names = Vec::new();
+    for i in 0..n_tasks {
+        let name = format!("task{i:03}");
+        let table = TaskP::new(
+            layers,
+            vocab,
+            d_model,
+            rng.normal_vec(layers * vocab * d_model, 0.5),
+        )?;
+        let head_w =
+            aotpt::tensor::Tensor::from_f32(&[d_model, 2], rng.normal_vec(d_model * 2, 0.2));
+        let head_b = aotpt::tensor::Tensor::from_f32(&[2], vec![0.0; 2]);
+        registry.register_fused(&name, table, &head_w, &head_b)?;
+        names.push(name);
+    }
+    println!(
+        "registered {n_tasks} tasks x {:.1} MiB ({}) = {:.1} MiB total, RAM budget {:.1} MiB",
+        table_bytes as f64 / (1 << 20) as f64,
+        dtype.name(),
+        (n_tasks * table_bytes) as f64 / (1 << 20) as f64,
+        ram_budget as f64 / (1 << 20) as f64,
+    );
+
+    let buckets = vec![Bucket { batch: 1, seq: 32 }, Bucket { batch: 8, seq: 32 }];
+    let coordinator = Coordinator::with_backend(
+        registry,
+        buckets,
+        classes,
+        CoordinatorConfig { model: "host".into(), linger_ms: 1, signature: "aot".into() },
+        Arc::new(HostBackend),
+    )?;
+
+    let mut ok = 0usize;
+    for r in 0..n_requests {
+        let task = &names[r % n_tasks];
+        let len = 4 + (r % 24);
+        let ids: Vec<i32> = (0..len).map(|_| rng.range(0, vocab as i64) as i32).collect();
+        let response = coordinator.classify(task, ids)?;
+        anyhow::ensure!(
+            response.logits.iter().all(|x| x.is_finite()),
+            "task {task}: non-finite logits"
+        );
+        ok += 1;
+    }
+    let snapshot = coordinator.metrics().snapshot();
+    println!("served {ok}/{n_requests} requests across {n_tasks} tasks");
+    println!("{}", snapshot.render());
+    let a = snapshot.adapter;
+    println!(
+        "residency: {} resident / {} spilled tasks, {:.1} MiB resident, \
+         {} hits, {} faults, {} cold serves, {} evictions, {} spill writes",
+        a.resident_tasks,
+        a.spilled_tasks,
+        a.resident_bytes as f64 / (1 << 20) as f64,
+        a.hits,
+        a.faults,
+        a.cold_serves,
+        a.evictions,
+        a.spill_writes,
+    );
+    coordinator.shutdown();
     Ok(())
 }
 

@@ -6,6 +6,13 @@
 //! affect inference speed").  The same math also exists as `fuse_*` HLO
 //! artifacts; integration tests assert both paths agree, so either can be
 //! used (the host path avoids a device round-trip for large V·d).
+//!
+//! Fusing always happens in f32.  The fused [`TaskP`] is handed to the
+//! tiered adapter store, which quantizes it to the configured storage
+//! dtype (`--adapter-dtype f16` halves resident RAM) and may later spill
+//! it to disk under the RAM budget — see `peft::{quant, residency}` and
+//! DESIGN.md §10.  Fuse-time is the right moment to pay quantization:
+//! it is off the serving hot path and runs once per registration.
 
 use std::collections::BTreeMap;
 

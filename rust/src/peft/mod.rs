@@ -1,12 +1,17 @@
-//! PEFT method registry + the AoT P store.
+//! PEFT method registry + the tiered AoT adapter store.
 //!
 //! * `Method` — every fine-tuning method in the paper with its Table 1
 //!   property triple; `aotpt exp table1` prints the table from this
 //!   registry (mirrored against the manifest in tests).
-//! * `PStore` — the heart of AoT P-Tuning serving (§3.3): fused per-task
-//!   `P ∈ R^{l×V×d}` matrices resident in **host RAM**, with the
-//!   ahead-of-time row gather `bias[l,b,n,d] = P[l, ids[b,n], :]` as the
-//!   coordinator's hot path.
+//! * `store` — the heart of AoT P-Tuning serving (§3.3): fused per-task
+//!   `P ∈ R^{l×V×d}` matrices behind the [`store::RowSource`] tier
+//!   abstraction, with the ahead-of-time row gather
+//!   `bias[l,b,n,d] = P[l, ids[b,n], :]` as the coordinator's hot path.
+//! * `quant` — the f16 storage tier (fused-time quantization, on-gather
+//!   dequant into the arena buffers; DESIGN.md §10).
+//! * `residency` — the disk tier and hot task lifecycle: RAM budget, LRU
+//!   spill to `.aotckpt`, on-demand fault-in, pinning, and
+//!   register/replace/unregister on `&self` while serving.
 //! * `fuse` — host-side implementations of the FC/Kronecker fuse math,
 //!   cross-checked against the `fuse_*` HLO artifacts in tests.
 //! * `arena` — reusable per-bucket staging buffers so the steady-state
@@ -14,10 +19,14 @@
 
 pub mod arena;
 pub mod fuse;
+pub mod quant;
+pub mod residency;
 pub mod store;
 
 pub use arena::GatherArena;
-pub use store::{PStore, TaskP};
+pub use quant::{AdapterDType, QuantizedTaskP};
+pub use residency::{parse_bytes, AdapterConfig, AdapterStats, ColdTable};
+pub use store::{row_norms, PStore, RowSource, TaskP};
 
 /// Every fine-tuning method of the paper (Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -1,0 +1,308 @@
+//! The f16 storage tier: fused-time quantization of P tables.
+//!
+//! Paper §3.3 prices multi-task serving in host RAM — `l×V×d×4` bytes per
+//! task is 16–100 MB per layer at the paper's scales (DESIGN.md §3), so
+//! the resident-table dtype is the single biggest lever on how many tasks
+//! one serving process holds.  Storing P as IEEE 754 binary16 halves the
+//! footprint; rows are dequantized straight into the gather's arena
+//! buffer (`RowSource::copy_row`), so the device-visible bias is always
+//! f32 and no artifact changes shape.  Relative error is ≤ 2⁻¹¹ per
+//! element (round-to-nearest-even), far inside the 1e-2 tier tolerance
+//! asserted by the tests (DESIGN.md §10).
+//!
+//! The conversions are software implementations (no `half` crate in the
+//! offline build) matching IEEE 754 semantics: subnormals are preserved,
+//! overflow saturates to ±inf, NaN stays NaN.
+
+use anyhow::bail;
+
+use crate::tensor::DType;
+use crate::Result;
+
+use super::store::{RowSource, TaskP};
+
+/// Storage dtype of a resident adapter table (CLI: `--adapter-dtype`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdapterDType {
+    F32,
+    F16,
+}
+
+impl AdapterDType {
+    /// Bytes per stored element.
+    pub fn size(self) -> usize {
+        match self {
+            AdapterDType::F32 => 4,
+            AdapterDType::F16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdapterDType::F32 => "f32",
+            AdapterDType::F16 => "f16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AdapterDType> {
+        Ok(match s {
+            "f32" => AdapterDType::F32,
+            "f16" => AdapterDType::F16,
+            other => bail!("unknown adapter dtype {other} (expected f32|f16)"),
+        })
+    }
+
+    /// The `.aotckpt` dtype used when a table of this tier spills to disk.
+    pub fn tensor_dtype(self) -> DType {
+        match self {
+            AdapterDType::F32 => DType::F32,
+            AdapterDType::F16 => DType::F16,
+        }
+    }
+}
+
+/// Convert one f32 to IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let mant = x & 0x007f_ffff;
+
+    if exp == 255 {
+        // Inf / NaN; keep a payload bit so NaN stays NaN.
+        let nan = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow saturates to ±inf
+    }
+    if unbiased >= -14 {
+        // Normal half: 23→10 mantissa bits, round to nearest even.  A
+        // rounding carry may overflow into the exponent; that is exactly
+        // the correct rounded result (up to and including ±inf).
+        let mut h = (((unbiased + 15) as u32) << 10) | (mant >> 13);
+        let rem = mant & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    if unbiased < -25 {
+        return sign; // below half the smallest subnormal: ±0
+    }
+    // Subnormal half: shift the implicit-one mantissa into place.
+    let full = mant | 0x0080_0000;
+    let shift = (-unbiased - 1) as u32; // 14 (unbiased -15) ..= 24 (unbiased -25)
+    let mut h = (full >> shift) as u16;
+    let rem = full & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    if rem > halfway || (rem == halfway && (h & 1) == 1) {
+        h += 1; // carry into the exponent yields the smallest normal: correct
+    }
+    sign | h
+}
+
+/// Convert IEEE binary16 bits back to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    if exp == 0 {
+        // ±0 and subnormals: value = mant · 2⁻²⁴ (exact in f32).
+        let mag = mant as f32 / 16_777_216.0;
+        return if sign != 0 { -mag } else { mag };
+    }
+    if exp == 31 {
+        return f32::from_bits(sign | 0x7f80_0000 | (mant << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (mant << 13))
+}
+
+/// Quantize a whole slice (fused-time, off the hot path).
+pub fn quantize(values: &[f32]) -> Vec<u16> {
+    values.iter().map(|&v| f32_to_f16_bits(v)).collect()
+}
+
+/// Dequantize `bits` into `out` (the on-gather direction; `out` is an
+/// arena-owned slice, so this performs no allocation).
+#[inline]
+pub fn dequantize_into(bits: &[u16], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(bits) {
+        *o = f16_bits_to_f32(b);
+    }
+}
+
+/// One task's fused table stored as binary16 — the RAM-halving middle
+/// tier between resident f32 and the disk tier (DESIGN.md §10).
+pub struct QuantizedTaskP {
+    layers: usize,
+    vocab: usize,
+    d_model: usize,
+    data: Vec<u16>,
+}
+
+impl QuantizedTaskP {
+    pub fn new(layers: usize, vocab: usize, d_model: usize, data: Vec<u16>) -> Result<QuantizedTaskP> {
+        if data.len() != layers * vocab * d_model {
+            bail!(
+                "QuantizedTaskP: data length {} != {layers}x{vocab}x{d_model}",
+                data.len()
+            );
+        }
+        Ok(QuantizedTaskP { layers, vocab, d_model, data })
+    }
+
+    /// Fused-time quantization of an f32 table.
+    pub fn from_taskp(p: &TaskP) -> QuantizedTaskP {
+        QuantizedTaskP {
+            layers: p.layers,
+            vocab: p.vocab,
+            d_model: p.d_model,
+            data: quantize(p.data()),
+        }
+    }
+
+    /// The stored bits of row (layer, token).
+    #[inline]
+    pub fn row_bits(&self, layer: usize, token: usize) -> &[u16] {
+        let d = self.d_model;
+        let start = (layer * self.vocab + token) * d;
+        &self.data[start..start + d]
+    }
+}
+
+impl RowSource for QuantizedTaskP {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn dtype(&self) -> AdapterDType {
+        AdapterDType::F16
+    }
+
+    fn tier(&self) -> &'static str {
+        "ram-f16"
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+
+    #[inline]
+    fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()> {
+        dequantize_into(self.row_bits(layer, token), out);
+        Ok(())
+    }
+
+    fn spill_into(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        for &b in &self.data {
+            w.write_all(&b.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        // Values exactly representable in binary16 must survive bit-exact.
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, 0.25, 65504.0, -65504.0, 6.103_515_6e-5,
+        ] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfc00);
+        // Tiny values flush to signed zero.
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-10), 0x8000);
+        // Smallest subnormal (2^-24) survives.
+        let sub = f16_bits_to_f32(0x0001);
+        assert!((sub - 5.960_464_5e-8).abs() < 1e-12);
+        assert_eq!(f32_to_f16_bits(sub), 0x0001);
+    }
+
+    #[test]
+    fn roundtrip_error_is_bounded() {
+        // Relative error of one f32→f16→f32 trip is at most 2^-11 for
+        // normal halves; the tier tolerance (1e-2 absolute, DESIGN §10)
+        // holds for all values the fuse produces.
+        let mut rng = Pcg64::new(9);
+        for &std in &[0.1f32, 1.0, 4.0] {
+            for v in rng.normal_vec(4096, std) {
+                let back = f16_bits_to_f32(f32_to_f16_bits(v));
+                let tol = (v.abs() * 4.9e-4).max(6e-8);
+                assert!(
+                    (back - v).abs() <= tol,
+                    "{v} -> {back} (err {})",
+                    (back - v).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next half;
+        // nearest-even rounds down to 1.0.
+        let halfway = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(halfway), 0x3c00);
+        // 1 + 3·2^-11 is halfway between 1+2^-10 and 1+2^-9; nearest-even
+        // rounds up to the even mantissa 2.
+        let halfway_up = 1.0f32 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(halfway_up), 0x3c02);
+    }
+
+    #[test]
+    fn quantized_table_rows_match_scalar_path() {
+        let (l, v, d) = (2, 12, 6);
+        let mut rng = Pcg64::new(11);
+        let data = rng.normal_vec(l * v * d, 1.0);
+        let p = TaskP::new(l, v, d, data.clone()).unwrap();
+        let q = QuantizedTaskP::from_taskp(&p);
+        assert_eq!(q.resident_bytes(), l * v * d * 2);
+        let mut row = vec![0f32; d];
+        for layer in 0..l {
+            for tok in 0..v {
+                q.copy_row(layer, tok, &mut row).unwrap();
+                for (k, &got) in row.iter().enumerate() {
+                    let want = data[(layer * v + tok) * d + k];
+                    assert!((got - want).abs() < 1e-2, "l{layer} t{tok} k{k}");
+                    assert_eq!(got.to_bits(), f16_bits_to_f32(f32_to_f16_bits(want)).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dtype_parse_and_sizes() {
+        assert_eq!(AdapterDType::parse("f32").unwrap(), AdapterDType::F32);
+        assert_eq!(AdapterDType::parse("f16").unwrap(), AdapterDType::F16);
+        assert!(AdapterDType::parse("int8").is_err());
+        assert_eq!(AdapterDType::F32.size(), 4);
+        assert_eq!(AdapterDType::F16.size(), 2);
+        assert_eq!(AdapterDType::F16.tensor_dtype(), DType::F16);
+    }
+}

@@ -1,0 +1,880 @@
+//! Tiered residency for adapter tables: RAM budget, LRU spill to disk,
+//! on-demand fault-in, pinning, and the hot task lifecycle (DESIGN.md §10).
+//!
+//! Every registered task owns one immutable table (an `Arc<dyn
+//! RowSource>`).  The residency manager moves tables between two tiers:
+//!
+//! * **resident** — the table lives in host RAM (f32 or f16 per
+//!   `AdapterConfig::dtype`) and gathers copy rows straight out of it;
+//! * **spilled** — the table lives in a `.aotckpt` file; a [`ColdTable`]
+//!   keeps the file open and serves rows by positioned reads, and the
+//!   next resolve *faults the table back in* if the RAM budget allows.
+//!
+//! Mutability rules (the lifecycle invariants the concurrency tests
+//! assert):
+//!
+//! * all operations take `&self` — tasks are registered, replaced,
+//!   unregistered, pinned and evicted **while the pipeline is serving**;
+//! * tables are immutable once registered; `replace` installs a fresh
+//!   entry, it never mutates in place;
+//! * a gather resolves each assignment to an `Arc` **snapshot** up
+//!   front — eviction and unregistration only drop the store's reference,
+//!   so in-flight gathers always finish against the exact table they
+//!   started with (snapshot isolation), and the memory is freed when the
+//!   last in-flight reference drops;
+//! * eviction uses `try_lock` on victims, so no lock-ordering cycle
+//!   exists between concurrent fault-ins — a contended victim is simply
+//!   skipped and, if nothing can be evicted, the gather is served
+//!   straight from the disk tier instead of blocking.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::tensor::{ckpt, DType};
+use crate::Result;
+
+use super::quant::{f16_bits_to_f32, AdapterDType, QuantizedTaskP};
+use super::store::{RowSource, TaskP};
+
+/// Name of the single tensor inside a spill file.
+const SPILL_TENSOR: &str = "p";
+
+/// Adapter-store configuration (CLI: `--adapter-ram-budget`,
+/// `--adapter-dtype`).
+#[derive(Clone, Debug)]
+pub struct AdapterConfig {
+    /// Max bytes of resident adapter tables; 0 means unlimited (never
+    /// spill).
+    pub ram_budget_bytes: usize,
+    /// Storage dtype of resident tables (fused-time quantization).
+    pub dtype: AdapterDType,
+    /// Where spilled tables go.  `None` auto-creates a per-process
+    /// directory under the system temp dir, removed when the store drops.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for AdapterConfig {
+    fn default() -> Self {
+        AdapterConfig { ram_budget_bytes: 0, dtype: AdapterDType::F32, spill_dir: None }
+    }
+}
+
+/// Parse a human byte size: plain bytes, or a `k`/`m`/`g` (or
+/// `KiB`/`MiB`/`GiB`) suffix in binary units.  `0`, `none` and
+/// `unlimited` disable the budget.
+pub fn parse_bytes(s: &str) -> Result<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    if t.is_empty() {
+        bail!("empty byte size");
+    }
+    if t == "none" || t == "unlimited" {
+        return Ok(0);
+    }
+    let (num, mult) = if let Some(rest) = t.strip_suffix("kib").or_else(|| t.strip_suffix("kb")) {
+        (rest, 1usize << 10)
+    } else if let Some(rest) = t.strip_suffix("mib").or_else(|| t.strip_suffix("mb")) {
+        (rest, 1 << 20)
+    } else if let Some(rest) = t.strip_suffix("gib").or_else(|| t.strip_suffix("gb")) {
+        (rest, 1 << 30)
+    } else if let Some(rest) = t.strip_suffix('k') {
+        (rest, 1 << 10)
+    } else if let Some(rest) = t.strip_suffix('m') {
+        (rest, 1 << 20)
+    } else if let Some(rest) = t.strip_suffix('g') {
+        (rest, 1 << 30)
+    } else if let Some(rest) = t.strip_suffix('b') {
+        (rest, 1)
+    } else {
+        (t.as_str(), 1)
+    };
+    let num = num.trim();
+    let value: f64 = num
+        .parse()
+        .map_err(|e| anyhow!("bad byte size {s:?}: {e}"))?;
+    if !value.is_finite() || value < 0.0 {
+        bail!("bad byte size {s:?}");
+    }
+    Ok((value * mult as f64).round() as usize)
+}
+
+/// Point-in-time residency counters, exported through `MetricsSnapshot`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdapterStats {
+    /// Bytes of adapter tables currently resident in the store (in-flight
+    /// gather snapshots of evicted tables are not counted — they free
+    /// themselves when the gather finishes).
+    pub resident_bytes: usize,
+    pub resident_tasks: usize,
+    pub spilled_tasks: usize,
+    /// Resolves served from the resident tier.
+    pub hits: usize,
+    /// Resolves that faulted a spilled table back into RAM.
+    pub faults: usize,
+    /// Resolves served straight from the disk tier (budget too tight to
+    /// fault in).
+    pub cold_serves: usize,
+    /// Tables evicted from RAM to the disk tier.
+    pub evictions: usize,
+    /// Spill files written (first eviction per table version; later
+    /// evictions reuse the file — tables are immutable).
+    pub spill_writes: usize,
+}
+
+enum Tier {
+    Resident {
+        table: Arc<dyn RowSource>,
+        /// Write-once spill cache: once a table version has hit disk, a
+        /// re-eviction swaps tiers without rewriting the file.
+        spill: Option<Arc<ColdTable>>,
+    },
+    Spilled { cold: Arc<ColdTable> },
+}
+
+struct Entry {
+    name: String,
+    /// Distinguishes spill files across replace cycles of the same name.
+    generation: u64,
+    pinned: AtomicBool,
+    last_used: AtomicU64,
+    state: Mutex<Tier>,
+}
+
+/// The residency manager behind [`super::PStore`].
+pub struct Residency {
+    layers: usize,
+    vocab: usize,
+    d_model: usize,
+    cfg: AdapterConfig,
+    entries: RwLock<HashMap<String, Arc<Entry>>>,
+    resident_bytes: AtomicUsize,
+    /// Tier gauges kept as atomics so `stats()` (called by the pipeline
+    /// after every batch) never touches an entry's state lock — those are
+    /// held across full-table disk I/O during spill and fault-in.
+    resident_tasks: AtomicUsize,
+    spilled_tasks: AtomicUsize,
+    /// Serializes the budget check-and-reserve sequence: without it, two
+    /// concurrent fault-ins could each pass the check and jointly
+    /// overshoot the RAM budget.
+    budget_gate: Mutex<()>,
+    clock: AtomicU64,
+    generation: AtomicU64,
+    spill_dir: OnceLock<PathBuf>,
+    /// True once we created `spill_dir` ourselves (then we remove it on
+    /// drop; a user-supplied directory is left alone).
+    owns_spill_dir: AtomicBool,
+    hits: AtomicUsize,
+    faults: AtomicUsize,
+    cold_serves: AtomicUsize,
+    evictions: AtomicUsize,
+    spill_writes: AtomicUsize,
+}
+
+impl Residency {
+    pub fn new(layers: usize, vocab: usize, d_model: usize, cfg: AdapterConfig) -> Residency {
+        Residency {
+            layers,
+            vocab,
+            d_model,
+            cfg,
+            entries: RwLock::new(HashMap::new()),
+            resident_bytes: AtomicUsize::new(0),
+            resident_tasks: AtomicUsize::new(0),
+            spilled_tasks: AtomicUsize::new(0),
+            budget_gate: Mutex::new(()),
+            clock: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            spill_dir: OnceLock::new(),
+            owns_spill_dir: AtomicBool::new(false),
+            hits: AtomicUsize::new(0),
+            faults: AtomicUsize::new(0),
+            cold_serves: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            spill_writes: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &AdapterConfig {
+        &self.cfg
+    }
+
+    /// Full resident footprint of one table at the configured dtype.
+    pub fn table_bytes(&self) -> usize {
+        self.layers * self.vocab * self.d_model * self.cfg.dtype.size()
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn spill_dir(&self) -> Result<&Path> {
+        if let Some(dir) = self.spill_dir.get() {
+            return Ok(dir);
+        }
+        let (dir, owned) = match &self.cfg.spill_dir {
+            Some(d) => (d.clone(), false),
+            None => {
+                let unique = format!(
+                    "aotpt-adapters-{}-{:p}",
+                    std::process::id(),
+                    self as *const _
+                );
+                (std::env::temp_dir().join(unique), true)
+            }
+        };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create adapter spill dir {}", dir.display()))?;
+        let dir = self.spill_dir.get_or_init(|| dir);
+        if owned {
+            self.owns_spill_dir.store(true, Ordering::Relaxed);
+        }
+        Ok(dir)
+    }
+
+    /// Register (or replace) a task's table.  Always succeeds within disk
+    /// limits: a table that cannot fit the RAM budget even after evicting
+    /// everything else is written straight to the disk tier.
+    ///
+    /// Replacement is atomic with respect to concurrent resolves: the new
+    /// entry is fully built before it swaps into the map, so a gather
+    /// racing a replace sees either the old or the new table — never a
+    /// missing task.  The old version is retired after the swap;
+    /// in-flight snapshots of it finish unaffected.
+    pub fn insert(&self, name: &str, table: Arc<dyn RowSource>) -> Result<()> {
+        let need = table.resident_bytes();
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed);
+        // Peek the entry being replaced: its resident bytes are about to
+        // be freed by the retire below, so they are *discounted* from the
+        // budget check (a replace at capacity must not spill the new
+        // table), and its pinned flag carries over to the new version.
+        let prior = self.entries.read().unwrap().get(name).cloned();
+        let (discount, pinned) = match &prior {
+            Some(e) => {
+                let bytes = match &*e.state.lock().unwrap() {
+                    Tier::Resident { table, .. } => table.resident_bytes(),
+                    Tier::Spilled { .. } => 0,
+                };
+                (bytes, e.pinned.load(Ordering::Relaxed))
+            }
+            None => (0, false),
+        };
+        drop(prior);
+        let tier = if self.try_reserve(need, discount, Some(name)) {
+            self.resident_tasks.fetch_add(1, Ordering::Relaxed);
+            Tier::Resident { table, spill: None }
+        } else {
+            let cold = self.write_spill(name, generation, table.as_ref())?;
+            self.spilled_tasks.fetch_add(1, Ordering::Relaxed);
+            Tier::Spilled { cold }
+        };
+        let entry = Arc::new(Entry {
+            name: name.to_string(),
+            generation,
+            pinned: AtomicBool::new(pinned),
+            last_used: AtomicU64::new(self.tick()),
+            state: Mutex::new(tier),
+        });
+        let old = self.entries.write().unwrap().insert(name.to_string(), entry);
+        if let Some(old) = old {
+            self.retire(&old);
+        }
+        Ok(())
+    }
+
+    /// Unregister a task.  In-flight gathers holding a snapshot finish
+    /// unaffected; the spill file (if any) is deleted best-effort — open
+    /// descriptors keep serving on platforms that allow unlink-while-open.
+    pub fn remove(&self, name: &str) -> Result<()> {
+        let entry = self
+            .entries
+            .write()
+            .unwrap()
+            .remove(name)
+            .ok_or_else(|| anyhow!("no fused P registered for task {name}"))?;
+        self.retire(&entry);
+        Ok(())
+    }
+
+    /// Release an entry's RAM accounting and spill file after it left the
+    /// map (unregister or replace).
+    fn retire(&self, entry: &Entry) {
+        let st = entry.state.lock().unwrap();
+        match &*st {
+            Tier::Resident { table, spill } => {
+                self.resident_bytes.fetch_sub(table.resident_bytes(), Ordering::Relaxed);
+                self.resident_tasks.fetch_sub(1, Ordering::Relaxed);
+                if let Some(cold) = spill {
+                    let _ = std::fs::remove_file(&cold.path);
+                }
+            }
+            Tier::Spilled { cold } => {
+                self.spilled_tasks.fetch_sub(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&cold.path);
+            }
+        }
+    }
+
+    /// Pin (or unpin) a task: pinned tasks are never chosen for eviction.
+    pub fn pin(&self, name: &str, pinned: bool) -> Result<()> {
+        let entry = self.entry(name)?;
+        entry.pinned.store(pinned, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn entry(&self, name: &str) -> Result<Arc<Entry>> {
+        self.entries
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no fused P registered for task {name}"))
+    }
+
+    /// Resolve a task to a gatherable row source, faulting the table in
+    /// from disk when the budget allows, and touching its LRU clock.
+    pub fn resolve(&self, name: &str) -> Result<Arc<dyn RowSource>> {
+        let entry = self.entry(name)?;
+        entry.last_used.store(self.tick(), Ordering::Relaxed);
+        let mut st = entry.state.lock().unwrap();
+        let cold = match &*st {
+            Tier::Resident { table, .. } => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(table));
+            }
+            Tier::Spilled { cold } => Arc::clone(cold),
+        };
+        let need = self.table_bytes();
+        if self.try_reserve(need, 0, None) {
+            let table = match cold.load_resident() {
+                Ok(table) => table,
+                Err(e) => {
+                    // Roll the reservation back; the table stays spilled.
+                    self.resident_bytes.fetch_sub(need, Ordering::Relaxed);
+                    return Err(e);
+                }
+            };
+            self.resident_tasks.fetch_add(1, Ordering::Relaxed);
+            self.spilled_tasks.fetch_sub(1, Ordering::Relaxed);
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            *st = Tier::Resident { table: Arc::clone(&table), spill: Some(cold) };
+            Ok(table)
+        } else {
+            // Budget too tight: serve rows straight from disk.
+            self.cold_serves.fetch_add(1, Ordering::Relaxed);
+            Ok(cold)
+        }
+    }
+
+    /// Atomically check the budget and reserve `need` bytes, spilling LRU
+    /// victims to make room.  `discount` bytes are about to be freed by
+    /// the caller (a replace retiring the old version) and relax the
+    /// check; `exclude` names an entry that must not be evicted (the one
+    /// being replaced — evicting it would waste a spill write).
+    ///
+    /// The check-and-add runs under `budget_gate`, so concurrent
+    /// fault-ins cannot jointly overshoot the budget; eviction only ever
+    /// *subtracts* concurrently, which is always safe.  On success the
+    /// bytes are already added — a caller whose load then fails must
+    /// subtract them back.
+    fn try_reserve(&self, need: usize, discount: usize, exclude: Option<&str>) -> bool {
+        let budget = self.cfg.ram_budget_bytes;
+        if budget == 0 {
+            self.resident_bytes.fetch_add(need, Ordering::Relaxed);
+            return true;
+        }
+        if need > budget {
+            return false;
+        }
+        let _gate = self.budget_gate.lock().unwrap();
+        while self.resident_bytes.load(Ordering::Relaxed) + need > budget + discount {
+            if !self.evict_lru(exclude) {
+                return false;
+            }
+        }
+        self.resident_bytes.fetch_add(need, Ordering::Relaxed);
+        true
+    }
+
+    /// Spill the least-recently-used unpinned resident table.  Victims
+    /// whose state lock is contended are skipped (no blocking, no
+    /// deadlock).  Returns false when nothing could be evicted.
+    fn evict_lru(&self, exclude: Option<&str>) -> bool {
+        let mut candidates: Vec<(u64, Arc<Entry>)> = self
+            .entries
+            .read()
+            .unwrap()
+            .values()
+            .filter(|e| exclude != Some(e.name.as_str()) && !e.pinned.load(Ordering::Relaxed))
+            .map(|e| (e.last_used.load(Ordering::Relaxed), Arc::clone(e)))
+            .collect();
+        candidates.sort_by_key(|(used, _)| *used);
+        for (_, entry) in candidates {
+            let Ok(mut st) = entry.state.try_lock() else { continue };
+            // Extract owned values first so no borrow of `st` survives
+            // into the tier swap below.
+            let spilled = {
+                let Tier::Resident { table, spill } = &*st else { continue };
+                let cold = match spill {
+                    Some(cold) => Arc::clone(cold),
+                    None => {
+                        match self.write_spill(&entry.name, entry.generation, table.as_ref()) {
+                            Ok(cold) => cold,
+                            Err(e) => {
+                                crate::warnln!("spill of task {} failed: {e:#}", entry.name);
+                                continue;
+                            }
+                        }
+                    }
+                };
+                (table.resident_bytes(), cold)
+            };
+            let (freed, cold) = spilled;
+            self.resident_bytes.fetch_sub(freed, Ordering::Relaxed);
+            self.resident_tasks.fetch_sub(1, Ordering::Relaxed);
+            self.spilled_tasks.fetch_add(1, Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            *st = Tier::Spilled { cold };
+            return true;
+        }
+        false
+    }
+
+    /// Write a table to its spill file and open the cold reader.
+    fn write_spill(&self, name: &str, generation: u64, table: &dyn RowSource) -> Result<Arc<ColdTable>> {
+        let safe: String = name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        let path = self.spill_dir()?.join(format!("{safe}-{generation}.aotckpt"));
+        let shape = [self.layers, self.vocab, self.d_model];
+        ckpt::save_one_with(&path, SPILL_TENSOR, table.dtype().tensor_dtype(), &shape, &mut |w| {
+            table.spill_into(w)
+        })?;
+        self.spill_writes.fetch_add(1, Ordering::Relaxed);
+        let cold = ColdTable::open(&path, self.layers, self.vocab, self.d_model, self.cfg.dtype)?;
+        Ok(Arc::new(cold))
+    }
+
+    pub fn names_sorted(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.entries.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.read().unwrap().contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Lock-free (atomics only): safe to call from the pipeline after
+    /// every batch even while another thread holds an entry lock across
+    /// spill/fault-in disk I/O.
+    pub fn stats(&self) -> AdapterStats {
+        AdapterStats {
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            resident_tasks: self.resident_tasks.load(Ordering::Relaxed),
+            spilled_tasks: self.spilled_tasks.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            faults: self.faults.load(Ordering::Relaxed),
+            cold_serves: self.cold_serves.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            spill_writes: self.spill_writes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for Residency {
+    fn drop(&mut self) {
+        if !self.owns_spill_dir.load(Ordering::Relaxed) {
+            return; // a user-supplied spill dir is left alone
+        }
+        if let Some(dir) = self.spill_dir.get() {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+/// The disk tier: a spilled table served by positioned reads from its
+/// `.aotckpt` file.  Rows dequantize into the caller's buffer exactly
+/// like the resident tiers, so a cold gather is bit-identical to the
+/// resident result for f32 tables (and to the dequantized f16 result for
+/// f16 tables).
+pub struct ColdTable {
+    path: PathBuf,
+    file: Mutex<File>,
+    data_offset: u64,
+    layers: usize,
+    vocab: usize,
+    d_model: usize,
+    dtype: AdapterDType,
+}
+
+impl ColdTable {
+    /// Open a spill file and validate its header against the store
+    /// geometry and dtype.
+    pub fn open(
+        path: &Path,
+        layers: usize,
+        vocab: usize,
+        d_model: usize,
+        dtype: AdapterDType,
+    ) -> Result<ColdTable> {
+        let meta = ckpt::locate(path, SPILL_TENSOR)?;
+        if meta.shape != [layers, vocab, d_model] {
+            bail!(
+                "{}: spilled table shape {:?} != [{layers}, {vocab}, {d_model}]",
+                path.display(),
+                meta.shape
+            );
+        }
+        let want: DType = dtype.tensor_dtype();
+        if meta.dtype != want {
+            bail!(
+                "{}: spilled table dtype {:?} != {:?}",
+                path.display(),
+                meta.dtype,
+                want
+            );
+        }
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        Ok(ColdTable {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+            data_offset: meta.data_offset,
+            layers,
+            vocab,
+            d_model,
+            dtype,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn read_at(&self, byte_offset: u64, buf: &mut [u8]) -> Result<()> {
+        let file = self.file.lock().unwrap();
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            file.read_exact_at(buf, self.data_offset + byte_offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut file = file;
+            file.seek(SeekFrom::Start(self.data_offset + byte_offset))?;
+            file.read_exact(buf)?;
+        }
+        Ok(())
+    }
+
+    /// Fault the whole table back into a resident source.
+    pub fn load_resident(&self) -> Result<Arc<dyn RowSource>> {
+        let elems = self.layers * self.vocab * self.d_model;
+        let mut raw = vec![0u8; elems * self.dtype.size()];
+        self.read_at(0, &mut raw)?;
+        match self.dtype {
+            AdapterDType::F32 => {
+                let data: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(Arc::new(TaskP::new(self.layers, self.vocab, self.d_model, data)?))
+            }
+            AdapterDType::F16 => {
+                let data: Vec<u16> = raw
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                    .collect();
+                Ok(Arc::new(QuantizedTaskP::new(
+                    self.layers,
+                    self.vocab,
+                    self.d_model,
+                    data,
+                )?))
+            }
+        }
+    }
+}
+
+impl RowSource for ColdTable {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn dtype(&self) -> AdapterDType {
+        self.dtype
+    }
+
+    fn tier(&self) -> &'static str {
+        "disk"
+    }
+
+    fn resident_bytes(&self) -> usize {
+        0
+    }
+
+    fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()> {
+        let d = self.d_model;
+        let esize = self.dtype.size();
+        let offset = ((layer * self.vocab + token) * d * esize) as u64;
+        // The cold path allocates a row-sized scratch read; only gathers
+        // that miss both RAM tiers pay this (the resident hot path stays
+        // allocation-free, DESIGN.md §9).
+        let mut raw = vec![0u8; d * esize];
+        self.read_at(offset, &mut raw)?;
+        match self.dtype {
+            AdapterDType::F32 => {
+                for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            AdapterDType::F16 => {
+                for (o, c) in out.iter_mut().zip(raw.chunks_exact(2)) {
+                    *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn spill_into(&self, _w: &mut dyn std::io::Write) -> Result<()> {
+        bail!("disk-tier table is already spilled")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn table(seed: u64, l: usize, v: usize, d: usize) -> Arc<dyn RowSource> {
+        let mut rng = Pcg64::new(seed);
+        Arc::new(TaskP::new(l, v, d, rng.normal_vec(l * v * d, 1.0)).unwrap())
+    }
+
+    fn constant_table(c: f32, l: usize, v: usize, d: usize) -> Arc<dyn RowSource> {
+        Arc::new(TaskP::new(l, v, d, vec![c; l * v * d]).unwrap())
+    }
+
+    fn row_of(src: &dyn RowSource, layer: usize, tok: usize) -> Vec<f32> {
+        let mut out = vec![0f32; src.d_model()];
+        src.copy_row(layer, tok, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn parse_bytes_accepts_suffixes() {
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        assert_eq!(parse_bytes("unlimited").unwrap(), 0);
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("4k").unwrap(), 4096);
+        assert_eq!(parse_bytes("2MiB").unwrap(), 2 << 20);
+        assert_eq!(parse_bytes("1.5g").unwrap(), 3 << 29);
+        assert_eq!(parse_bytes("512b").unwrap(), 512);
+        assert!(parse_bytes("nope").is_err());
+        assert!(parse_bytes("-1").is_err());
+    }
+
+    #[test]
+    fn unlimited_budget_keeps_everything_resident() {
+        let (l, v, d) = (2, 16, 4);
+        let r = Residency::new(l, v, d, AdapterConfig::default());
+        for i in 0..4 {
+            r.insert(&format!("t{i}"), table(i as u64 + 1, l, v, d)).unwrap();
+        }
+        let s = r.stats();
+        assert_eq!(s.resident_tasks, 4);
+        assert_eq!(s.spilled_tasks, 0);
+        assert_eq!(s.resident_bytes, 4 * l * v * d * 4);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn over_budget_spills_lru_and_faults_back() {
+        let (l, v, d) = (2, 16, 4);
+        let bytes = l * v * d * 4;
+        // Budget fits exactly two tables.
+        let cfg = AdapterConfig { ram_budget_bytes: 2 * bytes, ..Default::default() };
+        let r = Residency::new(l, v, d, cfg);
+        r.insert("a", constant_table(1.0, l, v, d)).unwrap();
+        r.insert("b", constant_table(2.0, l, v, d)).unwrap();
+        assert_eq!(r.stats().resident_tasks, 2);
+        // Touch a so b becomes the LRU, then insert c: b must spill.
+        let _ = r.resolve("a").unwrap();
+        r.insert("c", constant_table(3.0, l, v, d)).unwrap();
+        let s = r.stats();
+        assert_eq!(s.resident_tasks, 2);
+        assert_eq!(s.spilled_tasks, 1);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.spill_writes, 1);
+        assert_eq!(s.resident_bytes, 2 * bytes);
+        // b still serves (fault-in evicts the new LRU) with exact values.
+        let src = r.resolve("b").unwrap();
+        assert_eq!(row_of(src.as_ref(), 1, 3), vec![2.0; d]);
+        assert_eq!(r.stats().faults, 1);
+        // All three keep serving correct values in any order.
+        for (name, c) in [("a", 1.0f32), ("c", 3.0), ("b", 2.0)] {
+            let src = r.resolve(name).unwrap();
+            assert_eq!(row_of(src.as_ref(), 0, 0), vec![c; d], "task {name}");
+        }
+    }
+
+    #[test]
+    fn budget_below_one_table_serves_cold_bit_identical() {
+        let (l, v, d) = (2, 20, 4);
+        let bytes = l * v * d * 4;
+        let cfg = AdapterConfig { ram_budget_bytes: bytes / 2, ..Default::default() };
+        let r = Residency::new(l, v, d, cfg);
+        let mut rng = Pcg64::new(5);
+        let data = rng.normal_vec(l * v * d, 1.0);
+        let reference = TaskP::new(l, v, d, data.clone()).unwrap();
+        r.insert("x", Arc::new(TaskP::new(l, v, d, data).unwrap())).unwrap();
+        let s = r.stats();
+        assert_eq!(s.resident_tasks, 0);
+        assert_eq!(s.spilled_tasks, 1);
+        let src = r.resolve("x").unwrap();
+        assert_eq!(src.tier(), "disk");
+        assert_eq!(r.stats().cold_serves, 1);
+        // Disk-tier rows are bit-identical to the resident f32 rows.
+        for layer in 0..l {
+            for tok in 0..v {
+                let got = row_of(src.as_ref(), layer, tok);
+                assert_eq!(got.as_slice(), reference.row(layer, tok));
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_tasks_are_never_evicted() {
+        let (l, v, d) = (1, 16, 4);
+        let bytes = l * v * d * 4;
+        let cfg = AdapterConfig { ram_budget_bytes: bytes, ..Default::default() };
+        let r = Residency::new(l, v, d, cfg);
+        r.insert("keep", constant_table(7.0, l, v, d)).unwrap();
+        r.pin("keep", true).unwrap();
+        // A second insert cannot evict the pinned table: it spills itself.
+        r.insert("other", constant_table(8.0, l, v, d)).unwrap();
+        let s = r.stats();
+        assert_eq!(s.resident_tasks, 1);
+        assert_eq!(s.spilled_tasks, 1);
+        let src = r.resolve("keep").unwrap();
+        assert_ne!(src.tier(), "disk");
+        // Unpin: now "other" can fault in and evict "keep".
+        r.pin("keep", false).unwrap();
+        let src = r.resolve("other").unwrap();
+        assert_ne!(src.tier(), "disk");
+        assert_eq!(row_of(src.as_ref(), 0, 1), vec![8.0; d]);
+        assert!(r.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn replace_at_capacity_stays_resident_and_keeps_pin() {
+        let (l, v, d) = (1, 16, 4);
+        let bytes = l * v * d * 4;
+        let cfg = AdapterConfig { ram_budget_bytes: bytes, ..Default::default() };
+        let r = Residency::new(l, v, d, cfg);
+        r.insert("x", constant_table(1.0, l, v, d)).unwrap();
+        r.pin("x", true).unwrap();
+        // The old version's bytes are freed by the replace, so the new
+        // version must land resident — no spill write, no fault-in.
+        r.insert("x", constant_table(2.0, l, v, d)).unwrap();
+        let s = r.stats();
+        assert_eq!(s.resident_tasks, 1, "{s:?}");
+        assert_eq!(s.spilled_tasks, 0, "{s:?}");
+        assert_eq!(s.spill_writes, 0, "replace at capacity must not spill: {s:?}");
+        assert_eq!(s.resident_bytes, bytes);
+        let src = r.resolve("x").unwrap();
+        assert_eq!(row_of(src.as_ref(), 0, 0), vec![2.0; d]);
+        // The pin survives the replace: a competitor cannot evict x.
+        r.insert("y", constant_table(3.0, l, v, d)).unwrap();
+        assert_ne!(r.resolve("x").unwrap().tier(), "disk");
+        assert_eq!(r.resolve("y").unwrap().tier(), "disk");
+    }
+
+    #[test]
+    fn remove_frees_budget_and_errors_on_missing() {
+        let (l, v, d) = (1, 8, 4);
+        let r = Residency::new(l, v, d, AdapterConfig::default());
+        r.insert("x", constant_table(1.0, l, v, d)).unwrap();
+        assert_eq!(r.resident_bytes(), l * v * d * 4);
+        r.remove("x").unwrap();
+        assert_eq!(r.resident_bytes(), 0);
+        assert!(r.remove("x").is_err());
+        assert!(r.resolve("x").is_err());
+    }
+
+    #[test]
+    fn replace_serves_the_new_table() {
+        let (l, v, d) = (1, 8, 4);
+        let r = Residency::new(l, v, d, AdapterConfig::default());
+        r.insert("x", constant_table(1.0, l, v, d)).unwrap();
+        let old = r.resolve("x").unwrap();
+        r.insert("x", constant_table(2.0, l, v, d)).unwrap();
+        // The in-flight snapshot still reads the old version...
+        assert_eq!(row_of(old.as_ref(), 0, 0), vec![1.0; d]);
+        // ...while new resolves see the replacement.
+        let new = r.resolve("x").unwrap();
+        assert_eq!(row_of(new.as_ref(), 0, 0), vec![2.0; d]);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn f16_residency_spills_and_reloads_quantized() {
+        let (l, v, d) = (2, 12, 4);
+        let bytes16 = l * v * d * 2;
+        let cfg = AdapterConfig {
+            ram_budget_bytes: bytes16,
+            dtype: AdapterDType::F16,
+            spill_dir: None,
+        };
+        let r = Residency::new(l, v, d, cfg);
+        let mut rng = Pcg64::new(8);
+        let a = rng.normal_vec(l * v * d, 1.0);
+        let b = rng.normal_vec(l * v * d, 1.0);
+        let pa = TaskP::new(l, v, d, a.clone()).unwrap();
+        let pb = TaskP::new(l, v, d, b.clone()).unwrap();
+        r.insert("a", Arc::new(QuantizedTaskP::from_taskp(&pa))).unwrap();
+        r.insert("b", Arc::new(QuantizedTaskP::from_taskp(&pb))).unwrap();
+        // Ping-pong so both spill and fault at least once.
+        for _ in 0..3 {
+            for (name, data) in [("a", &a), ("b", &b)] {
+                let src = r.resolve(name).unwrap();
+                let got = row_of(src.as_ref(), 1, 5);
+                for (k, &g) in got.iter().enumerate() {
+                    let want = data[(v + 5) * d + k];
+                    assert!((g - want).abs() < 1e-2, "{name} k{k}: {g} vs {want}");
+                }
+            }
+        }
+        let s = r.stats();
+        assert!(s.evictions >= 1, "expected evictions, got {s:?}");
+        assert!(s.faults >= 1, "expected faults, got {s:?}");
+        assert!(s.resident_bytes <= bytes16);
+    }
+}

@@ -1,24 +1,74 @@
-//! The AoT P store: per-task fused prompt tables in host RAM + the
+//! The AoT P store: tiered per-task fused prompt tables + the
 //! ahead-of-time row gather.
 //!
 //! Paper §3.3: "During the evaluation, there is no need to store the full
 //! P in GPU memory.  Instead, it could be stored in RAM, and only rows of
 //! these matrices should be placed in GPU memory to be added to the hidden
-//! states before each layer."  `gather_into` is exactly that operation and
-//! is the coordinator's per-request hot path — it is benchmarked by
+//! states before each layer."  `gather_batch` is exactly that operation
+//! and is the coordinator's per-request hot path — it is benchmarked by
 //! `benches/gather_hotpath.rs` and must never dominate the backbone
 //! execute (DESIGN.md §9, L3 target).
+//!
+//! Storage is tiered (DESIGN.md §10): the gather never assumes a resident
+//! f32 `Vec` — it speaks to every tier through [`RowSource`], so tables
+//! may live in RAM as f32 ([`TaskP`]), in RAM as f16
+//! ([`super::quant::QuantizedTaskP`]), or on disk
+//! ([`super::residency::ColdTable`]), moving between tiers under an LRU
+//! RAM budget while the pipeline is serving.  All lifecycle operations
+//! (`insert`/`remove`/`pin`) take `&self`; in-flight gathers hold `Arc`
+//! snapshots, so eviction and unregistration never corrupt a running
+//! batch.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail};
+use anyhow::bail;
 
 use crate::tensor::Tensor;
 use crate::Result;
 
-/// One task's fused table, laid out `[l, V, d]` row-major so a (layer,
-/// token) row is one contiguous `d`-float slice.
+use super::quant::AdapterDType;
+use super::residency::{AdapterConfig, AdapterStats, Residency};
+
+/// One tier's view of a task table: "give me row (layer, token)".
+///
+/// Implementations: [`TaskP`] (resident f32),
+/// [`super::quant::QuantizedTaskP`] (resident f16),
+/// [`super::residency::ColdTable`] (disk).  `copy_row` always produces
+/// f32 into the caller's (arena-owned) buffer, so the device-visible bias
+/// layout is identical across tiers.
+pub trait RowSource: Send + Sync {
+    fn layers(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn d_model(&self) -> usize;
+    /// Storage dtype of this source.
+    fn dtype(&self) -> AdapterDType;
+    /// Tier label (`"ram-f32"`, `"ram-f16"`, `"disk"`) for tests/logs.
+    fn tier(&self) -> &'static str;
+    /// Host RAM pinned by this source (0 for disk-backed tables).
+    fn resident_bytes(&self) -> usize;
+    /// Copy row (layer, token), dequantized to f32, into `out`
+    /// (length `d_model`).  Only the disk tier can fail.
+    fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()>;
+    /// Stream the raw table payload (little-endian, storage dtype) for
+    /// spilling to disk.  Disk-backed sources decline.
+    fn spill_into(&self, w: &mut dyn std::io::Write) -> Result<()>;
+}
+
+/// L2 norms of every vocabulary row at `layer` — the §4.3 analysis
+/// ("tokens with the largest ‖P_x‖₂"), tier-agnostic.
+pub fn row_norms(src: &dyn RowSource, layer: usize) -> Result<Vec<f32>> {
+    let d = src.d_model();
+    let mut row = vec![0f32; d];
+    let mut out = Vec::with_capacity(src.vocab());
+    for tok in 0..src.vocab() {
+        src.copy_row(layer, tok, &mut row)?;
+        out.push(row.iter().map(|x| x * x).sum::<f32>().sqrt());
+    }
+    Ok(out)
+}
+
+/// One task's fused table resident as f32, laid out `[l, V, d]` row-major
+/// so a (layer, token) row is one contiguous `d`-float slice.
 pub struct TaskP {
     pub layers: usize,
     pub vocab: usize,
@@ -57,6 +107,11 @@ impl TaskP {
         &self.data[start..start + d]
     }
 
+    /// The full `[l·V·d]` payload (fused-time quantization reads this).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
     /// Host-RAM footprint in bytes (paper §3.3's RAM-vs-speed trade-off).
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
@@ -71,52 +126,144 @@ impl TaskP {
     }
 }
 
+impl RowSource for TaskP {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn dtype(&self) -> AdapterDType {
+        AdapterDType::F32
+    }
+
+    fn tier(&self) -> &'static str {
+        "ram-f32"
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    #[inline]
+    fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()> {
+        out.copy_from_slice(self.row(layer, token));
+        Ok(())
+    }
+
+    fn spill_into(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        for &v in &self.data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
 /// Minimum live elements per layer before the gather fans out to scoped
 /// threads (below this, spawn overhead rivals the copy itself).
 const PARALLEL_MIN_ELEMS: usize = 16 * 1024;
 
-/// All registered tasks' tables.
+/// All registered tasks' tables, tiered and hot-mutable: registration,
+/// replacement, unregistration and eviction all run on `&self` while
+/// gathers are in flight (snapshot isolation via per-gather `Arc`
+/// resolution — DESIGN.md §10).
 pub struct PStore {
     layers: usize,
     vocab: usize,
     d_model: usize,
-    tasks: HashMap<String, Arc<TaskP>>,
+    residency: Residency,
 }
 
 impl PStore {
+    /// A store with default tiering: resident f32, unlimited RAM budget
+    /// (the seed behavior).
     pub fn new(layers: usize, vocab: usize, d_model: usize) -> PStore {
-        PStore { layers, vocab, d_model, tasks: HashMap::new() }
+        PStore::with_config(layers, vocab, d_model, AdapterConfig::default())
     }
 
-    pub fn insert(&mut self, task: &str, p: TaskP) -> Result<()> {
+    /// A store with explicit tiering (dtype, RAM budget, spill dir).
+    pub fn with_config(
+        layers: usize,
+        vocab: usize,
+        d_model: usize,
+        cfg: AdapterConfig,
+    ) -> PStore {
+        PStore {
+            layers,
+            vocab,
+            d_model,
+            residency: Residency::new(layers, vocab, d_model, cfg),
+        }
+    }
+
+    pub fn config(&self) -> &AdapterConfig {
+        self.residency.config()
+    }
+
+    /// Register (or hot-replace) a task's fused table.  The table is
+    /// quantized to the configured storage dtype here, at fuse time; a
+    /// table that cannot fit the RAM budget goes straight to the disk
+    /// tier.  In-flight gathers against a replaced table finish on their
+    /// snapshot.
+    pub fn insert(&self, task: &str, p: TaskP) -> Result<()> {
         if (p.layers, p.vocab, p.d_model) != (self.layers, self.vocab, self.d_model) {
             bail!("task {task}: table geometry mismatch");
         }
-        self.tasks.insert(task.to_string(), Arc::new(p));
-        Ok(())
+        let table: Arc<dyn RowSource> = match self.residency.config().dtype {
+            AdapterDType::F32 => Arc::new(p),
+            AdapterDType::F16 => Arc::new(super::quant::QuantizedTaskP::from_taskp(&p)),
+        };
+        self.residency.insert(task, table)
     }
 
-    pub fn get(&self, task: &str) -> Result<&Arc<TaskP>> {
-        self.tasks
-            .get(task)
-            .ok_or_else(|| anyhow!("no fused P registered for task {task}"))
+    /// Unregister a task while serving.  In-flight gathers finish on
+    /// their snapshots; later resolves error.
+    pub fn remove(&self, task: &str) -> Result<()> {
+        self.residency.remove(task)
     }
 
-    pub fn task_names(&self) -> Vec<&str> {
-        self.tasks.keys().map(String::as_str).collect()
+    /// Pin a task into RAM (never evicted) or release it.
+    pub fn pin(&self, task: &str, pinned: bool) -> Result<()> {
+        self.residency.pin(task, pinned)
+    }
+
+    /// Resolve a task to its current tier's row source (faulting the
+    /// table in from disk if the budget allows).  This is the per-gather
+    /// snapshot point: the returned `Arc` stays valid across any
+    /// concurrent eviction, replacement or unregistration.
+    pub fn get(&self, task: &str) -> Result<Arc<dyn RowSource>> {
+        self.residency.resolve(task)
+    }
+
+    /// Registered task names, sorted (deterministic across runs; same
+    /// order and type as `TaskRegistry::task_names`).
+    pub fn task_names(&self) -> Vec<String> {
+        self.residency.names_sorted()
     }
 
     pub fn len(&self) -> usize {
-        self.tasks.len()
+        self.residency.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tasks.is_empty()
+        self.residency.is_empty()
     }
 
-    /// Total host RAM held by all tables.
+    /// Host RAM currently held by resident tables (spilled tables count
+    /// zero — the paper's §3.3 trade-off, now under an explicit budget).
     pub fn bytes(&self) -> usize {
-        self.tasks.values().map(|p| p.bytes()).sum()
+        self.residency.resident_bytes()
+    }
+
+    /// Residency/tier counters for `MetricsSnapshot`.
+    pub fn stats(&self) -> AdapterStats {
+        self.residency.stats()
     }
 
     /// Table geometry accessors (the serving pipeline sizes its arena
@@ -170,6 +317,10 @@ impl PStore {
     /// rows are computed independently.  Layers are gathered on up to
     /// `threads` scoped threads.
     ///
+    /// Each live row's task is resolved to an `Arc` snapshot up front, so
+    /// concurrent eviction/unregistration never affects this batch, and
+    /// the resident-tier steady state stays free of arena allocations.
+    ///
     /// Token ids of live rows are validated against the vocabulary and
     /// rejected with an error — a bad id must never panic the worker
     /// (release builds would otherwise die on the slice bound).
@@ -201,8 +352,9 @@ impl PStore {
             return Ok(()); // degenerate geometry or no live rows: nothing to copy
         }
         self.validate_ids(&ids[..live * n])?;
-        // Resolve tasks once per row, not once per token.
-        let tables: Vec<&Arc<TaskP>> = assignments
+        // Resolve tiers once per row, not once per token: the snapshot
+        // point for eviction/unregister isolation.
+        let sources: Vec<Arc<dyn RowSource>> = assignments
             .iter()
             .map(|t| self.get(t))
             .collect::<Result<_>>()?;
@@ -218,22 +370,33 @@ impl PStore {
         };
         if threads == 1 {
             for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
-                gather_layer(&tables, layer, ids, n, d, layer_out);
+                gather_layer(&sources, layer, ids, n, d, layer_out)?;
             }
             return Ok(());
         }
         let layers_per = self.layers.div_ceil(threads);
+        // Only the disk tier can fail mid-copy; the first error wins and
+        // fails the whole batch (partial output is discarded upstream).
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         std::thread::scope(|scope| {
             for (chunk_idx, chunk) in out.chunks_mut(layers_per * layer_block).enumerate() {
-                let tables = &tables;
+                let sources = &sources;
+                let first_err = &first_err;
                 scope.spawn(move || {
                     for (i, layer_out) in chunk.chunks_mut(layer_block).enumerate() {
-                        gather_layer(tables, chunk_idx * layers_per + i, ids, n, d, layer_out);
+                        let layer = chunk_idx * layers_per + i;
+                        if let Err(e) = gather_layer(sources, layer, ids, n, d, layer_out) {
+                            *first_err.lock().unwrap() = Some(e);
+                            return;
+                        }
                     }
                 });
             }
         });
-        Ok(())
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     fn validate_ids(&self, ids: &[i32]) -> Result<()> {
@@ -248,36 +411,43 @@ impl PStore {
 
 /// Copy one layer's rows for every live assignment (ids pre-validated).
 fn gather_layer(
-    tables: &[&Arc<TaskP>],
+    sources: &[Arc<dyn RowSource>],
     layer: usize,
     ids: &[i32],
     n: usize,
     d: usize,
     out: &mut [f32],
-) {
-    for (j, table) in tables.iter().enumerate() {
+) -> Result<()> {
+    for (j, src) in sources.iter().enumerate() {
         let row_base = j * n * d;
         for t in 0..n {
             let tok = ids[j * n + t] as usize;
-            let src = table.row(layer, tok);
-            out[row_base + t * d..row_base + (t + 1) * d].copy_from_slice(src);
+            src.copy_row(layer, tok, &mut out[row_base + t * d..row_base + (t + 1) * d])?;
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::peft::residency::parse_bytes;
     use crate::util::Pcg64;
 
     fn store(layers: usize, vocab: usize, d: usize) -> PStore {
-        let mut s = PStore::new(layers, vocab, d);
+        let s = PStore::new(layers, vocab, d);
         let mut rng = Pcg64::new(1);
         for task in ["a", "b"] {
             let data = rng.normal_vec(layers * vocab * d, 1.0);
             s.insert(task, TaskP::new(layers, vocab, d, data).unwrap()).unwrap();
         }
         s
+    }
+
+    fn row_of(src: &dyn RowSource, layer: usize, tok: usize) -> Vec<f32> {
+        let mut out = vec![0f32; src.d_model()];
+        src.copy_row(layer, tok, &mut out).unwrap();
+        out
     }
 
     #[test]
@@ -295,7 +465,7 @@ mod tests {
                 for t in 0..n {
                     let tok = ids[j * n + t] as usize;
                     let got = &data[((layer * 2 + j) * n + t) * d..((layer * 2 + j) * n + t + 1) * d];
-                    assert_eq!(got, table.row(layer, tok), "layer {layer} row {j} tok {t}");
+                    assert_eq!(got, row_of(table.as_ref(), layer, tok), "layer {layer} row {j} tok {t}");
                 }
             }
         }
@@ -303,7 +473,7 @@ mod tests {
 
     #[test]
     fn zero_table_gathers_zeros() {
-        let mut s = PStore::new(2, 10, 4);
+        let s = PStore::new(2, 10, 4);
         s.insert("z", TaskP::zeros(2, 10, 4)).unwrap();
         let out = s.gather(&["z"], &[1, 2, 3], 3).unwrap();
         assert!(out.as_f32().unwrap().iter().all(|&x| x == 0.0));
@@ -311,7 +481,7 @@ mod tests {
 
     #[test]
     fn geometry_mismatch_rejected() {
-        let mut s = PStore::new(2, 10, 4);
+        let s = PStore::new(2, 10, 4);
         assert!(s.insert("bad", TaskP::zeros(3, 10, 4)).is_err());
         assert!(s.get("missing").is_err());
     }
@@ -333,12 +503,118 @@ mod tests {
             .0;
         assert_eq!(argmax, 5);
         assert!((norms[5] - 6.0).abs() < 1e-6); // sqrt(4 * 9)
+        // The tier-agnostic helper agrees with the inherent method.
+        assert_eq!(super::row_norms(&p, 0).unwrap(), norms);
     }
 
     #[test]
     fn ram_accounting() {
         let s = store(2, 10, 4);
         assert_eq!(s.bytes(), 2 * 2 * 10 * 4 * 4);
+    }
+
+    #[test]
+    fn task_names_are_sorted_and_deterministic() {
+        let s = PStore::new(1, 4, 2);
+        for name in ["zeta", "alpha", "mid"] {
+            s.insert(name, TaskP::zeros(1, 4, 2)).unwrap();
+        }
+        assert_eq!(s.task_names(), vec!["alpha", "mid", "zeta"]);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn hot_remove_and_replace() {
+        let (l, v, d) = (1, 6, 2);
+        let s = PStore::new(l, v, d);
+        s.insert("x", TaskP::new(l, v, d, vec![1.0; l * v * d]).unwrap()).unwrap();
+        let snapshot = s.get("x").unwrap();
+        s.insert("x", TaskP::new(l, v, d, vec![2.0; l * v * d]).unwrap()).unwrap();
+        // Snapshot isolation: the old Arc still reads the old values.
+        assert_eq!(row_of(snapshot.as_ref(), 0, 0), vec![1.0; d]);
+        assert_eq!(row_of(s.get("x").unwrap().as_ref(), 0, 0), vec![2.0; d]);
+        s.remove("x").unwrap();
+        assert!(s.get("x").is_err());
+        assert!(s.remove("x").is_err());
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn f16_store_gathers_within_tolerance() {
+        let (l, v, d, n) = (2, 30, 8, 6);
+        let cfg = AdapterConfig { dtype: AdapterDType::F16, ..Default::default() };
+        let f16_store = PStore::with_config(l, v, d, cfg);
+        let f32_store = PStore::new(l, v, d);
+        let mut rng = Pcg64::new(21);
+        let data = rng.normal_vec(l * v * d, 1.0);
+        f16_store.insert("t", TaskP::new(l, v, d, data.clone()).unwrap()).unwrap();
+        f32_store.insert("t", TaskP::new(l, v, d, data).unwrap()).unwrap();
+        assert_eq!(f16_store.bytes() * 2, f32_store.bytes());
+        assert_eq!(f16_store.get("t").unwrap().tier(), "ram-f16");
+        let ids: Vec<i32> = (0..n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let a = f16_store.gather(&["t"], &ids, n).unwrap();
+        let b = f32_store.gather(&["t"], &ids, n).unwrap();
+        for (x, y) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+            assert!((x - y).abs() < 1e-2, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn spilled_store_gather_is_bit_identical_to_resident() {
+        let (l, v, d, n) = (2, 25, 4, 7);
+        let mut rng = Pcg64::new(22);
+        let data = rng.normal_vec(l * v * d, 1.0);
+        // Budget below one table: everything serves from the disk tier.
+        let table_bytes = l * v * d * 4;
+        let cfg = AdapterConfig { ram_budget_bytes: table_bytes / 2, ..Default::default() };
+        let cold_store = PStore::with_config(l, v, d, cfg);
+        let hot_store = PStore::new(l, v, d);
+        cold_store.insert("t", TaskP::new(l, v, d, data.clone()).unwrap()).unwrap();
+        hot_store.insert("t", TaskP::new(l, v, d, data).unwrap()).unwrap();
+        assert_eq!(cold_store.get("t").unwrap().tier(), "disk");
+        let ids: Vec<i32> = (0..n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let cold = cold_store.gather(&["t"], &ids, n).unwrap();
+        let hot = hot_store.gather(&["t"], &ids, n).unwrap();
+        assert_eq!(cold.as_f32().unwrap(), hot.as_f32().unwrap());
+        let stats = cold_store.stats();
+        assert!(stats.cold_serves >= 1);
+        assert_eq!(stats.resident_tasks, 0);
+        assert_eq!(stats.spilled_tasks, 1);
+    }
+
+    #[test]
+    fn budgeted_store_serves_more_bytes_than_budget() {
+        // The §3.3 claim under a budget: register far more task bytes
+        // than RAM allows; every task still serves correct values via
+        // spill + fault-in, and the counters show the traffic.
+        let (l, v, d, n) = (2, 32, 4, 5);
+        let table_bytes = l * v * d * 4;
+        let cfg = AdapterConfig { ram_budget_bytes: 2 * table_bytes, ..Default::default() };
+        let s = PStore::with_config(l, v, d, cfg);
+        let n_tasks = 6;
+        for i in 0..n_tasks {
+            let c = (i + 1) as f32;
+            s.insert(&format!("t{i}"), TaskP::new(l, v, d, vec![c; l * v * d]).unwrap())
+                .unwrap();
+        }
+        assert!(s.bytes() <= 2 * table_bytes, "resident {} over budget", s.bytes());
+        let ids: Vec<i32> = (0..n).map(|t| (t % v) as i32).collect();
+        for round in 0..2 {
+            for i in 0..n_tasks {
+                let name = format!("t{i}");
+                let out = s.gather(&[name.as_str()], &ids, n).unwrap();
+                let want = (i + 1) as f32;
+                assert!(
+                    out.as_f32().unwrap().iter().all(|&x| x == want),
+                    "round {round} task {name}"
+                );
+            }
+        }
+        let stats = s.stats();
+        assert!(stats.evictions >= 1, "{stats:?}");
+        assert!(stats.faults >= 1, "{stats:?}");
+        assert!(stats.spilled_tasks + stats.resident_tasks == n_tasks);
+        assert!(stats.resident_bytes <= 2 * table_bytes);
     }
 
     #[test]
@@ -397,7 +673,7 @@ mod tests {
             let layer_base = layer * b * n * d;
             for t in 0..n {
                 let got = &out[layer_base + t * d..layer_base + (t + 1) * d];
-                assert_eq!(got, table.row(layer, ids[t] as usize));
+                assert_eq!(got, row_of(table.as_ref(), layer, ids[t] as usize));
             }
             // Filler rows 1..3 are untouched.
             for x in &out[layer_base + n * d..layer_base + b * n * d] {
@@ -417,5 +693,18 @@ mod tests {
         // wrong out length
         let mut short = vec![0f32; 5];
         assert!(s.gather_batch(&["a"], &[0; 6], 3, 2, 1, &mut short).is_err());
+    }
+
+    #[test]
+    fn with_config_parses_cli_shapes() {
+        // The CLI wiring: budget string + dtype string → config.
+        let cfg = AdapterConfig {
+            ram_budget_bytes: parse_bytes("4KiB").unwrap(),
+            dtype: AdapterDType::parse("f16").unwrap(),
+            spill_dir: None,
+        };
+        let s = PStore::with_config(1, 8, 4, cfg);
+        assert_eq!(s.config().ram_budget_bytes, 4096);
+        assert_eq!(s.config().dtype, AdapterDType::F16);
     }
 }

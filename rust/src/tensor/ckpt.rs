@@ -2,7 +2,7 @@
 //! `python/compile/ckpt.py` for the authoritative layout).
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::{BufReader, Read, Seek, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context};
@@ -12,6 +12,9 @@ use crate::Result;
 
 const MAGIC: &[u8; 4] = b"ACKP";
 const VERSION: u32 = 1;
+
+/// Fixed header bytes: magic + version + tensor count.
+const HEADER_LEN: u64 = 12;
 
 /// Load every tensor in a checkpoint.
 pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
@@ -75,6 +78,101 @@ pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
     Ok(())
 }
 
+/// Where one tensor's payload lives inside a checkpoint file — the
+/// adapter disk tier (`peft::residency::ColdTable`) reads rows by
+/// positioned I/O at `data_offset` without loading the table.
+#[derive(Clone, Debug)]
+pub struct TensorEntryMeta {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Absolute byte offset of the payload within the file.
+    pub data_offset: u64,
+    pub data_len: u64,
+}
+
+/// Find `name` in a checkpoint without reading any tensor payload.
+pub fn locate(path: &Path, name: &str) -> Result<TensorEntryMeta> {
+    let mut f = BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an aotckpt file", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let count = read_u32(&mut f)?;
+    let mut offset = HEADER_LEN;
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name_buf = vec![0u8; name_len];
+        f.read_exact(&mut name_buf)?;
+        let entry_name = String::from_utf8(name_buf)?;
+        let mut meta = [0u8; 2];
+        f.read_exact(&mut meta)?;
+        let dtype = DType::from_code(meta[0])?;
+        let ndim = meta[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let data_len = read_u64(&mut f)?;
+        offset += 2 + name_len as u64 + 2 + 4 * ndim as u64 + 8;
+        if entry_name == name {
+            return Ok(TensorEntryMeta { dtype, shape, data_offset: offset, data_len });
+        }
+        f.seek_relative(data_len as i64)?;
+        offset += data_len;
+    }
+    bail!("{}: no tensor named {name}", path.display())
+}
+
+/// Write a single-tensor checkpoint, streaming the payload through
+/// `payload` instead of materializing a `Tensor` (the adapter store
+/// spills multi-megabyte tables this way without a second copy).  The
+/// callback must write exactly `shape.product() * dtype.size()` bytes,
+/// little-endian; the length is verified after the write.
+pub fn save_one_with(
+    path: &Path,
+    name: &str,
+    dtype: DType,
+    shape: &[usize],
+    payload: &mut dyn FnMut(&mut dyn Write) -> Result<()>,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&1u32.to_le_bytes())?;
+    let nb = name.as_bytes();
+    f.write_all(&(nb.len() as u16).to_le_bytes())?;
+    f.write_all(nb)?;
+    f.write_all(&[dtype.code(), shape.len() as u8])?;
+    for &d in shape {
+        f.write_all(&(d as u32).to_le_bytes())?;
+    }
+    let nbytes = (shape.iter().product::<usize>() * dtype.size()) as u64;
+    f.write_all(&nbytes.to_le_bytes())?;
+    let data_start = f.stream_position()?;
+    payload(&mut f)?;
+    let written = f.stream_position()? - data_start;
+    if written != nbytes {
+        bail!(
+            "{}: payload wrote {written} bytes, header declares {nbytes}",
+            path.display()
+        );
+    }
+    f.flush()?;
+    Ok(())
+}
+
 fn read_u16(f: &mut impl Read) -> Result<u16> {
     let mut b = [0u8; 2];
     f.read_exact(&mut b)?;
@@ -113,6 +211,69 @@ mod tests {
         assert_eq!(back["a"].shape, vec![2, 2]);
         assert_eq!(back["b.ids"].as_i32().unwrap(), &[7, 8, 9]);
         assert_eq!(back["scalar"].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn f16_roundtrip() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f16.aotckpt");
+        let bits = vec![0x3c00u16, 0xbc00, 0x7bff, 0x0001, 0x8000, 0x0000];
+        let mut tensors = BTreeMap::new();
+        tensors.insert("q".to_string(), Tensor::from_f16_bits(&[2, 3], bits.clone()));
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back["q"].dtype, DType::F16);
+        assert_eq!(back["q"].shape, vec![2, 3]);
+        assert_eq!(back["q"].as_f16_bits().unwrap(), bits);
+    }
+
+    #[test]
+    fn locate_finds_offsets_without_loading() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("locate.aotckpt");
+        let mut tensors = BTreeMap::new();
+        tensors.insert("first".to_string(), Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]));
+        tensors.insert("second".to_string(), Tensor::from_i32(&[2, 2], vec![4, 5, 6, 7]));
+        save(&path, &tensors).unwrap();
+        let meta = locate(&path, "second").unwrap();
+        assert_eq!(meta.dtype, DType::I32);
+        assert_eq!(meta.shape, vec![2, 2]);
+        assert_eq!(meta.data_len, 16);
+        // The located offset must point at the exact payload bytes.
+        let raw = std::fs::read(&path).unwrap();
+        let at = meta.data_offset as usize;
+        let mut vals = Vec::new();
+        for c in raw[at..at + 16].chunks_exact(4) {
+            vals.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        assert_eq!(vals, vec![4, 5, 6, 7]);
+        assert!(locate(&path, "missing").is_err());
+    }
+
+    #[test]
+    fn save_one_with_streams_and_verifies_length() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("one.aotckpt");
+        let values = [1.5f32, -2.5, 0.25, 8.0];
+        save_one_with(&path, "p", DType::F32, &[2, 2], &mut |w| {
+            for v in values {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            Ok(())
+        })
+        .unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back["p"].as_f32().unwrap(), &values);
+        // A payload that writes the wrong number of bytes is rejected.
+        let bad = dir.join("bad_len.aotckpt");
+        let err = save_one_with(&bad, "p", DType::F32, &[2, 2], &mut |w| {
+            w.write_all(&[0u8; 4])?;
+            Ok(())
+        });
+        assert!(err.is_err());
     }
 
     #[test]

@@ -6,11 +6,17 @@ use crate::Result;
 use anyhow::{anyhow, bail};
 
 /// Element type of a host tensor (mirrors `python/compile/ckpt.py`).
+///
+/// `F16` holds raw IEEE binary16 bits (`u16` storage); conversion math
+/// lives in `peft::quant`.  It exists for the adapter store's quantized
+/// and spilled tables (DESIGN.md §10) and round-trips through `.aotckpt`
+/// like every other dtype.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
     F32,
     I32,
     I64,
+    F16,
 }
 
 impl DType {
@@ -18,6 +24,7 @@ impl DType {
         match self {
             DType::F32 | DType::I32 => 4,
             DType::I64 => 8,
+            DType::F16 => 2,
         }
     }
 
@@ -26,6 +33,7 @@ impl DType {
             DType::F32 => 0,
             DType::I32 => 1,
             DType::I64 => 2,
+            DType::F16 => 3,
         }
     }
 
@@ -34,6 +42,7 @@ impl DType {
             0 => DType::F32,
             1 => DType::I32,
             2 => DType::I64,
+            3 => DType::F16,
             other => bail!("unknown dtype code {other}"),
         })
     }
@@ -43,6 +52,7 @@ impl DType {
             "f32" => DType::F32,
             "i32" => DType::I32,
             "i64" => DType::I64,
+            "f16" => DType::F16,
             other => bail!("unknown dtype name {other}"),
         })
     }
@@ -79,6 +89,17 @@ impl Tensor {
             data.extend_from_slice(&v.to_le_bytes());
         }
         Tensor { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    /// Build an f16 tensor from raw IEEE binary16 bits (see
+    /// `peft::quant` for the f32 conversions).
+    pub fn from_f16_bits(shape: &[usize], bits: Vec<u16>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), bits.len(), "shape/value mismatch");
+        let mut data = Vec::with_capacity(bits.len() * 2);
+        for b in &bits {
+            data.extend_from_slice(&b.to_le_bytes());
+        }
+        Tensor { dtype: DType::F16, shape: shape.to_vec(), data }
     }
 
     pub fn scalar_f32(v: f32) -> Self {
@@ -126,6 +147,19 @@ impl Tensor {
         Ok(unsafe {
             std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f32, n)
         })
+    }
+
+    /// Raw IEEE binary16 bits of an f16 tensor (copying decode — the
+    /// byte store has no alignment guarantee for wider views).
+    pub fn as_f16_bits(&self) -> Result<Vec<u16>> {
+        if self.dtype != DType::F16 {
+            bail!("tensor is {:?}, not f16", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
@@ -189,5 +223,27 @@ mod tests {
     fn from_raw_validates_length() {
         assert!(Tensor::from_raw(DType::F32, vec![2], vec![0u8; 8]).is_ok());
         assert!(Tensor::from_raw(DType::F32, vec![2], vec![0u8; 7]).is_err());
+        assert!(Tensor::from_raw(DType::F16, vec![3], vec![0u8; 6]).is_ok());
+        assert!(Tensor::from_raw(DType::F16, vec![3], vec![0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn f16_bits_roundtrip() {
+        let bits = vec![0x3c00u16, 0xbc00, 0x0000, 0x7bff];
+        let t = Tensor::from_f16_bits(&[2, 2], bits.clone());
+        assert_eq!(t.dtype, DType::F16);
+        assert_eq!(t.bytes().len(), 8);
+        assert_eq!(t.as_f16_bits().unwrap(), bits);
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn dtype_codes_roundtrip() {
+        for dt in [DType::F32, DType::I32, DType::I64, DType::F16] {
+            assert_eq!(DType::from_code(dt.code()).unwrap(), dt);
+        }
+        assert_eq!(DType::from_name("f16").unwrap(), DType::F16);
+        assert_eq!(DType::F16.size(), 2);
+        assert!(DType::from_code(9).is_err());
     }
 }

@@ -38,7 +38,7 @@ fn setup() -> Option<(Arc<Runtime>, Manifest, TaskRegistry, WeightCache)> {
 }
 
 fn register_random_task(
-    registry: &mut TaskRegistry,
+    registry: &TaskRegistry,
     emb: &Tensor,
     model: &aotpt::config::ModelInfo,
     name: &str,
@@ -58,11 +58,11 @@ fn register_random_task(
 }
 
 fn coordinator() -> Option<Coordinator> {
-    let (runtime, manifest, mut registry, weights) = setup()?;
+    let (runtime, manifest, registry, weights) = setup()?;
     let model = manifest.model("tiny").unwrap().clone();
     let emb = weights.host("emb_tok").unwrap().clone();
-    register_random_task(&mut registry, &emb, &model, "a", 1, 2);
-    register_random_task(&mut registry, &emb, &model, "b", 2, 3);
+    register_random_task(&registry, &emb, &model, "a", 1, 2);
+    register_random_task(&registry, &emb, &model, "b", 2, 3);
     match Coordinator::new(
         runtime,
         &manifest,
@@ -129,7 +129,7 @@ fn unknown_task_and_bad_lengths_rejected() {
 fn zero_table_task_equals_frozen_backbone_plus_head() {
     // A zero P table must not perturb the backbone at all: two zero-table
     // tasks with the same head give identical logits for the same input.
-    let Some((runtime, manifest, mut registry, _weights)) = setup() else { return };
+    let Some((runtime, manifest, registry, _weights)) = setup() else { return };
     let model = manifest.model("tiny").unwrap().clone();
     let mut rng = Pcg64::new(9);
     let head_w = Tensor::from_f32(&[model.d_model, 2], rng.normal_vec(model.d_model * 2, 0.05));

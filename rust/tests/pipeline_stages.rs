@@ -18,7 +18,7 @@ const D: usize = 8;
 const CLASSES: usize = 4;
 
 fn registry() -> TaskRegistry {
-    let mut reg = TaskRegistry::new(LAYERS, VOCAB, D, CLASSES);
+    let reg = TaskRegistry::new(LAYERS, VOCAB, D, CLASSES);
     let mut rng = Pcg64::new(42);
     for (name, classes) in [("a", 2usize), ("b", 3usize)] {
         let table = TaskP::new(LAYERS, VOCAB, D, rng.normal_vec(LAYERS * VOCAB * D, 0.5)).unwrap();
@@ -166,6 +166,63 @@ fn steady_state_reuses_arena_buffers() {
     assert!(c.pipeline().arena().reuses() >= 50, "5 buffers x 10 batches");
     let snap = c.metrics().snapshot();
     assert_eq!(snap.arena_allocs, allocs_after_warm);
+}
+
+#[test]
+fn f16_registry_serves_and_reports_adapter_counters() {
+    // An f16-tier registry behind the full pipeline: outputs stay within
+    // the tier tolerance of the f32 reference, resident RAM halves, and
+    // the residency counters surface in MetricsSnapshot.
+    use aotpt::coordinator::{AdapterConfig, AdapterDType};
+    let f32_reg = registry();
+    let f16_reg = {
+        let reg = TaskRegistry::with_adapter_config(
+            LAYERS,
+            VOCAB,
+            D,
+            CLASSES,
+            AdapterConfig { dtype: AdapterDType::F16, ..Default::default() },
+        );
+        let mut rng = Pcg64::new(42);
+        for (name, classes) in [("a", 2usize), ("b", 3usize)] {
+            let table =
+                TaskP::new(LAYERS, VOCAB, D, rng.normal_vec(LAYERS * VOCAB * D, 0.5)).unwrap();
+            let head_w = Tensor::from_f32(&[D, classes], rng.normal_vec(D * classes, 0.2));
+            let head_b = Tensor::from_f32(&[classes], rng.normal_vec(classes, 0.2));
+            reg.register_fused(name, table, &head_w, &head_b).unwrap();
+        }
+        reg
+    };
+    assert_eq!(2 * f16_reg.ram_bytes(), f32_reg.ram_bytes());
+
+    let cfg = CoordinatorConfig { model: "host".into(), linger_ms: 0, signature: "aot".into() };
+    let reference = Coordinator::with_backend(
+        f32_reg,
+        buckets(),
+        CLASSES,
+        cfg.clone(),
+        Arc::new(HostBackend),
+    )
+    .unwrap();
+    let c = Coordinator::with_backend(f16_reg, buckets(), CLASSES, cfg, Arc::new(HostBackend))
+        .unwrap();
+    for i in 0..8 {
+        let input = ids(500 + i, 4 + (i as usize % 10));
+        let task = if i % 2 == 0 { "a" } else { "b" };
+        let got = c.classify(task, input.clone()).unwrap().logits;
+        let want = reference.classify(task, input).unwrap().logits;
+        for (x, y) in got.iter().zip(&want) {
+            // Logits sum ~n·l dequantized elements; scale the tier
+            // tolerance accordingly.
+            assert!((x - y).abs() < 0.5, "request {i}: {x} vs {y}");
+        }
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.adapter.resident_tasks, 2);
+    assert_eq!(snap.adapter.spilled_tasks, 0);
+    assert!(snap.adapter.hits > 0);
+    assert_eq!(snap.adapter.evictions, 0);
+    assert!(snap.adapter.resident_bytes > 0);
 }
 
 #[test]

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use aotpt::coordinator::{
     BatchBuffers, BatchPlanner, Bucket, BucketSet, GatherStage, Request, TaskRegistry,
 };
-use aotpt::peft::{PStore, TaskP};
+use aotpt::peft::{PStore, RowSource, TaskP};
 use aotpt::tensor::Tensor;
 use aotpt::tokenizer::PAD;
 use aotpt::train::evp;
@@ -65,7 +65,7 @@ fn prop_gather_matches_lookup() {
         let vocab = rng.range(8, 64) as usize;
         let d = (rng.range(1, 5) as usize) * 2;
         let n_tasks = rng.range(1, 4) as usize;
-        let mut store = PStore::new(layers, vocab, d);
+        let store = PStore::new(layers, vocab, d);
         let names: Vec<String> = (0..n_tasks).map(|i| format!("t{i}")).collect();
         for name in &names {
             let data = rng.normal_vec(layers * vocab * d, 1.0);
@@ -82,9 +82,10 @@ fn prop_gather_matches_lookup() {
             for (j, task) in assignments.iter().enumerate() {
                 for t in 0..n {
                     let tok = ids[j * n + t] as usize;
-                    let expect = store.get(task).unwrap().row(layer, tok);
+                    let mut expect = vec![0f32; d];
+                    store.get(task).unwrap().copy_row(layer, tok, &mut expect).unwrap();
                     let base = ((layer * b + j) * n + t) * d;
-                    assert_eq!(&data[base..base + d], expect, "trial {trial}");
+                    assert_eq!(&data[base..base + d], &expect[..], "trial {trial}");
                 }
             }
         }
@@ -106,7 +107,7 @@ fn prop_staged_plan_matches_legacy_assembly() {
         let vocab = rng.range(20, 60) as usize;
         let d = (rng.range(1, 5) as usize) * 2;
         let max_classes = 4usize;
-        let mut reg = TaskRegistry::new(layers, vocab, d, max_classes);
+        let reg = TaskRegistry::new(layers, vocab, d, max_classes);
         let n_tasks = rng.range(1, 4) as usize;
         let names: Vec<String> = (0..n_tasks).map(|i| format!("t{i}")).collect();
         for name in &names {
