@@ -105,7 +105,12 @@ fn main() -> aotpt::Result<()> {
         Arc::clone(&runtime),
         &manifest,
         registry,
-        CoordinatorConfig { model: model.clone(), linger_ms: 2, signature: "aot".into() },
+        CoordinatorConfig {
+            model: model.clone(),
+            linger_ms: 2,
+            signature: "aot".into(),
+            ..Default::default()
+        },
     )?;
 
     let t_serve = Instant::now();

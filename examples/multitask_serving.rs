@@ -46,7 +46,12 @@ fn main() -> aotpt::Result<()> {
         runtime,
         &manifest,
         registry,
-        CoordinatorConfig { model: "small".into(), linger_ms: 5, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "small".into(),
+            linger_ms: 5,
+            signature: "aot".into(),
+            ..Default::default()
+        },
     )?;
 
     // One fixed input per task.

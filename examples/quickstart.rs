@@ -54,7 +54,12 @@ fn main() -> aotpt::Result<()> {
         runtime,
         &manifest,
         registry,
-        CoordinatorConfig { model: "small".into(), linger_ms: 2, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "small".into(),
+            linger_ms: 2,
+            signature: "aot".into(),
+            ..Default::default()
+        },
     )?;
     let lex = Lexicon::generate(0);
     let mut receivers = Vec::new();

@@ -3,31 +3,60 @@
 //! DESIGN.md §9 L3 target: the coordinator's own work must stay a small
 //! fraction of the backbone execute.
 //!
-//!     cargo bench --bench coordinator_overhead
+//! Runs against the PJRT coordinator when serving artifacts are present,
+//! and falls back to the deterministic [`HostBackend`] otherwise — either
+//! way the results land in `BENCH_coordinator.json` at the repo root for
+//! CI artifact upload.
+//!
+//!     cargo bench --bench coordinator_overhead [-- --test]
+//!
+//! `--test` is the CI smoke mode: tiny budgets, no perf conclusions —
+//! it only proves the bench still runs end to end.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use aotpt::bench::{measure, render_table, BenchConfig};
 use aotpt::config::Manifest;
-use aotpt::coordinator::{Coordinator, CoordinatorConfig, Request, TaskRegistry};
+use aotpt::coordinator::{
+    Bucket, Coordinator, CoordinatorConfig, HostBackend, Request, TaskRegistry,
+};
+use aotpt::json::Json;
+use aotpt::peft::TaskP;
 use aotpt::runtime::{Runtime, WeightCache};
 use aotpt::tensor::Tensor;
 use aotpt::util::Pcg64;
 
-fn main() {
+/// The production path: a PJRT coordinator over real serving artifacts.
+/// `None` (with a note) when the artifacts or the PJRT runtime are
+/// unavailable; the caller then falls back to [`build_host`].
+fn build_pjrt() -> Option<(Coordinator, usize)> {
     let Ok(manifest) = Manifest::load(&aotpt::artifacts_dir()) else {
-        eprintln!("coordinator_overhead: artifacts missing (run `make artifacts`); skipping");
-        return;
+        eprintln!(
+            "coordinator_overhead: artifacts missing (run `make artifacts`); \
+             falling back to the HostBackend"
+        );
+        return None;
     };
-    let runtime = Runtime::new().unwrap();
-    let model = manifest.model("small").unwrap().clone();
-    let weights = WeightCache::from_ckpt(
+    let runtime = match Runtime::new() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("coordinator_overhead: no PJRT runtime ({e:#}); falling back");
+            return None;
+        }
+    };
+    let model = manifest.model("small").ok()?.clone();
+    let weights = match WeightCache::from_ckpt(
         &runtime,
         &aotpt::artifacts_dir().join("backbone_small.aotckpt"),
-    )
-    .unwrap();
-    let emb = weights.host("emb_tok").unwrap().clone();
+    ) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("coordinator_overhead: cannot load backbone weights ({e:#}); falling back");
+            return None;
+        }
+    };
+    let emb = weights.host("emb_tok").ok()?.clone();
 
     let registry = TaskRegistry::new(
         model.n_layers,
@@ -45,33 +74,92 @@ fn main() {
         tr.insert("t.fc.b2".into(), Tensor::from_f32(&[l, d], vec![0.0; l * d]));
         tr.insert("t.head_w".into(), Tensor::from_f32(&[d, 2], rng.normal_vec(d * 2, 0.05)));
         tr.insert("t.head_b".into(), Tensor::from_f32(&[2], vec![0.0; 2]));
-        registry.register_fc(name, &emb, &tr).unwrap();
+        registry.register_fc(name, &emb, &tr).ok()?;
     }
-    let coordinator = match Coordinator::new(
+    match Coordinator::new(
         Arc::clone(&runtime),
         &manifest,
         registry,
-        CoordinatorConfig { model: "small".into(), linger_ms: 1, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "small".into(),
+            linger_ms: 1,
+            signature: "aot".into(),
+            ..Default::default()
+        },
     ) {
-        Ok(c) => c,
+        Ok(c) => Some((c, model.vocab_size)),
         Err(e) => {
-            eprintln!("coordinator_overhead: cannot build PJRT coordinator ({e:#}); skipping");
-            return;
+            eprintln!(
+                "coordinator_overhead: cannot build PJRT coordinator ({e:#}); \
+                 falling back to the HostBackend"
+            );
+            None
         }
+    }
+}
+
+/// Accelerator-free fallback: the same coordinator (overlap, prefetch and
+/// the gather pool all on their defaults) over the deterministic
+/// [`HostBackend`], so the bench runs — and its JSON artifact lands — on
+/// any machine.
+fn build_host() -> (Coordinator, usize) {
+    let (layers, vocab, d_model, classes) = (4usize, 2048usize, 64usize, 4usize);
+    let registry = TaskRegistry::new(layers, vocab, d_model, classes);
+    let mut rng = Pcg64::new(3);
+    for name in ["a", "b"] {
+        let table = TaskP::new(
+            layers,
+            vocab,
+            d_model,
+            rng.normal_vec(layers * vocab * d_model, 0.5),
+        )
+        .unwrap();
+        let head_w = Tensor::from_f32(&[d_model, 2], rng.normal_vec(d_model * 2, 0.2));
+        let head_b = Tensor::from_f32(&[2], vec![0.0; 2]);
+        registry.register_fused(name, table, &head_w, &head_b).unwrap();
+    }
+    let buckets = vec![Bucket { batch: 1, seq: 64 }, Bucket { batch: 16, seq: 64 }];
+    let coordinator = Coordinator::with_backend(
+        registry,
+        buckets,
+        classes,
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms: 1,
+            signature: "aot".into(),
+            ..Default::default()
+        },
+        Arc::new(HostBackend),
+    )
+    .unwrap();
+    (coordinator, vocab)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let (coordinator, vocab) = match build_pjrt() {
+        Some(built) => built,
+        None => build_host(),
     };
+    let backend = coordinator.pipeline().backend_name();
+    println!("coordinator backend: {backend}{}", if test_mode { " (smoke --test mode)" } else { "" });
 
     let make_ids = |seed: u64| {
         let mut r = Pcg64::new(seed);
         let mut v = vec![aotpt::tokenizer::CLS];
         for _ in 0..50 {
-            v.push(r.range(5, model.vocab_size as i64) as i32);
+            v.push(r.range(5, vocab as i64) as i32);
         }
         v
     };
-    // Warm the bucket executables.
+    // Warm the bucket executables (and the coordinator's overlap queue).
     let _ = coordinator.classify("a", make_ids(0)).unwrap();
 
-    let cfg = BenchConfig { warmup_iters: 3, min_iters: 10, max_iters: 100, budget_secs: 8.0 };
+    let cfg = if test_mode {
+        BenchConfig { warmup_iters: 1, min_iters: 2, max_iters: 3, budget_secs: 0.05 }
+    } else {
+        BenchConfig { warmup_iters: 3, min_iters: 10, max_iters: 100, budget_secs: 8.0 }
+    };
     let mut rows = Vec::new();
 
     // Single request end to end (batch of 1 after linger).
@@ -119,10 +207,31 @@ fn main() {
         snap.gather_fraction * 100.0,
         snap.render()
     );
+    let allocs = coordinator.pipeline().arena().allocs();
+    let reuses = coordinator.pipeline().arena().reuses();
     println!(
-        "pipeline: backend={} arena allocs={} reuses={} (allocs must stay flat in steady state)",
-        coordinator.pipeline().backend_name(),
-        coordinator.pipeline().arena().allocs(),
-        coordinator.pipeline().arena().reuses(),
+        "pipeline: backend={backend} arena allocs={allocs} reuses={reuses} \
+         (allocs must stay flat in steady state)"
     );
+
+    let mut cases = Json::Arr(Vec::new());
+    for (m, requests_per_iter) in [(&single, 1.0f64), (&burst, 16.0)] {
+        let mut case = m.to_json();
+        case.set("ns_per_batch", Json::Num(m.mean_secs * 1e9));
+        case.set("ns_per_request", Json::Num(m.mean_secs * 1e9 / requests_per_iter));
+        cases.push(case);
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("coordinator_overhead".into())),
+        ("backend", Json::Str(backend.into())),
+        ("test_mode", Json::Bool(test_mode)),
+        ("gather_fraction", Json::Num(snap.gather_fraction)),
+        ("arena_allocs", Json::Num(allocs as f64)),
+        ("arena_reuses", Json::Num(reuses as f64)),
+        ("cases", cases),
+    ]);
+    let path = aotpt::repo_root().join("BENCH_coordinator.json");
+    aotpt::json::save(&path, &doc).unwrap();
+    println!("wrote {}", path.display());
+    coordinator.shutdown();
 }

@@ -13,19 +13,60 @@
 //! this table prices that trade, and the outputs are asserted within the
 //! 1e-2 tier tolerance.
 //!
-//!     cargo bench --bench gather_hotpath
+//! Part 3 prices the double-buffered serving split (DESIGN.md §11): the
+//! serial `prepare` + `complete` sum against the overlapped path where a
+//! dedicated thread executes batch N while the caller gathers batch N+1.
+//! On a multi-core host the overlapped ns/batch must beat the serial sum
+//! — that inequality is asserted here.
+//!
+//! Results land in `BENCH_gather.json` at the repo root (ns/batch,
+//! ns/row, arena alloc counts) for CI artifact upload.
+//!
+//!     cargo bench --bench gather_hotpath [-- --test]
+//!
+//! `--test` is the CI smoke mode: tiny shapes and budgets, perf
+//! assertions skipped — it only proves the bench still runs end to end.
+
+use std::sync::mpsc::{channel, sync_channel};
+use std::sync::Arc;
+use std::time::Instant;
 
 use aotpt::bench::{measure, render_table, BenchConfig};
+use aotpt::coordinator::{
+    Bucket, HostBackend, Metrics, Pipeline, Request, TaskRegistry, WorkItem,
+};
+use aotpt::json::Json;
 use aotpt::peft::{AdapterConfig, AdapterDType, GatherArena, PStore, TaskP};
+use aotpt::tensor::Tensor;
 use aotpt::util::Pcg64;
 
 fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("gather threads: {threads}");
+    println!("gather threads: {threads}{}", if test_mode { " (smoke --test mode)" } else { "" });
+    let cell_cfg = if test_mode {
+        BenchConfig { warmup_iters: 1, min_iters: 2, max_iters: 3, budget_secs: 0.05 }
+    } else {
+        BenchConfig { warmup_iters: 2, min_iters: 10, max_iters: 200, budget_secs: 2.0 }
+    };
+    let vocab = if test_mode { 512 } else { 8192 };
+    let mut cases = Json::Arr(Vec::new());
+
     let mut rows = Vec::new();
     // (layers, d) per model analog, over representative bucket shapes.
-    for (model, l, d) in [("small", 4usize, 128usize), ("base", 6, 256), ("large", 12, 512)] {
-        let vocab = 8192;
+    let models: &[(&str, usize, usize)] = if test_mode {
+        &[("small", 4, 128)]
+    } else {
+        &[("small", 4, 128), ("base", 6, 256), ("large", 12, 512)]
+    };
+    // (bucket batch, bucket seq, live rows): live < batch exercises the
+    // filler-row skip the legacy path did not have.
+    let cells: &[(usize, usize, usize)] = if test_mode {
+        &[(1, 16, 1), (8, 16, 8)]
+    } else {
+        &[(1, 64, 1), (16, 64, 16), (16, 384, 12), (64, 128, 48)]
+    };
+    for &(model, l, d) in models {
         let store = PStore::new(l, vocab, d);
         let mut rng = Pcg64::new(1);
         for name in ["t0", "t1", "t2", "t3"] {
@@ -33,17 +74,12 @@ fn main() {
                 .insert(name, TaskP::new(l, vocab, d, rng.normal_vec(l * vocab * d, 1.0)).unwrap())
                 .unwrap();
         }
-        // (bucket batch, bucket seq, live rows): live < batch exercises the
-        // filler-row skip the legacy path did not have.
-        for (b, n, live) in [(1usize, 64usize, 1usize), (16, 64, 16), (16, 384, 12), (64, 128, 48)]
-        {
+        for &(b, n, live) in cells {
             let assignments: Vec<&str> = (0..b).map(|i| ["t0", "t1", "t2", "t3"][i % 4]).collect();
             let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, vocab as i64) as i32).collect();
-            let cfg =
-                BenchConfig { warmup_iters: 2, min_iters: 10, max_iters: 200, budget_secs: 2.0 };
 
             // Legacy path: allocate per call, gather every bucket row.
-            let legacy = measure(&format!("{model}/b{b}n{n}/legacy"), &cfg, || {
+            let legacy = measure(&format!("{model}/b{b}n{n}/legacy"), &cell_cfg, || {
                 let mut out = vec![0f32; l * b * n * d];
                 store.gather_into(&assignments, &ids, n, &mut out).unwrap();
                 std::hint::black_box(&out);
@@ -52,7 +88,7 @@ fn main() {
             // Pipeline path: arena checkout, parallel layers, live rows only.
             let arena = GatherArena::new();
             let live_assignments = &assignments[..live];
-            let staged = measure(&format!("{model}/b{b}n{n}/arena"), &cfg, || {
+            let staged = measure(&format!("{model}/b{b}n{n}/arena"), &cell_cfg, || {
                 let mut out = arena.take_f32(b, n, "bias", l * b * n * d);
                 store
                     .gather_batch(live_assignments, &ids, n, b, threads, &mut out)
@@ -68,6 +104,15 @@ fn main() {
                 "steady-state gather must not allocate (got {} allocs)",
                 arena.allocs()
             );
+
+            for m in [&legacy, &staged] {
+                let mut case = m.to_json();
+                case.set("ns_per_batch", Json::Num(m.mean_secs * 1e9));
+                case.set("ns_per_row", Json::Num(m.mean_secs * 1e9 / live as f64));
+                case.set("allocs", Json::Num(arena.allocs() as f64));
+                case.set("reuses", Json::Num(arena.reuses() as f64));
+                cases.push(case);
+            }
 
             let bytes = (l * live * n * d * 4) as f64;
             let gbps = bytes / staged.mean_secs / 1e9;
@@ -94,8 +139,11 @@ fn main() {
 
     // ---- Part 2: f32 resident tier vs f16 tier (DESIGN.md §10) ----------
     let mut tier_rows = Vec::new();
-    for (model, l, d) in [("small", 4usize, 128usize), ("base", 6, 256)] {
-        let vocab = 8192;
+    let tier_models: &[(&str, usize, usize)] =
+        if test_mode { &[("small", 4, 128)] } else { &[("small", 4, 128), ("base", 6, 256)] };
+    let tier_cells: &[(usize, usize)] =
+        if test_mode { &[(4, 16)] } else { &[(16, 64), (64, 128)] };
+    for &(model, l, d) in tier_models {
         let f32_store = PStore::new(l, vocab, d);
         let f16_store = PStore::with_config(
             l,
@@ -111,11 +159,9 @@ fn main() {
                 .unwrap();
             f16_store.insert(name, TaskP::new(l, vocab, d, data).unwrap()).unwrap();
         }
-        for (b, n) in [(16usize, 64usize), (64, 128)] {
+        for &(b, n) in tier_cells {
             let assignments: Vec<&str> = (0..b).map(|i| ["t0", "t1", "t2", "t3"][i % 4]).collect();
             let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, vocab as i64) as i32).collect();
-            let cfg =
-                BenchConfig { warmup_iters: 2, min_iters: 10, max_iters: 200, budget_secs: 2.0 };
 
             // Correctness first: the tiers agree within tolerance.
             let mut f32_out = vec![0f32; l * b * n * d];
@@ -127,13 +173,13 @@ fn main() {
             }
 
             let arena = GatherArena::new();
-            let t32 = measure(&format!("{model}/b{b}n{n}/f32"), &cfg, || {
+            let t32 = measure(&format!("{model}/b{b}n{n}/f32"), &cell_cfg, || {
                 let mut out = arena.take_f32(b, n, "bias32", l * b * n * d);
                 f32_store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
                 std::hint::black_box(&out);
                 arena.put_f32(b, n, "bias32", out);
             });
-            let t16 = measure(&format!("{model}/b{b}n{n}/f16"), &cfg, || {
+            let t16 = measure(&format!("{model}/b{b}n{n}/f16"), &cell_cfg, || {
                 let mut out = arena.take_f32(b, n, "bias16", l * b * n * d);
                 f16_store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
                 std::hint::black_box(&out);
@@ -142,6 +188,14 @@ fn main() {
             // Both tiers stay zero-alloc in steady state (one checkout
             // per slot key, ever).
             assert_eq!(arena.allocs(), 2, "resident tiers must not allocate per batch");
+
+            for m in [&t32, &t16] {
+                let mut case = m.to_json();
+                case.set("ns_per_batch", Json::Num(m.mean_secs * 1e9));
+                case.set("ns_per_row", Json::Num(m.mean_secs * 1e9 / b as f64));
+                case.set("allocs", Json::Num(arena.allocs() as f64));
+                cases.push(case);
+            }
 
             tier_rows.push(vec![
                 model.to_string(),
@@ -165,4 +219,152 @@ fn main() {
         )
     );
     println!("(f16 halves resident MiB; dequant cost shows in the f16 ms column)");
+
+    // ---- Part 3: serial vs overlapped gather/execute (DESIGN.md §11) ----
+    // A full Pipeline over the HostBackend: the serial path chains
+    // `prepare` + `complete` on one thread (the gather+execute sum); the
+    // overlapped path hands each PreparedBatch to a dedicated execute
+    // thread through the same two-slot queue the coordinator uses, so the
+    // gather for batch N+1 runs while batch N executes.
+    let (l, ov_vocab, d, classes) = if test_mode { (2, 256, 16, 4) } else { (6, 4096, 256, 4) };
+    let (b, n) = if test_mode { (4usize, 16usize) } else { (16, 128) };
+    let task_names = ["t0", "t1", "t2", "t3"];
+    let registry = TaskRegistry::new(l, ov_vocab, d, classes);
+    let mut rng = Pcg64::new(7);
+    for name in task_names {
+        let table = TaskP::new(l, ov_vocab, d, rng.normal_vec(l * ov_vocab * d, 0.5)).unwrap();
+        let head_w = Tensor::from_f32(&[d, 2], rng.normal_vec(d * 2, 0.2));
+        let head_b = Tensor::from_f32(&[2], vec![0.0; 2]);
+        registry.register_fused(name, table, &head_w, &head_b).unwrap();
+    }
+    let pipeline = Arc::new(Pipeline::new(
+        Arc::new(registry),
+        vec![Bucket { batch: b, seq: n }],
+        classes,
+        Arc::new(HostBackend),
+        Arc::new(Metrics::new()),
+        threads,
+        false,
+    ));
+    // One flushed batch: b live rows over the 4 tasks.  Only the last
+    // row's receiver is kept — recv on it means the whole batch fanned
+    // out (responses are delivered in row order).
+    let batch = |rng: &mut Pcg64| {
+        let mut items = Vec::with_capacity(b);
+        let mut last_rx = None;
+        for j in 0..b {
+            let (tx, rx) = channel();
+            let ids: Vec<i32> =
+                (0..n).map(|_| rng.range(0, ov_vocab as i64) as i32).collect();
+            items.push(WorkItem {
+                request: Request { task: task_names[j % 4].into(), ids },
+                enqueued: Instant::now(),
+                respond: tx,
+            });
+            last_rx = Some(rx);
+        }
+        (items, last_rx.unwrap())
+    };
+    const BATCHES_PER_ITER: usize = 4;
+    let overlap_cfg = if test_mode {
+        cell_cfg
+    } else {
+        BenchConfig { warmup_iters: 2, min_iters: 10, max_iters: 100, budget_secs: 4.0 }
+    };
+
+    let serial = measure("overlap/serial", &overlap_cfg, || {
+        for _ in 0..BATCHES_PER_ITER {
+            let (items, rx) = batch(&mut rng);
+            if let Some(prepared) = pipeline.prepare(items) {
+                pipeline.complete(prepared);
+            }
+            rx.recv().unwrap().unwrap();
+        }
+    });
+
+    let (ptx, prx) = sync_channel(1);
+    let exec_pipeline = Arc::clone(&pipeline);
+    let executor = std::thread::Builder::new()
+        .name("bench-execute".into())
+        .spawn(move || {
+            while let Ok(prepared) = prx.recv() {
+                exec_pipeline.complete(prepared);
+            }
+        })
+        .unwrap();
+    // Reach the double-buffered steady state (two checkouts in flight)
+    // before recording the alloc baseline.
+    {
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            let (items, rx) = batch(&mut rng);
+            if let Some(prepared) = pipeline.prepare(items) {
+                ptx.send(prepared).unwrap();
+            }
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    }
+    let allocs_baseline = pipeline.arena().allocs();
+    let overlapped = measure("overlap/double-buffered", &overlap_cfg, || {
+        let mut rxs = Vec::with_capacity(BATCHES_PER_ITER);
+        for _ in 0..BATCHES_PER_ITER {
+            let (items, rx) = batch(&mut rng);
+            if let Some(prepared) = pipeline.prepare(items) {
+                ptx.send(prepared).unwrap();
+            }
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    });
+    assert_eq!(
+        pipeline.arena().allocs(),
+        allocs_baseline,
+        "the overlapped steady state must not allocate (double buffering is bounded)"
+    );
+    drop(ptx);
+    executor.join().unwrap();
+
+    let serial_ns = serial.mean_secs / BATCHES_PER_ITER as f64 * 1e9;
+    let overlapped_ns = overlapped.mean_secs / BATCHES_PER_ITER as f64 * 1e9;
+    let overlap_rows = vec![
+        vec!["serial prepare+complete".into(), format!("{:.0}", serial_ns / 1e3), String::new()],
+        vec![
+            "overlapped (2-slot queue)".into(),
+            format!("{:.0}", overlapped_ns / 1e3),
+            format!("{:.2}x", serial_ns / overlapped_ns),
+        ],
+    ];
+    println!("{}", render_table(&["path", "us/batch", "speedup"], &overlap_rows));
+    for (m, ns) in [(&serial, serial_ns), (&overlapped, overlapped_ns)] {
+        let mut case = m.to_json();
+        case.set("ns_per_batch", Json::Num(ns));
+        case.set("ns_per_row", Json::Num(ns / b as f64));
+        case.set("allocs", Json::Num(pipeline.arena().allocs() as f64));
+        cases.push(case);
+    }
+    // The overlap win is only physical with spare cores; the smoke mode
+    // and small hosts just report the numbers.
+    if !test_mode && threads >= 4 {
+        assert!(
+            overlapped_ns < serial_ns,
+            "overlapped ns/batch ({overlapped_ns:.0}) must beat the serial \
+             gather+execute sum ({serial_ns:.0})"
+        );
+        println!("(asserted: overlapped ns/batch < serial gather+execute sum)");
+    }
+
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("gather_hotpath".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("test_mode", Json::Bool(test_mode)),
+        ("cases", cases),
+    ]);
+    let path = aotpt::repo_root().join("BENCH_gather.json");
+    aotpt::json::save(&path, &doc).unwrap();
+    println!("wrote {}", path.display());
 }

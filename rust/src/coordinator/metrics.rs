@@ -204,7 +204,7 @@ impl MetricsSnapshot {
             "requests={} batches={} mean_batch={:.2} p50={:.2}ms p99={:.2}ms \
              gather={:.3}ms exec={:.3}ms gather_frac={:.1}% queue={} \
              arena_reuse={}/{} adapters={}r/{}s {:.1}MiB \
-             hit={} fault={} cold={} evict={}",
+             hit={} fault={} cold={} evict={} prefetch={}h/{}m/{}w",
             self.requests,
             self.batches,
             self.mean_batch_size,
@@ -223,6 +223,9 @@ impl MetricsSnapshot {
             self.adapter.faults,
             self.adapter.cold_serves,
             self.adapter.evictions,
+            self.adapter.prefetch_hits,
+            self.adapter.prefetch_misses,
+            self.adapter.prefetch_wasted,
         )
     }
 }
@@ -304,6 +307,9 @@ mod tests {
             cold_serves: 3,
             evictions: 9,
             spill_writes: 5,
+            prefetch_hits: 4,
+            prefetch_misses: 2,
+            prefetch_wasted: 1,
         };
         m.set_adapter_counters(stats);
         let s = m.snapshot();
@@ -312,5 +318,6 @@ mod tests {
         assert!(r.contains("adapters=2r/5s"), "{r}");
         assert!(r.contains("fault=7"), "{r}");
         assert!(r.contains("evict=9"), "{r}");
+        assert!(r.contains("prefetch=4h/2m/1w"), "{r}");
     }
 }

@@ -35,7 +35,7 @@ pub mod registry;
 pub mod request;
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -51,7 +51,7 @@ pub use batcher::{Bucket, BucketSet};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pipeline::{
     Admission, Backend, BatchBuffers, BatchPlan, BatchPlanner, FanOut, GatherStage, HostBackend,
-    Pipeline, PjrtBackend, WorkItem,
+    Pipeline, PjrtBackend, PreparedBatch, WorkItem,
 };
 pub use registry::{TaskRegistry, TaskState};
 pub use request::{Request, Response};
@@ -64,11 +64,28 @@ pub struct CoordinatorConfig {
     pub linger_ms: u64,
     /// Serving signature; the paper's system serves fused AoT (`"aot"`).
     pub signature: String,
+    /// Gather shard threads (CLI `--gather-threads`); 0 = one per
+    /// available core.
+    pub gather_threads: usize,
+    /// Gather-aware adapter prefetch (CLI `--prefetch`): announce each
+    /// plan's tasks to the residency prefetcher before staging.
+    pub prefetch: bool,
+    /// Double-buffered serving: run execute + fan-out on a dedicated
+    /// thread so the gather for batch N+1 overlaps the execute of batch N
+    /// (DESIGN.md §11).  Off = the seed's strictly serial loop.
+    pub overlap: bool,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { model: "small".into(), linger_ms: 2, signature: "aot".into() }
+        CoordinatorConfig {
+            model: "small".into(),
+            linger_ms: 2,
+            signature: "aot".into(),
+            gather_threads: 0,
+            prefetch: true,
+            overlap: true,
+        }
     }
 }
 
@@ -78,6 +95,11 @@ impl Default for CoordinatorConfig {
 pub struct Coordinator {
     inner: Arc<Inner>,
     worker: Mutex<Option<JoinHandle<()>>>,
+    /// The execute half of the overlapped pipeline (None when
+    /// `cfg.overlap` is off).  Joined after the worker: the worker's exit
+    /// drops the prepared-batch sender, which drains and stops this
+    /// thread.
+    executor: Mutex<Option<JoinHandle<()>>>,
     tx: Sender<WorkItem>,
 }
 
@@ -134,9 +156,11 @@ impl Coordinator {
         }
         let registry = Arc::new(registry);
         let metrics = Arc::new(Metrics::new());
-        let gather_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
+        let gather_threads = if cfg.gather_threads > 0 {
+            cfg.gather_threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
         let pipeline = Pipeline::new(
             Arc::clone(&registry),
             buckets,
@@ -144,6 +168,7 @@ impl Coordinator {
             backend,
             Arc::clone(&metrics),
             gather_threads,
+            cfg.prefetch,
         );
 
         let (tx, rx) = channel::<WorkItem>();
@@ -154,13 +179,36 @@ impl Coordinator {
             cfg,
             running: AtomicBool::new(true),
         });
+        // The two-slot overlap queue: capacity 1 means one batch can sit
+        // prepared while another executes — exactly two arena checkouts in
+        // flight, which bounds staging memory to double buffering.
+        let (prepared_tx, executor) = if inner.cfg.overlap {
+            let (ptx, prx) = sync_channel::<PreparedBatch>(1);
+            let exec_inner = Arc::clone(&inner);
+            let handle = std::thread::Builder::new()
+                .name("aotpt-execute".into())
+                .spawn(move || {
+                    while let Ok(prepared) = prx.recv() {
+                        exec_inner.pipeline.complete(prepared);
+                    }
+                })
+                .expect("spawn execute worker");
+            (Some(ptx), Some(handle))
+        } else {
+            (None, None)
+        };
         let worker_inner = Arc::clone(&inner);
         let worker = std::thread::Builder::new()
             .name("aotpt-coordinator".into())
-            .spawn(move || worker_loop(worker_inner, rx))
+            .spawn(move || worker_loop(worker_inner, rx, prepared_tx))
             .expect("spawn coordinator worker");
 
-        Ok(Coordinator { inner, worker: Mutex::new(Some(worker)), tx })
+        Ok(Coordinator {
+            inner,
+            worker: Mutex::new(Some(worker)),
+            executor: Mutex::new(executor),
+            tx,
+        })
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -199,7 +247,8 @@ impl Coordinator {
         &self.inner.pipeline
     }
 
-    /// Stop the worker and join it.
+    /// Stop the worker and join it (then the execute thread: the worker's
+    /// exit drops the prepared-batch sender, which drains and stops it).
     pub fn shutdown(&self) {
         if !self.inner.running.swap(false, Ordering::SeqCst) {
             return;
@@ -214,6 +263,9 @@ impl Coordinator {
             });
             let _ = handle.join();
         }
+        if let Some(handle) = self.executor.lock().unwrap().take() {
+            let _ = handle.join();
+        }
     }
 }
 
@@ -223,7 +275,11 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker_loop(inner: Arc<Inner>, rx: Receiver<WorkItem>) {
+fn worker_loop(
+    inner: Arc<Inner>,
+    rx: Receiver<WorkItem>,
+    prepared_tx: Option<SyncSender<PreparedBatch>>,
+) {
     let linger = std::time::Duration::from_millis(inner.cfg.linger_ms);
     let max_batch = inner.pipeline.max_batch();
     loop {
@@ -253,7 +309,22 @@ fn worker_loop(inner: Arc<Inner>, rx: Receiver<WorkItem>) {
                 Err(_) => break,
             }
         }
-        inner.pipeline.process(pending);
+        match &prepared_tx {
+            // Overlapped: hand the gathered batch to the execute thread
+            // and immediately return to accumulate + gather the next one.
+            // The two-slot queue applies backpressure once one batch is
+            // executing and another is already prepared.
+            Some(ptx) => {
+                if let Some(prepared) = inner.pipeline.prepare(pending) {
+                    if let Err(send_err) = ptx.send(prepared) {
+                        let e = anyhow!("coordinator execute thread exited");
+                        inner.pipeline.abort(send_err.0, &e);
+                    }
+                }
+            }
+            // Serial (overlap off): both halves inline, the seed behavior.
+            None => inner.pipeline.process(pending),
+        }
         if !inner.running.load(Ordering::SeqCst) {
             break;
         }

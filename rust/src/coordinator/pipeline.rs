@@ -21,6 +21,14 @@
 //!
 //! All large host staging buffers come from a [`GatherArena`], so the
 //! steady-state hot path performs no heap allocation (DESIGN.md §9).
+//!
+//! The pipeline is split at the gather/execute boundary for overlapped
+//! serving (DESIGN.md §11): [`Pipeline::prepare`] runs plan → prefetch →
+//! stage → gather and returns a [`PreparedBatch`]; [`Pipeline::complete`]
+//! runs execute → fan-out.  The coordinator runs `complete` on a
+//! dedicated execute thread, so the gather for batch N+1 overlaps the
+//! backbone execute for batch N with two arena checkouts in flight.
+//! [`Pipeline::process`] chains both for the serial path and tests.
 
 use std::collections::HashMap;
 use std::sync::mpsc::Sender;
@@ -30,7 +38,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail};
 
 use crate::config::Manifest;
-use crate::peft::GatherArena;
+use crate::peft::{GatherArena, GatherPool};
 use crate::runtime::{Executable, Runtime, WeightCache};
 use crate::tokenizer::PAD;
 use crate::Result;
@@ -189,30 +197,32 @@ impl BatchPlanner {
 }
 
 /// Stage 3: THE ahead-of-time gather (paper Equation 1's serving form),
-/// parallel across layers on scoped threads, skipping filler rows.
+/// layer-sharded across a persistent [`GatherPool`] (spawned once here,
+/// parked between batches — no per-batch thread creation), skipping
+/// filler rows.
 pub struct GatherStage {
     registry: Arc<TaskRegistry>,
-    threads: usize,
+    pool: GatherPool,
 }
 
 impl GatherStage {
     pub fn new(registry: Arc<TaskRegistry>, threads: usize) -> GatherStage {
-        GatherStage { registry, threads: threads.max(1) }
+        GatherStage { registry, pool: GatherPool::new(threads) }
     }
 
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.threads()
     }
 
     pub fn gather(&self, plan: &BatchPlan, bufs: &mut BatchBuffers) -> Result<()> {
         let (b, n) = (bufs.bucket.batch, bufs.bucket.seq);
         let assignments: Vec<&str> = plan.tasks.iter().map(String::as_str).collect();
-        self.registry.pstore().gather_batch(
+        self.registry.pstore().gather_batch_pooled(
             &assignments,
             &bufs.ids,
             n,
             b,
-            self.threads,
+            &self.pool,
             &mut bufs.bias,
         )
     }
@@ -405,6 +415,21 @@ impl FanOut {
     }
 }
 
+/// A batch that finished the host-side half of the pipeline (plan →
+/// stage → gather) and is ready for execute + fan-out.  This is the
+/// two-slot handoff object between the coordinator worker (running
+/// [`Pipeline::prepare`]) and the execute thread (running
+/// [`Pipeline::complete`]) — while it sits in the queue, its arena
+/// checkout stays in flight, which is exactly the double-buffering
+/// (DESIGN.md §11).
+pub struct PreparedBatch {
+    plan: BatchPlan,
+    items: Vec<WorkItem>,
+    bufs: BatchBuffers,
+    t_batch: Instant,
+    gather_secs: f64,
+}
+
 /// The assembled pipeline: owns every stage, the arena and the metrics.
 pub struct Pipeline {
     pub admission: Admission,
@@ -418,6 +443,9 @@ pub struct Pipeline {
     layers: usize,
     d_model: usize,
     classes: usize,
+    /// Announce each plan's tasks to the adapter prefetcher (gather-aware
+    /// prefetch, DESIGN.md §11).
+    prefetch: bool,
 }
 
 impl Pipeline {
@@ -428,6 +456,7 @@ impl Pipeline {
         backend: Arc<dyn Backend>,
         metrics: Arc<Metrics>,
         gather_threads: usize,
+        prefetch: bool,
     ) -> Pipeline {
         let buckets = BucketSet::new(buckets);
         let max_seq = buckets.max_seq();
@@ -443,6 +472,7 @@ impl Pipeline {
             d_model: registry.d_model(),
             registry,
             classes,
+            prefetch,
         }
     }
 
@@ -463,8 +493,23 @@ impl Pipeline {
     }
 
     /// Run one flushed batch through planning → gather → execute →
-    /// fan-out, recording stage timings and arena counters.
+    /// fan-out, recording stage timings and arena counters.  The serial
+    /// path (`overlap = off`, direct callers, tests): both pipeline
+    /// halves back to back on the calling thread.
     pub fn process(&self, items: Vec<WorkItem>) {
+        if let Some(prepared) = self.prepare(items) {
+            self.complete(prepared);
+        }
+    }
+
+    /// The host-side half: liveness filter → plan → adapter prefetch →
+    /// stage → gather.  Returns `None` when nothing reached the gather
+    /// (every item failed); failed items have already been answered.
+    ///
+    /// The returned [`PreparedBatch`] owns an arena checkout — it must be
+    /// handed to [`Pipeline::complete`] (or [`Pipeline::abort`] if the
+    /// execute side is gone) so the buffers return to the arena.
+    pub fn prepare(&self, items: Vec<WorkItem>) -> Option<PreparedBatch> {
         let t_batch = Instant::now();
         // The hot task lifecycle means a task can be unregistered between
         // admission and this flush: fail only that task's requests here,
@@ -478,42 +523,87 @@ impl Pipeline {
                 Err(e) => self.fanout.respond_error(std::slice::from_ref(&item), &e),
             }
         }
-        if !live.is_empty() {
-            let requests: Vec<&Request> = live.iter().map(|i| &i.request).collect();
-            match self.run_stages(&requests) {
-                Ok((plan, logits, gather_secs, exec_secs)) => {
-                    self.fanout.respond(&plan, &live, &logits);
-                    self.metrics.observe_batch(
-                        live.len(),
-                        t_batch.elapsed().as_secs_f64(),
-                        gather_secs,
-                        exec_secs,
-                    );
-                }
-                Err(e) => self.fanout.respond_error(&live, &e),
-            }
+        if live.is_empty() {
+            self.publish_counters();
+            return None;
         }
-        self.metrics.set_arena_counters(self.arena.allocs(), self.arena.reuses());
-        self.metrics.set_adapter_counters(self.registry.adapter_stats());
-    }
-
-    #[allow(clippy::type_complexity)]
-    fn run_stages(&self, requests: &[&Request]) -> Result<(BatchPlan, Vec<f32>, f64, f64)> {
-        let plan = self.planner.plan(requests)?;
+        let plan = {
+            let requests: Vec<&Request> = live.iter().map(|i| &i.request).collect();
+            match self.planner.plan(&requests) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    self.fanout.respond_error(&live, &e);
+                    self.publish_counters();
+                    return None;
+                }
+            }
+        };
+        // The moment the plan knows the batch's tasks, wake the adapter
+        // prefetcher so spilled tables fault in while we stage the batch
+        // — the gather's resolve then finds them warm (DESIGN.md §11).
+        if self.prefetch {
+            self.registry.pstore().prefetch(&plan.tasks);
+        }
         let mut bufs = self.checkout(plan.bucket);
-        let staged: Result<(Vec<f32>, f64, f64)> = (|| {
-            self.planner.stage(&plan, requests, &mut bufs)?;
+        let staged: Result<f64> = (|| {
+            let requests: Vec<&Request> = live.iter().map(|i| &i.request).collect();
+            self.planner.stage(&plan, &requests, &mut bufs)?;
             let t_gather = Instant::now();
             self.gather.gather(&plan, &mut bufs)?;
-            let gather_secs = t_gather.elapsed().as_secs_f64();
-            let t_exec = Instant::now();
-            let logits = self.backend.execute(&plan, &bufs)?;
-            let exec_secs = t_exec.elapsed().as_secs_f64();
-            Ok((logits, gather_secs, exec_secs))
+            Ok(t_gather.elapsed().as_secs_f64())
         })();
-        // Buffers go back to the arena on success AND failure.
+        match staged {
+            Ok(gather_secs) => {
+                Some(PreparedBatch { plan, items: live, bufs, t_batch, gather_secs })
+            }
+            Err(e) => {
+                // Buffers go back to the arena on failure, too.
+                self.check_in(bufs);
+                self.fanout.respond_error(&live, &e);
+                self.publish_counters();
+                None
+            }
+        }
+    }
+
+    /// The device-side half: execute → fan-out.  Runs on the coordinator's
+    /// execute thread under overlap, or inline for the serial path.
+    pub fn complete(&self, prepared: PreparedBatch) {
+        let PreparedBatch { plan, items, bufs, t_batch, gather_secs } = prepared;
+        let t_exec = Instant::now();
+        let executed = self.backend.execute(&plan, &bufs);
+        let exec_secs = t_exec.elapsed().as_secs_f64();
+        // The checkout returns before any response is delivered, so a
+        // submitter unblocked by the fan-out observes the same arena
+        // steady state as the serial pipeline.
         self.check_in(bufs);
-        staged.map(|(logits, gather_secs, exec_secs)| (plan, logits, gather_secs, exec_secs))
+        match executed {
+            Ok(logits) => {
+                self.fanout.respond(&plan, &items, &logits);
+                self.metrics.observe_batch(
+                    items.len(),
+                    t_batch.elapsed().as_secs_f64(),
+                    gather_secs,
+                    exec_secs,
+                );
+            }
+            Err(e) => self.fanout.respond_error(&items, &e),
+        }
+        self.publish_counters();
+    }
+
+    /// Fail a prepared batch without executing it (the execute side went
+    /// away mid-shutdown): buffers return to the arena, every item gets
+    /// the error.
+    pub fn abort(&self, prepared: PreparedBatch, error: &anyhow::Error) {
+        self.check_in(prepared.bufs);
+        self.fanout.respond_error(&prepared.items, error);
+        self.publish_counters();
+    }
+
+    fn publish_counters(&self) {
+        self.metrics.set_arena_counters(self.arena.allocs(), self.arena.reuses());
+        self.metrics.set_adapter_counters(self.registry.adapter_stats());
     }
 
     /// Check a full buffer set out of the arena for one bucket.
@@ -575,6 +665,7 @@ mod tests {
             Arc::new(HostBackend),
             Arc::new(Metrics::new()),
             2,
+            true,
         )
     }
 
@@ -685,6 +776,38 @@ mod tests {
         assert_eq!(ok.logits.len(), 2);
         let err = rx_bad.recv().unwrap().unwrap_err();
         assert!(err.to_string().contains("unknown task"), "{err}");
+    }
+
+    #[test]
+    fn prepare_complete_split_matches_process_and_abort_returns_buffers() {
+        let p = pipeline();
+        let mk = |task: &str, ids: Vec<i32>| {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let item = WorkItem {
+                request: Request { task: task.into(), ids },
+                enqueued: Instant::now(),
+                respond: tx,
+            };
+            (item, rx)
+        };
+        // Warm the arena through the chained path.
+        let (item, rx) = mk("a", vec![1, 2]);
+        p.process(vec![item]);
+        let want = rx.recv().unwrap().unwrap();
+        let allocs = p.arena().allocs();
+        // The split path produces identical logits with no fresh allocs.
+        let (item, rx) = mk("a", vec![1, 2]);
+        let prepared = p.prepare(vec![item]).unwrap();
+        p.complete(prepared);
+        assert_eq!(rx.recv().unwrap().unwrap().logits, want.logits);
+        assert_eq!(p.arena().allocs(), allocs);
+        // Abort delivers the error and still returns the checkout.
+        let (item, rx) = mk("a", vec![1, 2]);
+        let prepared = p.prepare(vec![item]).unwrap();
+        p.abort(prepared, &anyhow!("execute thread exited"));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("execute thread exited"), "{err}");
+        assert_eq!(p.arena().allocs(), allocs);
     }
 
     #[test]

@@ -44,6 +44,8 @@ fn run(argv: &[String]) -> Result<()> {
         "max resident adapter-table bytes (e.g. 512MiB; 0 = unlimited)",
     )
     .opt("adapter-dtype", Some("f32"), "adapter table storage dtype: f32|f16")
+    .opt("gather-threads", Some("0"), "gather shard threads (0 = one per core)")
+    .opt("prefetch", Some("on"), "gather-aware adapter prefetch: on|off")
     .opt("tasks", Some("8"), "task count (adapters demo)")
     .opt("requests", Some("64"), "request count (adapters demo)")
     .flag("verbose", "debug logging")
@@ -112,6 +114,8 @@ fn run_adapters_demo(args: &Args) -> Result<()> {
         .map_err(anyhow::Error::msg)?;
     let n_tasks = args.get_usize("tasks").map_err(anyhow::Error::msg)?.max(1);
     let n_requests = args.get_usize("requests").map_err(anyhow::Error::msg)?.max(1);
+    let gather_threads = args.get_usize("gather-threads").map_err(anyhow::Error::msg)?;
+    let prefetch = args.get_via("prefetch", parse_switch).map_err(anyhow::Error::msg)?;
 
     // A small-model analog: big enough that a handful of tasks outgrow a
     // few-MiB budget, small enough to run in seconds on a laptop.
@@ -149,7 +153,14 @@ fn run_adapters_demo(args: &Args) -> Result<()> {
         registry,
         buckets,
         classes,
-        CoordinatorConfig { model: "host".into(), linger_ms: 1, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms: 1,
+            signature: "aot".into(),
+            gather_threads,
+            prefetch,
+            ..Default::default()
+        },
         Arc::new(HostBackend),
     )?;
 
@@ -171,7 +182,8 @@ fn run_adapters_demo(args: &Args) -> Result<()> {
     let a = snapshot.adapter;
     println!(
         "residency: {} resident / {} spilled tasks, {:.1} MiB resident, \
-         {} hits, {} faults, {} cold serves, {} evictions, {} spill writes",
+         {} hits, {} faults, {} cold serves, {} evictions, {} spill writes, \
+         prefetch {}h/{}m/{}w",
         a.resident_tasks,
         a.spilled_tasks,
         a.resident_bytes as f64 / (1 << 20) as f64,
@@ -180,9 +192,21 @@ fn run_adapters_demo(args: &Args) -> Result<()> {
         a.cold_serves,
         a.evictions,
         a.spill_writes,
+        a.prefetch_hits,
+        a.prefetch_misses,
+        a.prefetch_wasted,
     );
     coordinator.shutdown();
     Ok(())
+}
+
+/// Parse an on/off CLI switch.
+fn parse_switch(s: &str) -> Result<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => anyhow::bail!("expected on|off, got {other}"),
+    }
 }
 
 fn run_experiment(

@@ -17,7 +17,11 @@
 //!   heads) or is allowed to leave stale-but-finite rows (the bias filler
 //!   rows, whose logits are dropped after execute);
 //! * geometry is part of the key, so a bucket change never resizes a
-//!   buffer in place; a stale-length buffer is dropped and re-allocated.
+//!   buffer in place; a stale-length buffer is dropped and re-allocated;
+//! * under overlapped serving (DESIGN.md §11) up to **two** checkouts per
+//!   bucket are in flight at once — one `PreparedBatch` queued while
+//!   another executes — so the flat steady state is at most two buffer
+//!   sets per active bucket, bounded by the two-slot handoff queue.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

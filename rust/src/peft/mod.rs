@@ -16,14 +16,18 @@
 //!   cross-checked against the `fuse_*` HLO artifacts in tests.
 //! * `arena` — reusable per-bucket staging buffers so the steady-state
 //!   serving gather allocates nothing (DESIGN.md §9).
+//! * `pool` — the persistent layer-sharded gather worker pool: spawned
+//!   once per pipeline, parked between batches (DESIGN.md §11).
 
 pub mod arena;
 pub mod fuse;
+pub mod pool;
 pub mod quant;
 pub mod residency;
 pub mod store;
 
 pub use arena::GatherArena;
+pub use pool::GatherPool;
 pub use quant::{AdapterDType, QuantizedTaskP};
 pub use residency::{parse_bytes, AdapterConfig, AdapterStats, ColdTable};
 pub use store::{row_norms, PStore, RowSource, TaskP};

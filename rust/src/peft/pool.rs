@@ -1,0 +1,321 @@
+//! Persistent layer-sharded worker pool for the AoT gather hot path.
+//!
+//! The seed's `gather_batch` spawned `std::thread::scope` threads for
+//! every batch; at serving rates that is tens of microseconds of spawn +
+//! join overhead per batch, paid again and again on the hottest path in
+//! the system (DESIGN.md §11).  [`GatherPool`] spawns its workers once —
+//! `Pipeline::new` builds it through `GatherStage::new` — and parks them
+//! in a channel `recv` between batches, so dispatching a batch costs one
+//! channel send per shard instead of one thread spawn.
+//!
+//! The calling thread always participates: it gathers the first layer
+//! shard inline while the workers run the rest, then blocks on a
+//! countdown latch until every shard lands.  That latch is what makes the
+//! borrowed-slice handoff sound — the caller's `sources`/`ids`/`out`
+//! borrows are guaranteed live until the last worker finished, exactly
+//! the guarantee `std::thread::scope` provided, enforced here without the
+//! per-batch scope.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::Result;
+
+use super::store::{gather_layer, RowSource};
+
+/// One contiguous block of layers shipped to a pool worker.
+///
+/// The raw pointers borrow from the calling gather's stack frame; the
+/// caller blocks on [`ShardLatch`] before returning, so every pointer
+/// outlives every worker access, and each shard's `out` region is a
+/// disjoint `chunks_mut` slice of the batch bias buffer.
+struct GatherShard {
+    sources: *const Arc<dyn RowSource>,
+    sources_len: usize,
+    ids: *const i32,
+    ids_len: usize,
+    out: *mut f32,
+    out_len: usize,
+    first_layer: usize,
+    layer_block: usize,
+    n: usize,
+    d: usize,
+    latch: Arc<ShardLatch>,
+}
+
+// SAFETY: the pointed-to slices are only touched between the send and the
+// caller's latch wait; the caller keeps the underlying borrows alive for
+// that whole window, and no two shards overlap in `out`.
+unsafe impl Send for GatherShard {}
+
+/// Countdown latch: the caller waits until every shipped shard ran.
+struct ShardLatch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    err: Mutex<Option<anyhow::Error>>,
+}
+
+impl ShardLatch {
+    fn new(shards: usize) -> ShardLatch {
+        ShardLatch { remaining: Mutex::new(shards), done: Condvar::new(), err: Mutex::new(None) }
+    }
+
+    /// Record the first error (only the disk tier can fail mid-copy; the
+    /// first error wins and fails the whole batch, like the seed).
+    fn record(&self, e: anyhow::Error) {
+        let mut slot = self.err.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+
+    fn wait(&self) {
+        let mut remaining = self.remaining.lock().unwrap();
+        while *remaining > 0 {
+            remaining = self.done.wait(remaining).unwrap();
+        }
+    }
+}
+
+/// Decrements the latch on drop — a panicking `copy_row` must still
+/// release the caller, or the serving loop would hang forever.
+struct LatchGuard<'a>(&'a ShardLatch);
+
+impl Drop for LatchGuard<'_> {
+    fn drop(&mut self) {
+        let mut remaining = self.0.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+fn run_shard(shard: &GatherShard) -> Result<()> {
+    // SAFETY: see `GatherShard` — the caller keeps these borrows alive
+    // until the latch opens, and `out` regions are disjoint per shard.
+    let sources = unsafe { std::slice::from_raw_parts(shard.sources, shard.sources_len) };
+    let ids = unsafe { std::slice::from_raw_parts(shard.ids, shard.ids_len) };
+    let out = unsafe { std::slice::from_raw_parts_mut(shard.out, shard.out_len) };
+    for (i, layer_out) in out.chunks_mut(shard.layer_block).enumerate() {
+        gather_layer(sources, shard.first_layer + i, ids, shard.n, shard.d, layer_out)?;
+    }
+    Ok(())
+}
+
+fn worker_loop(rx: &Mutex<Receiver<GatherShard>>) {
+    loop {
+        // Workers park in `recv` between batches; dropping the pool drops
+        // the sender, which wakes and exits every worker.
+        let shard = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let shard = match shard {
+            Ok(shard) => shard,
+            Err(_) => break,
+        };
+        let _open = LatchGuard(&shard.latch);
+        if let Err(e) = run_shard(&shard) {
+            shard.latch.record(e);
+        }
+    }
+}
+
+/// Spawn-once worker pool for the layer-sharded gather.
+pub struct GatherPool {
+    /// `Sender` is not `Sync`; the mutex makes the pool shareable across
+    /// pipeline threads (held only for the microseconds of a shard send).
+    tx: Option<Mutex<Sender<GatherShard>>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl GatherPool {
+    /// Spawn `threads - 1` parked workers; the calling thread is the
+    /// remaining participant (it always gathers the first shard inline).
+    pub fn new(threads: usize) -> GatherPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<GatherShard>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads - 1)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("aotpt-gather-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn gather worker")
+            })
+            .collect();
+        GatherPool { tx: Some(Mutex::new(tx)), workers, threads }
+    }
+
+    /// Total gather parallelism: workers + the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Gather every layer of `out` (`[l, b, n, d]` with
+    /// `layer_block = b·n·d`, so `l = out.len() / layer_block`), sharding
+    /// contiguous layer ranges across the pool.  The calling thread
+    /// gathers the first shard itself while the workers run the rest,
+    /// then blocks until every shard landed — the borrowed inputs never
+    /// escape this call.
+    pub fn gather(
+        &self,
+        sources: &[Arc<dyn RowSource>],
+        ids: &[i32],
+        n: usize,
+        d: usize,
+        layer_block: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if out.is_empty() {
+            return Ok(());
+        }
+        let total_layers = out.len() / layer_block;
+        if total_layers <= 1 || self.threads == 1 {
+            for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
+                gather_layer(sources, layer, ids, n, d, layer_out)?;
+            }
+            return Ok(());
+        }
+        let shards = self.threads.min(total_layers);
+        let layers_per = total_layers.div_ceil(shards);
+        let n_shards = total_layers.div_ceil(layers_per);
+        let latch = Arc::new(ShardLatch::new(n_shards - 1));
+        let mut inline: Option<&mut [f32]> = None;
+        {
+            let tx = self.tx.as_ref().expect("gather pool shut down").lock().unwrap();
+            for (idx, chunk) in out.chunks_mut(layers_per * layer_block).enumerate() {
+                if idx == 0 {
+                    inline = Some(chunk);
+                    continue;
+                }
+                let shard = GatherShard {
+                    sources: sources.as_ptr(),
+                    sources_len: sources.len(),
+                    ids: ids.as_ptr(),
+                    ids_len: ids.len(),
+                    out: chunk.as_mut_ptr(),
+                    out_len: chunk.len(),
+                    first_layer: idx * layers_per,
+                    layer_block,
+                    n,
+                    d,
+                    latch: Arc::clone(&latch),
+                };
+                // Workers only exit when the sender drops, which cannot
+                // happen while `self` is alive — a failed send means a
+                // worker panicked, which is a bug worth dying loudly for.
+                tx.send(shard).expect("gather workers exited");
+            }
+        }
+        if let Some(chunk) = inline {
+            for (i, layer_out) in chunk.chunks_mut(layer_block).enumerate() {
+                if let Err(e) = gather_layer(sources, i, ids, n, d, layer_out) {
+                    latch.record(e);
+                    break;
+                }
+            }
+        }
+        // After this wait no borrow of `sources`/`ids`/`out` is live
+        // anywhere but this frame.
+        latch.wait();
+        match latch.err.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for GatherPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::store::TaskP;
+    use crate::util::Pcg64;
+
+    fn sources(l: usize, v: usize, d: usize, rows: usize) -> Vec<Arc<dyn RowSource>> {
+        let mut rng = Pcg64::new(7);
+        (0..rows)
+            .map(|_| {
+                let data = rng.normal_vec(l * v * d, 1.0);
+                Arc::new(TaskP::new(l, v, d, data).unwrap()) as Arc<dyn RowSource>
+            })
+            .collect()
+    }
+
+    fn serial(srcs: &[Arc<dyn RowSource>], ids: &[i32], n: usize, d: usize, l: usize) -> Vec<f32> {
+        let b = srcs.len();
+        let layer_block = b * n * d;
+        let mut out = vec![0f32; l * layer_block];
+        for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
+            gather_layer(srcs, layer, ids, n, d, layer_out).unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn pooled_gather_matches_serial() {
+        let (l, v, d, b, n) = (7, 40, 16, 4, 10);
+        let srcs = sources(l, v, d, b);
+        let mut rng = Pcg64::new(9);
+        let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let want = serial(&srcs, &ids, n, d, l);
+        for threads in [1, 2, 3, 8, 16] {
+            let pool = GatherPool::new(threads);
+            let mut got = vec![0f32; l * b * n * d];
+            pool.gather(&srcs, &ids, n, d, b * n * d, &mut got).unwrap();
+            assert_eq!(want, got, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_batches() {
+        // The whole point: one spawn, many batches.  Values must stay
+        // exact on every reuse (no stale shard state).
+        let (l, v, d, b, n) = (5, 30, 8, 3, 6);
+        let srcs = sources(l, v, d, b);
+        let pool = GatherPool::new(4);
+        let mut rng = Pcg64::new(11);
+        for batch in 0..50 {
+            let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, v as i64) as i32).collect();
+            let want = serial(&srcs, &ids, n, d, l);
+            let mut got = vec![1e9f32; l * b * n * d];
+            pool.gather(&srcs, &ids, n, d, b * n * d, &mut got).unwrap();
+            assert_eq!(want, got, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_layers_is_clamped() {
+        let (l, v, d, b, n) = (2, 20, 4, 2, 5);
+        let srcs = sources(l, v, d, b);
+        let pool = GatherPool::new(16);
+        let want = serial(&srcs, &ids_of(b * n, v), n, d, l);
+        let mut got = vec![0f32; l * b * n * d];
+        pool.gather(&srcs, &ids_of(b * n, v), n, d, b * n * d, &mut got).unwrap();
+        assert_eq!(want, got);
+    }
+
+    fn ids_of(len: usize, v: usize) -> Vec<i32> {
+        (0..len).map(|i| (i % v) as i32).collect()
+    }
+
+    #[test]
+    fn drop_joins_parked_workers() {
+        let pool = GatherPool::new(8);
+        assert_eq!(pool.threads(), 8);
+        drop(pool); // must not hang
+    }
+}

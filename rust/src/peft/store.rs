@@ -26,6 +26,7 @@ use anyhow::bail;
 use crate::tensor::Tensor;
 use crate::Result;
 
+use super::pool::GatherPool;
 use super::quant::AdapterDType;
 use super::residency::{AdapterConfig, AdapterStats, Residency};
 
@@ -177,7 +178,9 @@ pub struct PStore {
     layers: usize,
     vocab: usize,
     d_model: usize,
-    residency: Residency,
+    /// Shared with the background prefetch worker (which holds a `Weak`),
+    /// hence the `Arc`.
+    residency: Arc<Residency>,
 }
 
 impl PStore {
@@ -198,7 +201,7 @@ impl PStore {
             layers,
             vocab,
             d_model,
-            residency: Residency::new(layers, vocab, d_model, cfg),
+            residency: Arc::new(Residency::new(layers, vocab, d_model, cfg)),
         }
     }
 
@@ -333,32 +336,11 @@ impl PStore {
         threads: usize,
         out: &mut [f32],
     ) -> Result<()> {
+        let Some(sources) = self.gather_prep(assignments, ids, n, b, out.len())? else {
+            return Ok(()); // degenerate geometry or no live rows
+        };
         let live = assignments.len();
         let d = self.d_model;
-        if live > b {
-            bail!("gather_batch: {live} live rows exceed bucket batch {b}");
-        }
-        if ids.len() != b * n {
-            bail!("gather_batch: ids length {} != {b}x{n}", ids.len());
-        }
-        if out.len() != self.layers * b * n * d {
-            bail!(
-                "gather_batch: output length {} != {}x{b}x{n}x{d}",
-                out.len(),
-                self.layers
-            );
-        }
-        if live * n * d * self.layers == 0 {
-            return Ok(()); // degenerate geometry or no live rows: nothing to copy
-        }
-        self.validate_ids(&ids[..live * n])?;
-        // Resolve tiers once per row, not once per token: the snapshot
-        // point for eviction/unregister isolation.
-        let sources: Vec<Arc<dyn RowSource>> = assignments
-            .iter()
-            .map(|t| self.get(t))
-            .collect::<Result<_>>()?;
-
         let layer_block = b * n * d;
         // Scoped threads cost tens of microseconds to spawn; only go
         // parallel when the per-layer copy is large enough to repay that
@@ -399,6 +381,85 @@ impl PStore {
         }
     }
 
+    /// The overlapped pipeline's gather: identical semantics and geometry
+    /// checks to [`PStore::gather_batch`], but layer shards run on the
+    /// persistent [`GatherPool`] (spawned once per pipeline) instead of
+    /// per-batch scoped threads — the serving hot path pays a channel
+    /// send per shard, not a thread spawn (DESIGN.md §11).
+    pub fn gather_batch_pooled(
+        &self,
+        assignments: &[&str],
+        ids: &[i32],
+        n: usize,
+        b: usize,
+        pool: &GatherPool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let Some(sources) = self.gather_prep(assignments, ids, n, b, out.len())? else {
+            return Ok(()); // degenerate geometry or no live rows
+        };
+        let live = assignments.len();
+        let d = self.d_model;
+        let layer_block = b * n * d;
+        if live * n * d < PARALLEL_MIN_ELEMS || pool.threads() == 1 {
+            for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
+                gather_layer(&sources, layer, ids, n, d, layer_out)?;
+            }
+            return Ok(());
+        }
+        pool.gather(&sources, ids, n, d, layer_block, out)
+    }
+
+    /// Shared validation + snapshot resolution for the gather entry
+    /// points.  Resolves tiers once per row, not once per token — the
+    /// snapshot point for eviction/unregister isolation.  Returns `None`
+    /// when there is nothing to copy (degenerate geometry, no live rows).
+    fn gather_prep(
+        &self,
+        assignments: &[&str],
+        ids: &[i32],
+        n: usize,
+        b: usize,
+        out_len: usize,
+    ) -> Result<Option<Vec<Arc<dyn RowSource>>>> {
+        let live = assignments.len();
+        let d = self.d_model;
+        if live > b {
+            bail!("gather_batch: {live} live rows exceed bucket batch {b}");
+        }
+        if ids.len() != b * n {
+            bail!("gather_batch: ids length {} != {b}x{n}", ids.len());
+        }
+        if out_len != self.layers * b * n * d {
+            bail!(
+                "gather_batch: output length {out_len} != {}x{b}x{n}x{d}",
+                self.layers
+            );
+        }
+        if live * n * d * self.layers == 0 {
+            return Ok(None);
+        }
+        self.validate_ids(&ids[..live * n])?;
+        let sources: Vec<Arc<dyn RowSource>> = assignments
+            .iter()
+            .map(|t| self.get(t))
+            .collect::<Result<_>>()?;
+        Ok(Some(sources))
+    }
+
+    /// Queue background fault-in for any of `tasks` currently on the disk
+    /// tier (gather-aware prefetch: the planner calls this the moment a
+    /// batch's tasks are known, so the gather's `get` finds them warm).
+    pub fn prefetch(&self, tasks: &[String]) {
+        Residency::prefetch(&self.residency, tasks);
+    }
+
+    /// Prefetches queued or in flight on the background worker (0 =
+    /// drained).  Tests use this to wait for prefetch deterministically.
+    pub fn prefetch_backlog(&self) -> usize {
+        self.residency.prefetch_backlog()
+    }
+
     fn validate_ids(&self, ids: &[i32]) -> Result<()> {
         for &tok in ids {
             if tok < 0 || tok as usize >= self.vocab {
@@ -410,7 +471,9 @@ impl PStore {
 }
 
 /// Copy one layer's rows for every live assignment (ids pre-validated).
-fn gather_layer(
+/// Shared by the scoped-thread path, the pooled path and the serial
+/// fallback — `pub(crate)` so [`GatherPool`] workers can run it.
+pub(crate) fn gather_layer(
     sources: &[Arc<dyn RowSource>],
     layer: usize,
     ids: &[i32],
@@ -643,6 +706,37 @@ mod tests {
             s.gather_batch(&assignments, &ids, n, b, threads, &mut parallel).unwrap();
             assert_eq!(serial, parallel, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn gather_batch_pooled_matches_serial() {
+        use crate::peft::pool::GatherPool;
+        let (l, v, d, b, n) = (5, 40, 64, 8, 40);
+        assert!(b * n * d >= super::PARALLEL_MIN_ELEMS);
+        let s = store(l, v, d);
+        let mut rng = Pcg64::new(6);
+        let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let assignments = ["a", "b", "a", "b", "a", "b", "a", "b"];
+        let mut serial = vec![0f32; l * b * n * d];
+        s.gather_into(&assignments, &ids, n, &mut serial).unwrap();
+        for threads in [1, 2, 3, 8] {
+            let pool = GatherPool::new(threads);
+            let mut pooled = vec![0f32; l * b * n * d];
+            // Reuse the same pool across repeats: no per-batch spawn.
+            for _ in 0..3 {
+                pooled.fill(0.0);
+                s.gather_batch_pooled(&assignments, &ids, n, b, &pool, &mut pooled).unwrap();
+                assert_eq!(serial, pooled, "threads={threads}");
+            }
+        }
+        // Small batches fall back to the serial inline path.
+        let small_ids = &ids[..b * 2];
+        let pool = GatherPool::new(4);
+        let mut small_serial = vec![0f32; l * b * 2 * d];
+        s.gather_batch(&assignments, small_ids, 2, b, 1, &mut small_serial).unwrap();
+        let mut small_pooled = vec![0f32; l * b * 2 * d];
+        s.gather_batch_pooled(&assignments, small_ids, 2, b, &pool, &mut small_pooled).unwrap();
+        assert_eq!(small_serial, small_pooled);
     }
 
     #[test]

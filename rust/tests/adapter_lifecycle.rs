@@ -219,7 +219,12 @@ fn re_registered_task_serves_new_table_through_pipeline() {
         registry,
         vec![Bucket { batch: 2, seq: 8 }],
         2,
-        CoordinatorConfig { model: "host".into(), linger_ms: 1, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms: 1,
+            signature: "aot".into(),
+            ..Default::default()
+        },
         Arc::new(HostBackend),
     )
     .unwrap();
@@ -262,7 +267,12 @@ fn over_budget_registry_serves_all_tasks_with_visible_counters() {
         registry,
         vec![Bucket { batch: 1, seq: 8 }, Bucket { batch: 4, seq: 8 }],
         2,
-        CoordinatorConfig { model: "host".into(), linger_ms: 1, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms: 1,
+            signature: "aot".into(),
+            ..Default::default()
+        },
         Arc::new(HostBackend),
     )
     .unwrap();
@@ -313,6 +323,173 @@ fn f16_tier_matches_f32_reference_within_tolerance() {
         for (x, y) in a.as_f32().unwrap().iter().zip(r.as_f32().unwrap()) {
             assert!((x - y).abs() < 1e-2, "trial {trial}: {x} vs {y}");
         }
+    }
+}
+
+/// Gather-aware prefetch racing the hot unregister (DESIGN.md §11):
+/// requests for the removed task fail individually ("unknown task" at
+/// admission or flush, "no fused P" from the gather); every other task
+/// keeps serving exact logits; and once the prefetch backlog drains the
+/// residency books balance — an unregister mid-prefetch must not leak a
+/// reservation.
+#[test]
+fn prefetch_unregister_race_fails_only_its_task_and_leaks_nothing() {
+    let table_bytes = L * V * D * 4;
+    let n_tasks = 6usize;
+    // Budget fits two of six tables: every mixed burst spills, faults and
+    // prefetches.
+    let cfg = AdapterConfig { ram_budget_bytes: 2 * table_bytes, ..Default::default() };
+    let registry = TaskRegistry::with_adapter_config(L, V, D, 2, cfg);
+    let head_w = Tensor::from_f32(&[D, 2], vec![0.0; D * 2]);
+    for i in 0..n_tasks {
+        let head_b = Tensor::from_f32(&[2], vec![i as f32, -(i as f32)]);
+        registry
+            .register_fused(&format!("t{i}"), constant_table(0.1), &head_w, &head_b)
+            .unwrap();
+    }
+    let coordinator = Arc::new(
+        Coordinator::with_backend(
+            registry,
+            vec![Bucket { batch: 1, seq: 8 }, Bucket { batch: 4, seq: 8 }],
+            2,
+            CoordinatorConfig {
+                model: "host".into(),
+                linger_ms: 1,
+                signature: "aot".into(),
+                ..Default::default()
+            },
+            Arc::new(HostBackend),
+        )
+        .unwrap(),
+    );
+
+    // Submitters hammer every task (tier traffic + prefetch under the
+    // tight budget) while the main thread unregisters "t0" mid-stream.
+    let workers: Vec<_> = (0..3)
+        .map(|seed| {
+            let coordinator = Arc::clone(&coordinator);
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::new(300 + seed);
+                for round in 0..120 {
+                    let i = rng.below(n_tasks as u64) as usize;
+                    let task = format!("t{i}");
+                    match coordinator.classify(&task, vec![1, 2, 3]) {
+                        Ok(r) => assert_eq!(
+                            r.logits,
+                            vec![i as f32, -(i as f32)],
+                            "round {round}: task {task} served wrong logits"
+                        ),
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            if i == 0 {
+                                assert!(
+                                    msg.contains("unknown task") || msg.contains("no fused P"),
+                                    "unexpected failure mode: {msg}"
+                                );
+                            } else {
+                                // The only legal collateral: the unregister
+                                // landed inside the stages of a mixed batch
+                                // that contained t0, so the batch-level
+                                // error names t0 — never another task.
+                                assert!(
+                                    msg.contains("t0"),
+                                    "task {task} failed unrelated to the unregister: {msg}"
+                                );
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    coordinator.registry().unregister("t0").unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert!(coordinator.classify("t0", vec![1]).is_err());
+
+    // Drain the prefetcher, then check the books for the survivors.
+    let store = coordinator.registry().pstore();
+    for _ in 0..2000 {
+        if store.prefetch_backlog() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(store.prefetch_backlog(), 0, "prefetch backlog never drained");
+    let a = coordinator.registry().adapter_stats();
+    assert_eq!(a.resident_tasks + a.spilled_tasks, n_tasks - 1, "{a:?}");
+    assert!(a.resident_bytes <= 2 * table_bytes, "{a:?}");
+
+    // Unregister the rest: every byte must come back.
+    for i in 1..n_tasks {
+        coordinator.registry().unregister(&format!("t{i}")).unwrap();
+    }
+    let a = coordinator.registry().adapter_stats();
+    assert_eq!(a.resident_bytes, 0, "leaked residency bytes: {a:?}");
+    assert_eq!(a.resident_tasks, 0, "{a:?}");
+    assert_eq!(a.spilled_tasks, 0, "{a:?}");
+    coordinator.shutdown();
+}
+
+/// Property (direct store level): random interleavings of prefetch
+/// requests — including for names already removed — with removals and
+/// gathers settle to exact residency accounting once the backlog drains,
+/// for every seed.
+#[test]
+fn prefetch_removal_interleavings_settle_to_exact_accounting() {
+    let table_bytes = L * V * D * 4;
+    for seed in 0..8u64 {
+        let cfg = AdapterConfig { ram_budget_bytes: 2 * table_bytes, ..Default::default() };
+        let store = PStore::with_config(L, V, D, cfg);
+        let names: Vec<String> = (0..5).map(|i| format!("p{i}")).collect();
+        for (i, name) in names.iter().enumerate() {
+            store.insert(name, constant_table(i as f32 + 1.0)).unwrap();
+        }
+        let mut rng = Pcg64::new(900 + seed);
+        let mut live = names.clone();
+        for _ in 0..40 {
+            match rng.below(3) {
+                0 => {
+                    // Prefetch a random mix of live and removed names.
+                    let wanted: Vec<String> = (0..1 + rng.below(3))
+                        .map(|_| names[rng.below(5) as usize].clone())
+                        .collect();
+                    store.prefetch(&wanted);
+                }
+                1 if !live.is_empty() => {
+                    let victim = live.swap_remove(rng.below(live.len() as u64) as usize);
+                    store.remove(&victim).unwrap();
+                }
+                _ => {
+                    if let Some(name) = live.first() {
+                        let out = store.gather(&[name.as_str()], &[0, 1], 2).unwrap();
+                        assert!(out.as_f32().unwrap().iter().all(|&x| x > 0.0));
+                    }
+                }
+            }
+        }
+        for _ in 0..2000 {
+            if store.prefetch_backlog() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(store.prefetch_backlog(), 0, "seed {seed}: backlog never drained");
+        let stats = store.stats();
+        assert_eq!(
+            stats.resident_tasks + stats.spilled_tasks,
+            live.len(),
+            "seed {seed}: {stats:?}"
+        );
+        assert!(stats.resident_bytes <= 2 * table_bytes, "seed {seed}: {stats:?}");
+        for name in live.drain(..) {
+            store.remove(&name).unwrap();
+        }
+        let stats = store.stats();
+        assert_eq!(stats.resident_bytes, 0, "seed {seed}: leaked bytes: {stats:?}");
+        assert_eq!(stats.resident_tasks + stats.spilled_tasks, 0, "seed {seed}: {stats:?}");
     }
 }
 

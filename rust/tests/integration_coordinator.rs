@@ -67,7 +67,12 @@ fn coordinator() -> Option<Coordinator> {
         runtime,
         &manifest,
         registry,
-        CoordinatorConfig { model: "tiny".into(), linger_ms: 5, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "tiny".into(),
+            linger_ms: 5,
+            signature: "aot".into(),
+            ..Default::default()
+        },
     ) {
         Ok(c) => Some(c),
         Err(e) => {
@@ -140,7 +145,12 @@ fn zero_table_task_equals_frozen_backbone_plus_head() {
         runtime,
         &manifest,
         registry,
-        CoordinatorConfig { model: "tiny".into(), linger_ms: 1, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "tiny".into(),
+            linger_ms: 1,
+            signature: "aot".into(),
+            ..Default::default()
+        },
     ) {
         Ok(c) => c,
         Err(e) => {

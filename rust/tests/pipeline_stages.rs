@@ -43,7 +43,12 @@ fn coordinator(linger_ms: u64) -> Coordinator {
         registry(),
         buckets(),
         CLASSES,
-        CoordinatorConfig { model: "host".into(), linger_ms, signature: "aot".into() },
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms,
+            signature: "aot".into(),
+            ..Default::default()
+        },
         Arc::new(HostBackend),
     )
     .unwrap()
@@ -195,7 +200,12 @@ fn f16_registry_serves_and_reports_adapter_counters() {
     };
     assert_eq!(2 * f16_reg.ram_bytes(), f32_reg.ram_bytes());
 
-    let cfg = CoordinatorConfig { model: "host".into(), linger_ms: 0, signature: "aot".into() };
+    let cfg = CoordinatorConfig {
+        model: "host".into(),
+        linger_ms: 0,
+        signature: "aot".into(),
+        ..Default::default()
+    };
     let reference = Coordinator::with_backend(
         f32_reg,
         buckets(),
@@ -223,6 +233,113 @@ fn f16_registry_serves_and_reports_adapter_counters() {
     assert!(snap.adapter.hits > 0);
     assert_eq!(snap.adapter.evictions, 0);
     assert!(snap.adapter.resident_bytes > 0);
+}
+
+/// The overlap satellite: many submitter threads through the
+/// double-buffered coordinator (overlap on, prefetch on, an adapter
+/// budget tight enough to force tier traffic) must match a strictly
+/// serial overlap-off coordinator bit for bit — running execute on a
+/// dedicated thread while the next batch gathers must not change a
+/// single logit.
+#[test]
+fn overlapped_pipeline_matches_serial_reference_bit_exact() {
+    use aotpt::coordinator::AdapterConfig;
+    let table_bytes = LAYERS * VOCAB * D * 4;
+    // Budget fits one of the two task tables: every a/b alternation
+    // spills, prefetches and faults while the batches overlap.
+    let tight_registry = || {
+        let reg = TaskRegistry::with_adapter_config(
+            LAYERS,
+            VOCAB,
+            D,
+            CLASSES,
+            AdapterConfig { ram_budget_bytes: table_bytes, ..Default::default() },
+        );
+        let mut rng = Pcg64::new(42);
+        for (name, classes) in [("a", 2usize), ("b", 3usize)] {
+            let table =
+                TaskP::new(LAYERS, VOCAB, D, rng.normal_vec(LAYERS * VOCAB * D, 0.5)).unwrap();
+            let head_w = Tensor::from_f32(&[D, classes], rng.normal_vec(D * classes, 0.2));
+            let head_b = Tensor::from_f32(&[classes], rng.normal_vec(classes, 0.2));
+            reg.register_fused(name, table, &head_w, &head_b).unwrap();
+        }
+        reg
+    };
+    // Reference: the seed's strictly serial loop, no prefetch.
+    let reference = Coordinator::with_backend(
+        tight_registry(),
+        buckets(),
+        CLASSES,
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms: 0,
+            signature: "aot".into(),
+            prefetch: false,
+            overlap: false,
+            ..Default::default()
+        },
+        Arc::new(HostBackend),
+    )
+    .unwrap();
+    let cases: Vec<(String, Vec<i32>)> = (0..32)
+        .map(|i| {
+            let task = if i % 2 == 0 { "a" } else { "b" };
+            (task.to_string(), ids(2000 + i as u64, 3 + (i % 14)))
+        })
+        .collect();
+    let expected: Vec<Vec<f32>> = cases
+        .iter()
+        .map(|(task, ids)| reference.classify(task, ids.clone()).unwrap().logits)
+        .collect();
+
+    // Overlapped: defaults (overlap + prefetch on), a linger window that
+    // forces mixed batches through the two-slot queue.
+    let c = Arc::new(Coordinator::with_backend(
+        tight_registry(),
+        buckets(),
+        CLASSES,
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms: 3,
+            signature: "aot".into(),
+            ..Default::default()
+        },
+        Arc::new(HostBackend),
+    )
+    .unwrap());
+    let cases = Arc::new(cases);
+    let expected = Arc::new(expected);
+    let mut handles = Vec::new();
+    for thread in 0..8usize {
+        let c = Arc::clone(&c);
+        let cases = Arc::clone(&cases);
+        let expected = Arc::clone(&expected);
+        handles.push(std::thread::spawn(move || {
+            for i in (thread * 4)..(thread * 4 + 4) {
+                let (task, ids) = &cases[i];
+                let got = c.classify(task, ids.clone()).unwrap();
+                assert_eq!(
+                    got.logits, expected[i],
+                    "request {i} diverged from the serial overlap-off reference"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.requests, 32);
+    assert_eq!(snap.queue_depth, 0, "queue must drain");
+    // The tight budget really exercised the tiers while overlapped.
+    let a = snap.adapter;
+    assert!(
+        a.evictions + a.cold_serves + a.faults > 0,
+        "one-table budget never forced tier traffic: {a:?}"
+    );
+    // Shutdown joins the worker and then the execute thread.
+    c.shutdown();
+    assert!(c.classify("a", ids(1, 3)).is_err());
 }
 
 #[test]
