@@ -7,7 +7,7 @@ Little-endian layout (mirrored by ``rust/src/tensor/ckpt.rs``):
     u32     tensor count
     per tensor:
         u16   name length, then UTF-8 name bytes
-        u8    dtype: 0 = f32, 1 = i32, 2 = i64, 3 = f16
+        u8    dtype: 0 = f32, 1 = i32, 2 = i64, 3 = f16, 4 = i8
         u8    ndim
         u32   dims[ndim]
         u64   payload byte length
@@ -32,8 +32,9 @@ _DTYPES = {
     np.dtype(np.int32): 1,
     np.dtype(np.int64): 2,
     np.dtype(np.float16): 3,
+    np.dtype(np.int8): 4,
 }
-_DTYPES_INV = {0: np.float32, 1: np.int32, 2: np.int64, 3: np.float16}
+_DTYPES_INV = {0: np.float32, 1: np.int32, 2: np.int64, 3: np.float16, 4: np.int8}
 
 
 def save(path: str, tensors: Dict[str, np.ndarray]) -> None:

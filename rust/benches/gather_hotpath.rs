@@ -8,10 +8,13 @@
 //! (verified here via the arena counters), and a measurable speedup at
 //! b ≥ 16.
 //!
-//! Part 2 compares the f32 resident tier against the f16 tier (DESIGN.md
-//! §10): the f16 gather pays a per-element dequant to halve resident RAM;
-//! this table prices that trade, and the outputs are asserted within the
-//! 1e-2 tier tolerance.
+//! Part 2 prices the resident storage tiers against each other
+//! (DESIGN.md §10): f32 vs f16 vs int8.  The narrower tiers pay a
+//! per-element dequant on the gather to shrink resident RAM (2× for f16,
+//! ~4× for int8); the table reports ns/row, bytes/row and max-abs-err per
+//! tier, every tier is asserted within its dequant tolerance (1e-2 for
+//! f16, 2e-2 for int8 at unit-scale rows), and all three gathers are
+//! asserted zero-alloc against the shared arena.
 //!
 //! Part 3 prices the double-buffered serving split (DESIGN.md §11): the
 //! serial `prepare` + `complete` sum against the overlapped path where a
@@ -137,62 +140,73 @@ fn main() {
     );
     println!("(speedup column should exceed 1.00x at b>=16; allocs asserted == 1 per cell)");
 
-    // ---- Part 2: f32 resident tier vs f16 tier (DESIGN.md §10) ----------
+    // ---- Part 2: resident tiers: f32 vs f16 vs int8 (DESIGN.md §10) -----
     let mut tier_rows = Vec::new();
     let tier_models: &[(&str, usize, usize)] =
         if test_mode { &[("small", 4, 128)] } else { &[("small", 4, 128), ("base", 6, 256)] };
     let tier_cells: &[(usize, usize)] =
         if test_mode { &[(4, 16)] } else { &[(16, 64), (64, 128)] };
+    // (tier name, storage dtype, arena slot, max-abs-err bound vs the f32
+    // reference at unit-scale rows).
+    let tiers: &[(&str, AdapterDType, &str, f32)] = &[
+        ("f32", AdapterDType::F32, "bias32", 0.0),
+        ("f16", AdapterDType::F16, "bias16", 1e-2),
+        ("int8", AdapterDType::I8, "bias8", 2e-2),
+    ];
     for &(model, l, d) in tier_models {
-        let f32_store = PStore::new(l, vocab, d);
-        let f16_store = PStore::with_config(
-            l,
-            vocab,
-            d,
-            AdapterConfig { dtype: AdapterDType::F16, ..Default::default() },
-        );
+        let stores: Vec<PStore> = tiers
+            .iter()
+            .map(|&(_, dtype, _, _)| {
+                PStore::with_config(l, vocab, d, AdapterConfig { dtype, ..Default::default() })
+            })
+            .collect();
         let mut rng = Pcg64::new(2);
         for name in ["t0", "t1", "t2", "t3"] {
             let data = rng.normal_vec(l * vocab * d, 1.0);
-            f32_store
-                .insert(name, TaskP::new(l, vocab, d, data.clone()).unwrap())
-                .unwrap();
-            f16_store.insert(name, TaskP::new(l, vocab, d, data).unwrap()).unwrap();
+            for store in &stores {
+                store.insert(name, TaskP::new(l, vocab, d, data.clone()).unwrap()).unwrap();
+            }
         }
+        // Logical P rows resident across the 4 registered tasks.
+        let logical_rows = (4 * l * vocab) as f64;
         for &(b, n) in tier_cells {
             let assignments: Vec<&str> = (0..b).map(|i| ["t0", "t1", "t2", "t3"][i % 4]).collect();
             let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, vocab as i64) as i32).collect();
 
-            // Correctness first: the tiers agree within tolerance.
-            let mut f32_out = vec![0f32; l * b * n * d];
-            let mut f16_out = vec![0f32; l * b * n * d];
-            f32_store.gather_batch(&assignments, &ids, n, b, threads, &mut f32_out).unwrap();
-            f16_store.gather_batch(&assignments, &ids, n, b, threads, &mut f16_out).unwrap();
-            for (x, y) in f16_out.iter().zip(&f32_out) {
-                assert!((x - y).abs() < 1e-2, "f16 tier diverged: {x} vs {y}");
-            }
+            // Correctness first: every tier within its dequant tolerance
+            // of the f32 reference.
+            let mut reference = vec![0f32; l * b * n * d];
+            stores[0].gather_batch(&assignments, &ids, n, b, threads, &mut reference).unwrap();
 
             let arena = GatherArena::new();
-            let t32 = measure(&format!("{model}/b{b}n{n}/f32"), &cell_cfg, || {
-                let mut out = arena.take_f32(b, n, "bias32", l * b * n * d);
-                f32_store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
-                std::hint::black_box(&out);
-                arena.put_f32(b, n, "bias32", out);
-            });
-            let t16 = measure(&format!("{model}/b{b}n{n}/f16"), &cell_cfg, || {
-                let mut out = arena.take_f32(b, n, "bias16", l * b * n * d);
-                f16_store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
-                std::hint::black_box(&out);
-                arena.put_f32(b, n, "bias16", out);
-            });
-            // Both tiers stay zero-alloc in steady state (one checkout
-            // per slot key, ever).
-            assert_eq!(arena.allocs(), 2, "resident tiers must not allocate per batch");
+            let mut timed = Vec::new();
+            for (store, &(tier, _, slot, tol)) in stores.iter().zip(tiers) {
+                let mut out = vec![0f32; l * b * n * d];
+                store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
+                let max_err =
+                    out.iter().zip(&reference).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+                assert!(max_err <= tol, "{tier} tier diverged: max abs err {max_err} > {tol}");
 
-            for m in [&t32, &t16] {
+                let m = measure(&format!("{model}/b{b}n{n}/{tier}"), &cell_cfg, || {
+                    let mut out = arena.take_f32(b, n, slot, l * b * n * d);
+                    store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
+                    std::hint::black_box(&out);
+                    arena.put_f32(b, n, slot, out);
+                });
+                timed.push((tier, m, max_err, store.bytes()));
+            }
+            // All three tiers stay zero-alloc in steady state: one
+            // checkout per slot key, ever — f16 and int8 dequant straight
+            // into the arena buffer, never through a scratch Vec.
+            assert_eq!(arena.allocs(), 3, "resident tiers must not allocate per batch");
+
+            for (tier, m, max_err, bytes) in &timed {
                 let mut case = m.to_json();
+                case.set("tier", Json::Str(tier.to_string()));
                 case.set("ns_per_batch", Json::Num(m.mean_secs * 1e9));
-                case.set("ns_per_row", Json::Num(m.mean_secs * 1e9 / b as f64));
+                case.set("ns_per_row", Json::Num(m.mean_secs * 1e9 / (l * b * n) as f64));
+                case.set("bytes_per_row", Json::Num(*bytes as f64 / logical_rows));
+                case.set("max_abs_err", Json::Num(*max_err as f64));
                 case.set("allocs", Json::Num(arena.allocs() as f64));
                 cases.push(case);
             }
@@ -200,25 +214,38 @@ fn main() {
             tier_rows.push(vec![
                 model.to_string(),
                 format!("b{b}n{n}"),
-                format!("{:.3}", t32.mean_secs * 1e3),
-                format!("{:.3}", t16.mean_secs * 1e3),
-                format!("{:.2}x", t32.mean_secs / t16.mean_secs),
+                format!("{:.3}", timed[0].1.mean_secs * 1e3),
+                format!("{:.3}", timed[1].1.mean_secs * 1e3),
+                format!("{:.3}", timed[2].1.mean_secs * 1e3),
                 format!(
-                    "{:.0}/{:.0}",
-                    f32_store.bytes() as f64 / (1 << 20) as f64,
-                    f16_store.bytes() as f64 / (1 << 20) as f64
+                    "{:.0}/{:.0}/{:.0}",
+                    timed[0].3 as f64 / logical_rows,
+                    timed[1].3 as f64 / logical_rows,
+                    timed[2].3 as f64 / logical_rows
                 ),
+                format!("{:.1e}/{:.1e}", timed[1].2, timed[2].2),
             ]);
         }
     }
     println!(
         "{}",
         render_table(
-            &["model", "bucket", "f32 ms", "f16 ms", "f16 speed", "MiB f32/f16"],
+            &[
+                "model",
+                "bucket",
+                "f32 ms",
+                "f16 ms",
+                "int8 ms",
+                "B/row f32/f16/int8",
+                "err f16/int8",
+            ],
             &tier_rows,
         )
     );
-    println!("(f16 halves resident MiB; dequant cost shows in the f16 ms column)");
+    println!(
+        "(f16 halves and int8 quarters resident bytes/row; dequant cost shows in \
+         the tier ms columns; int8 max-abs-err asserted < 2e-2)"
+    );
 
     // ---- Part 3: serial vs overlapped gather/execute (DESIGN.md §11) ----
     // A full Pipeline over the HostBackend: the serial path chains

@@ -204,7 +204,8 @@ impl MetricsSnapshot {
             "requests={} batches={} mean_batch={:.2} p50={:.2}ms p99={:.2}ms \
              gather={:.3}ms exec={:.3}ms gather_frac={:.1}% queue={} \
              arena_reuse={}/{} adapters={}r/{}s {:.1}MiB \
-             hit={} fault={} cold={} evict={} prefetch={}h/{}m/{}w",
+             hit={} fault={} cold={} evict={} prefetch={}h/{}m/{}w \
+             dedup={:.2}x zero_rows={}",
             self.requests,
             self.batches,
             self.mean_batch_size,
@@ -226,6 +227,8 @@ impl MetricsSnapshot {
             self.adapter.prefetch_hits,
             self.adapter.prefetch_misses,
             self.adapter.prefetch_wasted,
+            self.adapter.dedup_ratio(),
+            self.adapter.dedup_zero_rows,
         )
     }
 }
@@ -310,14 +313,20 @@ mod tests {
             prefetch_hits: 4,
             prefetch_misses: 2,
             prefetch_wasted: 1,
+            dedup_logical_rows: 1000,
+            dedup_stored_rows: 400,
+            dedup_zero_rows: 550,
         };
         m.set_adapter_counters(stats);
         let s = m.snapshot();
         assert_eq!(s.adapter, stats);
+        assert!((s.adapter.dedup_ratio() - 2.5).abs() < 1e-12);
         let r = s.render();
         assert!(r.contains("adapters=2r/5s"), "{r}");
         assert!(r.contains("fault=7"), "{r}");
         assert!(r.contains("evict=9"), "{r}");
         assert!(r.contains("prefetch=4h/2m/1w"), "{r}");
+        assert!(r.contains("dedup=2.50x"), "{r}");
+        assert!(r.contains("zero_rows=550"), "{r}");
     }
 }

@@ -43,7 +43,8 @@ fn run(argv: &[String]) -> Result<()> {
         Some("0"),
         "max resident adapter-table bytes (e.g. 512MiB; 0 = unlimited)",
     )
-    .opt("adapter-dtype", Some("f32"), "adapter table storage dtype: f32|f16")
+    .opt("adapter-dtype", Some("f32"), "adapter table storage dtype: f32|f16|int8")
+    .opt("adapter-dedup", Some("off"), "fuse-time shared-row dedup: on|off")
     .opt("gather-threads", Some("0"), "gather shard threads (0 = one per core)")
     .opt("prefetch", Some("on"), "gather-aware adapter prefetch: on|off")
     .opt("tasks", Some("8"), "task count (adapters demo)")
@@ -59,10 +60,15 @@ fn run(argv: &[String]) -> Result<()> {
     let positional = args.positional().to_vec();
     let command = positional.first().map(String::as_str).unwrap_or("info");
 
+    // Adapter-store flags are validated up front for every command: a
+    // typo'd --adapter-dtype fails here, listing the valid values, rather
+    // than on the first task registration deep inside a running pipeline.
+    let adapter_cfg = adapter_config_from_args(&args)?;
+
     // The adapters demo is artifact-free (HostBackend); everything else
     // reads the manifest.
     if command == "adapters" {
-        return run_adapters_demo(&args);
+        return run_adapters_demo(&args, adapter_cfg);
     }
     let manifest = Manifest::load(&aotpt::artifacts_dir())?;
 
@@ -101,39 +107,52 @@ fn run(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Artifact-free demo of the tiered adapter store (DESIGN.md §10):
-/// registers more task bytes than `--adapter-ram-budget` allows, serves a
-/// mixed multi-task burst through the HostBackend pipeline, and prints
-/// the residency counters that flowed into `MetricsSnapshot`.
-fn run_adapters_demo(args: &Args) -> Result<()> {
-    let ram_budget = args
+/// Build the adapter-store config from the shared CLI flags.  Called
+/// before command dispatch so bad values fail fast with the flag named.
+fn adapter_config_from_args(args: &Args) -> Result<AdapterConfig> {
+    let ram_budget_bytes = args
         .get_via("adapter-ram-budget", parse_bytes)
         .map_err(anyhow::Error::msg)?;
     let dtype = args
         .get_via("adapter-dtype", AdapterDType::parse)
         .map_err(anyhow::Error::msg)?;
+    let dedup = args.get_via("adapter-dedup", parse_switch).map_err(anyhow::Error::msg)?;
+    Ok(AdapterConfig { ram_budget_bytes, dtype, dedup, ..AdapterConfig::default() })
+}
+
+/// Artifact-free demo of the tiered adapter store (DESIGN.md §10, §12):
+/// registers more task bytes than `--adapter-ram-budget` allows, serves a
+/// mixed multi-task burst through the HostBackend pipeline, and prints
+/// the residency counters that flowed into `MetricsSnapshot`.
+fn run_adapters_demo(args: &Args, cfg: AdapterConfig) -> Result<()> {
     let n_tasks = args.get_usize("tasks").map_err(anyhow::Error::msg)?.max(1);
     let n_requests = args.get_usize("requests").map_err(anyhow::Error::msg)?.max(1);
     let gather_threads = args.get_usize("gather-threads").map_err(anyhow::Error::msg)?;
     let prefetch = args.get_via("prefetch", parse_switch).map_err(anyhow::Error::msg)?;
+    let (ram_budget, dtype, dedup) = (cfg.ram_budget_bytes, cfg.dtype, cfg.dedup);
 
     // A small-model analog: big enough that a handful of tasks outgrow a
     // few-MiB budget, small enough to run in seconds on a laptop.
     let (layers, vocab, d_model, classes) = (4usize, 2048usize, 64usize, 4usize);
     let table_bytes = layers * vocab * d_model * dtype.size();
-    let cfg = AdapterConfig { ram_budget_bytes: ram_budget, dtype, spill_dir: None };
     let registry = TaskRegistry::with_adapter_config(layers, vocab, d_model, classes, cfg);
 
     let mut rng = Pcg64::new(17);
     let mut names = Vec::new();
     for i in 0..n_tasks {
         let name = format!("task{i:03}");
-        let table = TaskP::new(
-            layers,
-            vocab,
-            d_model,
-            rng.normal_vec(layers * vocab * d_model, 0.5),
-        )?;
+        let mut data = rng.normal_vec(layers * vocab * d_model, 0.5);
+        if dedup {
+            // Mimic the paper's §4.3 observation that most per-token
+            // updates are near-zero: blank out half the vocab so the
+            // fuse-time dedup pass has shared rows to collapse.
+            for row in 0..layers * vocab {
+                if row % 2 == 0 {
+                    data[row * d_model..(row + 1) * d_model].fill(0.0);
+                }
+            }
+        }
+        let table = TaskP::new(layers, vocab, d_model, data)?;
         let head_w =
             aotpt::tensor::Tensor::from_f32(&[d_model, 2], rng.normal_vec(d_model * 2, 0.2));
         let head_b = aotpt::tensor::Tensor::from_f32(&[2], vec![0.0; 2]);
@@ -196,6 +215,15 @@ fn run_adapters_demo(args: &Args) -> Result<()> {
         a.prefetch_misses,
         a.prefetch_wasted,
     );
+    if dedup {
+        println!(
+            "dedup: {:.2}x ({} logical rows -> {} stored, {} shared-zero)",
+            a.dedup_ratio(),
+            a.dedup_logical_rows,
+            a.dedup_stored_rows,
+            a.dedup_zero_rows,
+        );
+    }
     coordinator.shutdown();
     Ok(())
 }

@@ -13,8 +13,14 @@
 //! it to disk under the RAM budget — see `peft::{quant, residency}` and
 //! DESIGN.md §10.  Fuse-time is the right moment to pay quantization:
 //! it is off the serving hot path and runs once per registration.
+//!
+//! Fuse-time is also when [`dedup_rows`] runs: the paper observes that
+//! trained ‖P_x‖ is near zero for most tokens (§4.3), so most fused rows
+//! carry no task signal.  The plan it returns backs the store's dedup'd
+//! tier — each unique row stored once behind a per-layer `u32` row-index
+//! indirection, the all-zero row shared implicitly (DESIGN.md §12).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{anyhow, bail};
 
@@ -153,6 +159,63 @@ pub fn fuse_kron(
     TaskP::new(l, vocab, d, out)
 }
 
+/// Output of the fuse-time shared-row dedup pass (DESIGN.md §12).
+///
+/// `index[layer·V + token]` is the `u32` indirection the store gathers
+/// through: `0` means the shared all-zero row (stored nowhere), `k > 0`
+/// means row `k − 1` of `unique`, a dense `[1, U, d]` pool of the
+/// distinct rows in first-appearance order.
+#[derive(Clone, Debug)]
+pub struct DedupPlan {
+    pub index: Vec<u32>,
+    pub unique: Vec<f32>,
+    pub d_model: usize,
+    /// Rows that collapsed onto the shared zero row.
+    pub zero_rows: usize,
+}
+
+impl DedupPlan {
+    /// Number of distinct stored rows (the pool's `U`).
+    pub fn unique_rows(&self) -> usize {
+        self.unique.len() / self.d_model.max(1)
+    }
+}
+
+/// Detect near-zero and bit-identical rows of a fused table.
+///
+/// A row whose elements are all `|x| ≤ eps` maps to the shared zero row
+/// (index 0); with the default `eps = 0` only exactly-zero rows collapse,
+/// so the dedup'd gather stays **bit-exact** — `eps > 0` is an explicit
+/// opt-in to lossy snapping.  Remaining rows dedup by bit pattern, so two
+/// tokens (or two layers) that fused to the identical row share storage.
+pub fn dedup_rows(p: &TaskP, eps: f32) -> DedupPlan {
+    let d = p.d_model;
+    let rows = p.layers * p.vocab;
+    let data = p.data();
+    let mut index = Vec::with_capacity(rows);
+    let mut unique = Vec::new();
+    let mut zero_rows = 0usize;
+    // Key rows by their exact bit pattern: f32 compare would conflate
+    // 0.0/-0.0 and choke on NaN; bits make dedup deterministic.
+    let mut seen: HashMap<Vec<u32>, u32> = HashMap::new();
+    for r in 0..rows {
+        let row = &data[r * d..(r + 1) * d];
+        if row.iter().all(|&x| x.abs() <= eps) {
+            index.push(0);
+            zero_rows += 1;
+            continue;
+        }
+        let key: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
+        let next = (seen.len() + 1) as u32;
+        let slot = *seen.entry(key).or_insert_with(|| {
+            unique.extend_from_slice(row);
+            next
+        });
+        index.push(slot);
+    }
+    DedupPlan { index, unique, d_model: d, zero_rows }
+}
+
 fn need<'a>(map: &'a BTreeMap<String, Tensor>, name: &str) -> Result<&'a Tensor> {
     map.get(name).ok_or_else(|| anyhow!("fuse: missing tensor {name}"))
 }
@@ -213,6 +276,62 @@ mod tests {
                     assert!((got - want).abs() < 1e-4, "l{layer} t{tok} d{dd}: {got} vs {want}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn dedup_collapses_zero_and_identical_rows() {
+        let (l, v, d) = (2, 8, 4);
+        // Layout per layer: tokens 0..4 zero, 4/5 share row A, 6 row B, 7 row C;
+        // layer 1 repeats layer 0's rows exactly → cross-layer dedup too.
+        let row_a = [1.0f32, -2.0, 3.0, 0.5];
+        let row_b = [0.25f32, 0.0, -0.125, 9.0];
+        let row_c = [-0.0f32, 0.0, 0.0, 1e-30];
+        let mut data = Vec::new();
+        for _layer in 0..l {
+            for tok in 0..v {
+                match tok {
+                    0..=3 => data.extend_from_slice(&[0.0; 4]),
+                    4 | 5 => data.extend_from_slice(&row_a),
+                    6 => data.extend_from_slice(&row_b),
+                    _ => data.extend_from_slice(&row_c),
+                }
+            }
+        }
+        let p = TaskP::new(l, v, d, data).unwrap();
+        let plan = dedup_rows(&p, 0.0);
+        // 16 logical rows → 3 stored (A, B, C), 8 zero.
+        assert_eq!(plan.index.len(), l * v);
+        assert_eq!(plan.zero_rows, 8);
+        assert_eq!(plan.unique_rows(), 3);
+        // -0.0 and 1e-30 are NOT zero at eps = 0 (bit-exactness).
+        assert_ne!(plan.index[7], 0);
+        // Shared rows point at the same pool slot across tokens and layers.
+        assert_eq!(plan.index[4], plan.index[5]);
+        assert_eq!(plan.index[4], plan.index[v + 4]);
+        assert_eq!(plan.index[0], 0);
+        // Pool row contents are the originals, first-appearance order.
+        assert_eq!(&plan.unique[0..4], &row_a);
+        assert_eq!(&plan.unique[4..8], &row_b);
+        // eps > 0 additionally snaps the near-zero row C to the zero row.
+        let lossy = dedup_rows(&p, 1e-6);
+        assert_eq!(lossy.index[7], 0);
+        assert_eq!(lossy.zero_rows, 12);
+        assert_eq!(lossy.unique_rows(), 2);
+    }
+
+    #[test]
+    fn dedup_of_all_distinct_rows_stores_everything() {
+        let (l, v, d) = (1, 6, 3);
+        let mut rng = Pcg64::new(17);
+        let data = rng.normal_vec(l * v * d, 1.0);
+        let p = TaskP::new(l, v, d, data.clone()).unwrap();
+        let plan = dedup_rows(&p, 0.0);
+        assert_eq!(plan.zero_rows, 0);
+        assert_eq!(plan.unique_rows(), v);
+        assert_eq!(plan.unique, data);
+        for (tok, &ix) in plan.index.iter().enumerate() {
+            assert_eq!(ix as usize, tok + 1);
         }
     }
 

@@ -7,13 +7,15 @@
 //!   `P ∈ R^{l×V×d}` matrices behind the [`store::RowSource`] tier
 //!   abstraction, with the ahead-of-time row gather
 //!   `bias[l,b,n,d] = P[l, ids[b,n], :]` as the coordinator's hot path.
-//! * `quant` — the f16 storage tier (fused-time quantization, on-gather
-//!   dequant into the arena buffers; DESIGN.md §10).
+//! * `quant` — the f16 and int8 storage tiers (fused-time quantization,
+//!   on-gather dequant into the arena buffers; DESIGN.md §10).
 //! * `residency` — the disk tier and hot task lifecycle: RAM budget, LRU
 //!   spill to `.aotckpt`, on-demand fault-in, pinning, and
 //!   register/replace/unregister on `&self` while serving.
 //! * `fuse` — host-side implementations of the FC/Kronecker fuse math,
-//!   cross-checked against the `fuse_*` HLO artifacts in tests.
+//!   cross-checked against the `fuse_*` HLO artifacts in tests; also the
+//!   fuse-time shared-row dedup pass behind `--adapter-dedup`
+//!   (DESIGN.md §12).
 //! * `arena` — reusable per-bucket staging buffers so the steady-state
 //!   serving gather allocates nothing (DESIGN.md §9).
 //! * `pool` — the persistent layer-sharded gather worker pool: spawned
@@ -28,9 +30,9 @@ pub mod store;
 
 pub use arena::GatherArena;
 pub use pool::GatherPool;
-pub use quant::{AdapterDType, QuantizedTaskP};
+pub use quant::{AdapterDType, Int8TaskP, QuantizedTaskP};
 pub use residency::{parse_bytes, AdapterConfig, AdapterStats, ColdTable};
-pub use store::{row_norms, PStore, RowSource, TaskP};
+pub use store::{row_norms, DedupTaskP, PStore, RowCounts, RowSource, TaskP};
 
 /// Every fine-tuning method of the paper (Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

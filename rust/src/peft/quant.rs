@@ -1,18 +1,21 @@
-//! The f16 storage tier: fused-time quantization of P tables.
+//! The f16 and int8 storage tiers: fused-time quantization of P tables.
 //!
 //! Paper §3.3 prices multi-task serving in host RAM — `l×V×d×4` bytes per
 //! task is 16–100 MB per layer at the paper's scales (DESIGN.md §3), so
 //! the resident-table dtype is the single biggest lever on how many tasks
 //! one serving process holds.  Storing P as IEEE 754 binary16 halves the
-//! footprint; rows are dequantized straight into the gather's arena
-//! buffer (`RowSource::copy_row`), so the device-visible bias is always
-//! f32 and no artifact changes shape.  Relative error is ≤ 2⁻¹¹ per
-//! element (round-to-nearest-even), far inside the 1e-2 tier tolerance
-//! asserted by the tests (DESIGN.md §10).
+//! footprint; per-row affine int8 quarters it (plus 8 bytes/row of f32
+//! scale/zero sidecars).  Rows are dequantized straight into the gather's
+//! arena buffer (`RowSource::copy_row`), so the device-visible bias is
+//! always f32 and no artifact changes shape.  f16 relative error is
+//! ≤ 2⁻¹¹ per element (round-to-nearest-even), far inside the 1e-2 tier
+//! tolerance asserted by the tests; int8 absolute error is ≤ scale/2 =
+//! (max−min)/510 per row, asserted under 2e-2 for unit-normal fuses
+//! (DESIGN.md §10).
 //!
-//! The conversions are software implementations (no `half` crate in the
-//! offline build) matching IEEE 754 semantics: subnormals are preserved,
-//! overflow saturates to ±inf, NaN stays NaN.
+//! The f16 conversions are software implementations (no `half` crate in
+//! the offline build) matching IEEE 754 semantics: subnormals are
+//! preserved, overflow saturates to ±inf, NaN stays NaN.
 
 use anyhow::bail;
 
@@ -26,14 +29,17 @@ use super::store::{RowSource, TaskP};
 pub enum AdapterDType {
     F32,
     F16,
+    I8,
 }
 
 impl AdapterDType {
-    /// Bytes per stored element.
+    /// Bytes per stored element (excluding the int8 tier's 8-bytes/row
+    /// scale/zero sidecars, which `resident_bytes` accounts separately).
     pub fn size(self) -> usize {
         match self {
             AdapterDType::F32 => 4,
             AdapterDType::F16 => 2,
+            AdapterDType::I8 => 1,
         }
     }
 
@@ -41,6 +47,7 @@ impl AdapterDType {
         match self {
             AdapterDType::F32 => "f32",
             AdapterDType::F16 => "f16",
+            AdapterDType::I8 => "int8",
         }
     }
 
@@ -48,7 +55,8 @@ impl AdapterDType {
         Ok(match s {
             "f32" => AdapterDType::F32,
             "f16" => AdapterDType::F16,
-            other => bail!("unknown adapter dtype {other} (expected f32|f16)"),
+            "int8" | "i8" => AdapterDType::I8,
+            other => bail!("unknown adapter dtype {other:?} (expected one of: f32, f16, int8)"),
         })
     }
 
@@ -57,6 +65,7 @@ impl AdapterDType {
         match self {
             AdapterDType::F32 => DType::F32,
             AdapterDType::F16 => DType::F16,
+            AdapterDType::I8 => DType::I8,
         }
     }
 }
@@ -211,6 +220,156 @@ impl RowSource for QuantizedTaskP {
     }
 }
 
+/// Quantize one row to per-row affine int8.  Returns `(scale, zero)`
+/// with `scale = (max−min)/255` and `zero = min + 128·scale`, chosen so
+/// the gather-side dequant is the single fused-multiply
+/// `x' = scale·q + zero` with no per-element branch.  Codes are
+/// `round((x−min)/scale) − 128`, clamped to `[-128, 127]`; absolute
+/// error is ≤ scale/2.  Constant rows (including all-zero rows, which
+/// paper §4.3 says dominate) get `scale = 0` and dequantize **exactly**
+/// to their value.
+pub fn quantize_row_i8(row: &[f32], codes: &mut [i8]) -> (f32, f32) {
+    debug_assert_eq!(row.len(), codes.len());
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in row {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    if !(min.is_finite() && max.is_finite()) || max == min {
+        // Empty, non-finite, or constant row: scale 0 ⇒ x' = zero exactly.
+        let zero = if min.is_finite() { min } else { 0.0 };
+        codes.fill(0);
+        return (0.0, zero);
+    }
+    let scale = (max - min) / 255.0;
+    let inv = 255.0 / (max - min);
+    for (c, &x) in codes.iter_mut().zip(row) {
+        let q = ((x - min) * inv).round() as i32 - 128;
+        *c = q.clamp(-128, 127) as i8;
+    }
+    (scale, min + 128.0 * scale)
+}
+
+/// Dequantize one int8 row into `out` (the on-gather direction; `out`
+/// is an arena-owned slice, so this performs no allocation).  The tight
+/// loop is a single fused multiply-add per element.
+#[inline]
+pub fn dequantize_i8_into(codes: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
+    for (o, &q) in out.iter_mut().zip(codes) {
+        *o = scale * (q as f32) + zero;
+    }
+}
+
+/// One task's fused table stored as per-row affine int8 — quarter the
+/// f32 footprint plus 8 bytes/row of f32 scale/zero (DESIGN.md §10).
+pub struct Int8TaskP {
+    layers: usize,
+    vocab: usize,
+    d_model: usize,
+    data: Vec<i8>,
+    scale: Vec<f32>,
+    zero: Vec<f32>,
+}
+
+impl Int8TaskP {
+    pub fn new(
+        layers: usize,
+        vocab: usize,
+        d_model: usize,
+        data: Vec<i8>,
+        scale: Vec<f32>,
+        zero: Vec<f32>,
+    ) -> Result<Int8TaskP> {
+        let rows = layers * vocab;
+        if data.len() != rows * d_model {
+            bail!("Int8TaskP: data length {} != {layers}x{vocab}x{d_model}", data.len());
+        }
+        if scale.len() != rows || zero.len() != rows {
+            bail!(
+                "Int8TaskP: scale/zero lengths {}/{} != {rows} rows",
+                scale.len(),
+                zero.len()
+            );
+        }
+        Ok(Int8TaskP { layers, vocab, d_model, data, scale, zero })
+    }
+
+    /// Fused-time quantization of an f32 table, row by row.
+    pub fn from_taskp(p: &TaskP) -> Int8TaskP {
+        Self::from_rows(p.layers, p.vocab, p.d_model, p.data())
+    }
+
+    /// Quantize `rows` (a dense `[layers*vocab, d_model]` f32 buffer).
+    pub fn from_rows(layers: usize, vocab: usize, d_model: usize, values: &[f32]) -> Int8TaskP {
+        let rows = layers * vocab;
+        debug_assert_eq!(values.len(), rows * d_model);
+        let mut data = vec![0i8; values.len()];
+        let mut scale = Vec::with_capacity(rows);
+        let mut zero = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let span = r * d_model..(r + 1) * d_model;
+            let (s, z) = quantize_row_i8(&values[span.clone()], &mut data[span]);
+            scale.push(s);
+            zero.push(z);
+        }
+        Int8TaskP { layers, vocab, d_model, data, scale, zero }
+    }
+
+    /// The stored codes of row (layer, token).
+    #[inline]
+    pub fn row_codes(&self, layer: usize, token: usize) -> &[i8] {
+        let d = self.d_model;
+        let start = (layer * self.vocab + token) * d;
+        &self.data[start..start + d]
+    }
+}
+
+impl RowSource for Int8TaskP {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn dtype(&self) -> AdapterDType {
+        AdapterDType::I8
+    }
+
+    fn tier(&self) -> &'static str {
+        "ram-int8"
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.data.len() + (self.scale.len() + self.zero.len()) * 4
+    }
+
+    #[inline]
+    fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()> {
+        let r = layer * self.vocab + token;
+        dequantize_i8_into(self.row_codes(layer, token), self.scale[r], self.zero[r], out);
+        Ok(())
+    }
+
+    fn quant_params(&self) -> Option<(&[f32], &[f32])> {
+        Some((&self.scale, &self.zero))
+    }
+
+    fn spill_into(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        // i8 and u8 share layout; one bulk write of the codes tensor.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len()) };
+        w.write_all(bytes)?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,9 +459,86 @@ mod tests {
     fn dtype_parse_and_sizes() {
         assert_eq!(AdapterDType::parse("f32").unwrap(), AdapterDType::F32);
         assert_eq!(AdapterDType::parse("f16").unwrap(), AdapterDType::F16);
-        assert!(AdapterDType::parse("int8").is_err());
+        assert_eq!(AdapterDType::parse("int8").unwrap(), AdapterDType::I8);
+        assert_eq!(AdapterDType::parse("i8").unwrap(), AdapterDType::I8);
+        let err = AdapterDType::parse("int4").unwrap_err().to_string();
+        assert!(err.contains("f32, f16, int8"), "parse error must list valid values: {err}");
         assert_eq!(AdapterDType::F32.size(), 4);
         assert_eq!(AdapterDType::F16.size(), 2);
+        assert_eq!(AdapterDType::I8.size(), 1);
         assert_eq!(AdapterDType::F16.tensor_dtype(), DType::F16);
+        assert_eq!(AdapterDType::I8.tensor_dtype(), DType::I8);
+        assert_eq!(AdapterDType::I8.name(), "int8");
+    }
+
+    #[test]
+    fn i8_row_quant_error_is_bounded_by_half_scale() {
+        let mut rng = Pcg64::new(21);
+        let d = 64;
+        let mut codes = vec![0i8; d];
+        let mut out = vec![0f32; d];
+        for &std in &[0.1f32, 1.0, 4.0] {
+            let row = rng.normal_vec(d, std);
+            let (scale, zero) = quantize_row_i8(&row, &mut codes);
+            dequantize_i8_into(&codes, scale, zero, &mut out);
+            for (k, (&got, &want)) in out.iter().zip(&row).enumerate() {
+                let err = (got - want).abs();
+                // Half a quantization step, plus f32 rounding headroom.
+                assert!(err <= scale * 0.5 + 1e-6, "k{k}: {want} -> {got} (err {err}, scale {scale})");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_constant_and_zero_rows_dequantize_exactly() {
+        let mut codes = vec![0i8; 8];
+        let mut out = vec![9f32; 8];
+        let (scale, zero) = quantize_row_i8(&[0.0; 8], &mut codes);
+        dequantize_i8_into(&codes, scale, zero, &mut out);
+        assert_eq!(scale, 0.0);
+        assert!(out.iter().all(|&x| x == 0.0), "all-zero row must survive bit-exact");
+        let (scale, zero) = quantize_row_i8(&[2.5; 8], &mut codes);
+        dequantize_i8_into(&codes, scale, zero, &mut out);
+        assert_eq!(scale, 0.0);
+        assert!(out.iter().all(|&x| x == 2.5), "constant row must survive bit-exact");
+        // Extremes of a row map inside the code range (no clamp bias).
+        let (scale, zero) = quantize_row_i8(&[-1.0, 1.0], &mut codes[..2]);
+        let mut two = [0f32; 2];
+        dequantize_i8_into(&codes[..2], scale, zero, &mut two);
+        assert!((two[0] + 1.0).abs() <= scale * 0.5 + 1e-6);
+        assert!((two[1] - 1.0).abs() <= scale * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn int8_table_quarter_footprint_and_tolerance() {
+        let (l, v, d) = (2, 16, 128);
+        let mut rng = Pcg64::new(13);
+        let data = rng.normal_vec(l * v * d, 1.0);
+        let p = TaskP::new(l, v, d, data.clone()).unwrap();
+        let q = Int8TaskP::from_taskp(&p);
+        // codes + 8 bytes/row of scale/zero; ≤ 0.27× f32 at d=128.
+        assert_eq!(q.resident_bytes(), l * v * d + l * v * 8);
+        let f32_bytes = l * v * d * 4;
+        assert!(
+            (q.resident_bytes() as f64) <= 0.27 * f32_bytes as f64,
+            "int8 resident {} > 0.27 × f32 {}",
+            q.resident_bytes(),
+            f32_bytes
+        );
+        let (scales, _zeros) = q.quant_params().unwrap();
+        let mut row = vec![0f32; d];
+        for layer in 0..l {
+            for tok in 0..v {
+                q.copy_row(layer, tok, &mut row).unwrap();
+                let scale = scales[layer * v + tok];
+                for (k, &got) in row.iter().enumerate() {
+                    let want = data[(layer * v + tok) * d + k];
+                    let err = (got - want).abs();
+                    assert!(err <= scale * 0.5 + 1e-6, "l{layer} t{tok} k{k}: err {err}");
+                    // Stated tier bound (unit-normal fuse): 2e-2 absolute.
+                    assert!(err < 2e-2, "l{layer} t{tok} k{k}: err {err} breaches tier bound");
+                }
+            }
+        }
     }
 }

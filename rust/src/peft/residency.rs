@@ -46,14 +46,19 @@ use anyhow::{anyhow, bail, Context};
 use crate::tensor::{ckpt, DType};
 use crate::Result;
 
-use super::quant::{f16_bits_to_f32, AdapterDType, QuantizedTaskP};
-use super::store::{RowSource, TaskP};
+use super::quant::{f16_bits_to_f32, AdapterDType, Int8TaskP, QuantizedTaskP};
+use super::store::{DedupTaskP, RowCounts, RowSource, TaskP};
 
-/// Name of the single tensor inside a spill file.
+/// Name of the main table tensor inside a spill file.  Tiered layouts
+/// add sidecar tensors next to it: `p.index` (`u32` dedup indirection,
+/// stored as i32 bits), `p.scale`/`p.zero` (per-row int8 affine params).
 const SPILL_TENSOR: &str = "p";
+const SPILL_INDEX: &str = "p.index";
+const SPILL_SCALE: &str = "p.scale";
+const SPILL_ZERO: &str = "p.zero";
 
 /// Adapter-store configuration (CLI: `--adapter-ram-budget`,
-/// `--adapter-dtype`).
+/// `--adapter-dtype`, `--adapter-dedup`).
 #[derive(Clone, Debug)]
 pub struct AdapterConfig {
     /// Max bytes of resident adapter tables; 0 means unlimited (never
@@ -64,11 +69,25 @@ pub struct AdapterConfig {
     /// Where spilled tables go.  `None` auto-creates a per-process
     /// directory under the system temp dir, removed when the store drops.
     pub spill_dir: Option<PathBuf>,
+    /// Collapse near-zero and bit-identical rows at fuse time behind a
+    /// `u32` row-index indirection (DESIGN.md §12).
+    pub dedup: bool,
+    /// Rows with every `|x| ≤ dedup_eps` snap to the shared zero row.
+    /// The default `0.0` collapses only exactly-zero rows, keeping the
+    /// dedup'd gather bit-exact; larger values are an explicit opt-in to
+    /// lossy snapping.
+    pub dedup_eps: f32,
 }
 
 impl Default for AdapterConfig {
     fn default() -> Self {
-        AdapterConfig { ram_budget_bytes: 0, dtype: AdapterDType::F32, spill_dir: None }
+        AdapterConfig {
+            ram_budget_bytes: 0,
+            dtype: AdapterDType::F32,
+            spill_dir: None,
+            dedup: false,
+            dedup_eps: 0.0,
+        }
     }
 }
 
@@ -140,6 +159,24 @@ pub struct AdapterStats {
     /// Prefetched tables evicted or retired before any resolve used
     /// them, plus prefetches cancelled by unregistration mid-queue.
     pub prefetch_wasted: usize,
+    /// Logical rows (layers × vocab) across all registered tables.
+    pub dedup_logical_rows: usize,
+    /// Rows physically stored across all registered tables (== logical
+    /// for dense tables; the pool sizes for dedup'd ones).
+    pub dedup_stored_rows: usize,
+    /// Logical rows served by the shared all-zero row.
+    pub dedup_zero_rows: usize,
+}
+
+impl AdapterStats {
+    /// Rows the store answers for per row it stores: `logical / stored`.
+    /// 1.0 for dense stores; ≥ 1 with dedup (DESIGN.md §12).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.dedup_stored_rows == 0 {
+            return 1.0;
+        }
+        self.dedup_logical_rows as f64 / self.dedup_stored_rows as f64
+    }
 }
 
 enum Tier {
@@ -202,6 +239,12 @@ pub struct Residency {
     prefetch_hits: AtomicUsize,
     prefetch_misses: AtomicUsize,
     prefetch_wasted: AtomicUsize,
+    /// Row-count gauges (added at insert, subtracted at retire).  A
+    /// table's `RowCounts` are identical on every tier of one version,
+    /// so spill/fault-in never touch these.
+    dedup_logical_rows: AtomicUsize,
+    dedup_stored_rows: AtomicUsize,
+    dedup_zero_rows: AtomicUsize,
 }
 
 /// The lazily-spawned background prefetch worker.  It holds only a
@@ -284,6 +327,9 @@ impl Residency {
             prefetch_hits: AtomicUsize::new(0),
             prefetch_misses: AtomicUsize::new(0),
             prefetch_wasted: AtomicUsize::new(0),
+            dedup_logical_rows: AtomicUsize::new(0),
+            dedup_stored_rows: AtomicUsize::new(0),
+            dedup_zero_rows: AtomicUsize::new(0),
         }
     }
 
@@ -291,7 +337,10 @@ impl Residency {
         &self.cfg
     }
 
-    /// Full resident footprint of one table at the configured dtype.
+    /// Dense-table resident footprint at the configured dtype — an
+    /// *estimate* for sizing/demo output only.  Budget accounting uses
+    /// each table's own `resident_bytes`/[`ColdTable::resident_cost`],
+    /// which are tier- and dedup-aware (int8 sidecars, index, pool).
     pub fn table_bytes(&self) -> usize {
         self.layers * self.vocab * self.d_model * self.cfg.dtype.size()
     }
@@ -335,6 +384,7 @@ impl Residency {
     /// in-flight snapshots of it finish unaffected.
     pub fn insert(&self, name: &str, table: Arc<dyn RowSource>) -> Result<()> {
         let need = table.resident_bytes();
+        let rows = table.row_stats();
         let generation = self.generation.fetch_add(1, Ordering::Relaxed);
         // Peek the entry being replaced: its resident bytes are about to
         // be freed by the retire below, so they are *discounted* from the
@@ -368,6 +418,9 @@ impl Residency {
             prefetched: AtomicBool::new(false),
             state: Mutex::new(tier),
         });
+        self.dedup_logical_rows.fetch_add(rows.logical, Ordering::Relaxed);
+        self.dedup_stored_rows.fetch_add(rows.stored, Ordering::Relaxed);
+        self.dedup_zero_rows.fetch_add(rows.zero_shared, Ordering::Relaxed);
         let old = self.entries.write().unwrap().insert(name.to_string(), entry);
         if let Some(old) = old {
             self.retire(&old);
@@ -400,19 +453,26 @@ impl Residency {
         if entry.prefetched.swap(false, Ordering::Relaxed) {
             self.prefetch_wasted.fetch_add(1, Ordering::Relaxed);
         }
-        match &*st {
+        // Row counts are identical on both tiers of one table version,
+        // so either source is correct to subtract from the gauges.
+        let rows = match &*st {
             Tier::Resident { table, spill } => {
                 self.resident_bytes.fetch_sub(table.resident_bytes(), Ordering::Relaxed);
                 self.resident_tasks.fetch_sub(1, Ordering::Relaxed);
                 if let Some(cold) = spill {
                     let _ = std::fs::remove_file(&cold.path);
                 }
+                table.row_stats()
             }
             Tier::Spilled { cold } => {
                 self.spilled_tasks.fetch_sub(1, Ordering::Relaxed);
                 let _ = std::fs::remove_file(&cold.path);
+                cold.row_stats()
             }
-        }
+        };
+        self.dedup_logical_rows.fetch_sub(rows.logical, Ordering::Relaxed);
+        self.dedup_stored_rows.fetch_sub(rows.stored, Ordering::Relaxed);
+        self.dedup_zero_rows.fetch_sub(rows.zero_shared, Ordering::Relaxed);
     }
 
     /// Pin (or unpin) a task: pinned tasks are never chosen for eviction.
@@ -449,7 +509,9 @@ impl Residency {
             }
             Tier::Spilled { cold } => Arc::clone(cold),
         };
-        let need = self.table_bytes();
+        // Per-table cost, not the dense estimate: a dedup'd or int8
+        // table faults back in at exactly this many resident bytes.
+        let need = cold.resident_cost();
         if self.try_reserve(need, 0, None) {
             let table = match cold.load_resident() {
                 Ok(table) => table,
@@ -555,7 +617,7 @@ impl Residency {
             Tier::Resident { .. } => return PrefetchOutcome::AlreadyWarm,
             Tier::Spilled { cold } => Arc::clone(cold),
         };
-        let need = self.table_bytes();
+        let need = cold.resident_cost();
         if !self.try_reserve(need, 0, None) {
             return PrefetchOutcome::Missed;
         }
@@ -683,18 +745,88 @@ impl Residency {
     }
 
     /// Write a table to its spill file and open the cold reader.
+    ///
+    /// The layout is tier-faithful (the faulted-in table is identical to
+    /// the one spilled): `p` is the dense `[l, V, d]` payload for dense
+    /// tables or the `[1, U, d]` unique-row pool for dedup'd ones, with
+    /// `p.index` (dedup) and `p.scale`/`p.zero` (int8) sidecar tensors
+    /// as the table requires.
     fn write_spill(&self, name: &str, generation: u64, table: &dyn RowSource) -> Result<Arc<ColdTable>> {
         let safe: String = name
             .chars()
             .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
             .collect();
         let path = self.spill_dir()?.join(format!("{safe}-{generation}.aotckpt"));
-        let shape = [self.layers, self.vocab, self.d_model];
-        ckpt::save_one_with(&path, SPILL_TENSOR, table.dtype().tensor_dtype(), &shape, &mut |w| {
-            table.spill_into(w)
-        })?;
+        let dtype = table.dtype();
+        let index = table.dedup_index();
+        let quant = table.quant_params();
+        let p_shape: Vec<usize> = match index {
+            // The pool: one pseudo-layer of U unique rows.
+            Some(_) => vec![1, table.row_stats().stored, self.d_model],
+            None => vec![self.layers, self.vocab, self.d_model],
+        };
+        let index_shape = [self.layers, self.vocab];
+        let quant_rows = [quant.map_or(0, |(s, _)| s.len())];
+        let mut p_payload = |w: &mut dyn std::io::Write| table.spill_into(w);
+        let mut index_payload = |w: &mut dyn std::io::Write| -> Result<()> {
+            for &ix in index.unwrap() {
+                w.write_all(&ix.to_le_bytes())?;
+            }
+            Ok(())
+        };
+        let mut scale_payload = |w: &mut dyn std::io::Write| -> Result<()> {
+            for &s in quant.unwrap().0 {
+                w.write_all(&s.to_le_bytes())?;
+            }
+            Ok(())
+        };
+        let mut zero_payload = |w: &mut dyn std::io::Write| -> Result<()> {
+            for &z in quant.unwrap().1 {
+                w.write_all(&z.to_le_bytes())?;
+            }
+            Ok(())
+        };
+        let mut parts: Vec<ckpt::TensorPart<'_>> = Vec::with_capacity(4);
+        parts.push(ckpt::TensorPart {
+            name: SPILL_TENSOR,
+            dtype: dtype.tensor_dtype(),
+            shape: &p_shape,
+            payload: &mut p_payload,
+        });
+        if index.is_some() {
+            parts.push(ckpt::TensorPart {
+                name: SPILL_INDEX,
+                // u32 bits stored under the i32 dtype code (same width;
+                // the reader reinterprets).
+                dtype: DType::I32,
+                shape: &index_shape,
+                payload: &mut index_payload,
+            });
+        }
+        if quant.is_some() {
+            parts.push(ckpt::TensorPart {
+                name: SPILL_SCALE,
+                dtype: DType::F32,
+                shape: &quant_rows,
+                payload: &mut scale_payload,
+            });
+            parts.push(ckpt::TensorPart {
+                name: SPILL_ZERO,
+                dtype: DType::F32,
+                shape: &quant_rows,
+                payload: &mut zero_payload,
+            });
+        }
+        ckpt::save_multi_with(&path, &mut parts)?;
         self.spill_writes.fetch_add(1, Ordering::Relaxed);
-        let cold = ColdTable::open(&path, self.layers, self.vocab, self.d_model, self.cfg.dtype)?;
+        let cold = ColdTable::open(
+            &path,
+            self.layers,
+            self.vocab,
+            self.d_model,
+            dtype,
+            index.is_some(),
+        )?;
         Ok(Arc::new(cold))
     }
 
@@ -737,6 +869,9 @@ impl Residency {
             prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
             prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
             prefetch_wasted: self.prefetch_wasted.load(Ordering::Relaxed),
+            dedup_logical_rows: self.dedup_logical_rows.load(Ordering::Relaxed),
+            dedup_stored_rows: self.dedup_stored_rows.load(Ordering::Relaxed),
+            dedup_zero_rows: self.dedup_zero_rows.load(Ordering::Relaxed),
         }
     }
 }
@@ -769,8 +904,15 @@ impl Drop for Residency {
 /// The disk tier: a spilled table served by positioned reads from its
 /// `.aotckpt` file.  Rows dequantize into the caller's buffer exactly
 /// like the resident tiers, so a cold gather is bit-identical to the
-/// resident result for f32 tables (and to the dequantized f16 result for
-/// f16 tables).
+/// resident result of the same storage dtype (exact for f32; the
+/// dequantized values for f16/int8).
+///
+/// The big `p` payload (codes/pool) stays on disk; the small sidecars —
+/// dedup index, int8 scale/zero — are kept resident at open, because a
+/// positioned read per row would need them anyway to find and decode the
+/// row.  `resident_bytes` still reports 0: sidecars are metadata
+/// overhead of the open file handle, not budget-managed table storage
+/// (see `resident_cost` for what a fault-in will charge).
 pub struct ColdTable {
     path: PathBuf,
     file: Mutex<File>,
@@ -779,26 +921,51 @@ pub struct ColdTable {
     vocab: usize,
     d_model: usize,
     dtype: AdapterDType,
+    /// Physically stored rows behind `data_offset` (`l·V` dense, the
+    /// pool's `U` for dedup'd tables).
+    stored_rows: usize,
+    /// Resident dedup indirection (`None` for dense tables).
+    index: Option<Vec<u32>>,
+    /// Logical rows mapped to the shared zero row.
+    zero_rows: usize,
+    /// Resident int8 per-row scale/zero (`None` for exact dtypes).
+    scale: Option<Vec<f32>>,
+    zero: Option<Vec<f32>>,
 }
 
 impl ColdTable {
     /// Open a spill file and validate its header against the store
-    /// geometry and dtype.
+    /// geometry, dtype and layout (`dedup` says whether a `p.index`
+    /// indirection is required).  Rejects stale files whose layout does
+    /// not match what the current configuration would have written.
     pub fn open(
         path: &Path,
         layers: usize,
         vocab: usize,
         d_model: usize,
         dtype: AdapterDType,
+        dedup: bool,
     ) -> Result<ColdTable> {
         let meta = ckpt::locate(path, SPILL_TENSOR)?;
-        if meta.shape != [layers, vocab, d_model] {
-            bail!(
-                "{}: spilled table shape {:?} != [{layers}, {vocab}, {d_model}]",
-                path.display(),
-                meta.shape
-            );
-        }
+        let stored_rows = if dedup {
+            if meta.shape.len() != 3 || meta.shape[0] != 1 || meta.shape[2] != d_model {
+                bail!(
+                    "{}: dedup pool shape {:?} is not [1, U, {d_model}]",
+                    path.display(),
+                    meta.shape
+                );
+            }
+            meta.shape[1]
+        } else {
+            if meta.shape != [layers, vocab, d_model] {
+                bail!(
+                    "{}: spilled table shape {:?} != [{layers}, {vocab}, {d_model}]",
+                    path.display(),
+                    meta.shape
+                );
+            }
+            layers * vocab
+        };
         let want: DType = dtype.tensor_dtype();
         if meta.dtype != want {
             bail!(
@@ -808,6 +975,46 @@ impl ColdTable {
                 want
             );
         }
+        let sidecar_f32 = |name: &str, want_len: usize| -> Result<Vec<f32>> {
+            let m = ckpt::locate(path, name)?;
+            if m.dtype != DType::F32 || m.data_len as usize != want_len * 4 {
+                bail!("{}: sidecar {name} has wrong dtype/length", path.display());
+            }
+            let mut raw = vec![0u8; m.data_len as usize];
+            read_exact_at_path(path, m.data_offset, &mut raw)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let (index, zero_rows) = if dedup {
+            let m = ckpt::locate(path, SPILL_INDEX)?;
+            let want_len = layers * vocab;
+            if m.dtype != DType::I32 || m.data_len as usize != want_len * 4 {
+                bail!("{}: dedup index has wrong dtype/length", path.display());
+            }
+            let mut raw = vec![0u8; m.data_len as usize];
+            read_exact_at_path(path, m.data_offset, &mut raw)?;
+            let index: Vec<u32> = raw
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            if let Some(&bad) = index.iter().find(|&&ix| ix as usize > stored_rows) {
+                bail!("{}: dedup index entry {bad} exceeds pool of {stored_rows}", path.display());
+            }
+            let zeros = index.iter().filter(|&&ix| ix == 0).count();
+            (Some(index), zeros)
+        } else {
+            (None, 0)
+        };
+        let (scale, zero) = if dtype == AdapterDType::I8 {
+            (
+                Some(sidecar_f32(SPILL_SCALE, stored_rows)?),
+                Some(sidecar_f32(SPILL_ZERO, stored_rows)?),
+            )
+        } else {
+            (None, None)
+        };
         let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
         Ok(ColdTable {
             path: path.to_path_buf(),
@@ -817,11 +1024,30 @@ impl ColdTable {
             vocab,
             d_model,
             dtype,
+            stored_rows,
+            index,
+            zero_rows,
+            scale,
+            zero,
         })
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// Exactly the `resident_bytes` the faulted-in table will report —
+    /// `resolve`/prefetch reserve this many budget bytes before loading,
+    /// so accounting cannot drift across spill/fault-in cycles.
+    pub fn resident_cost(&self) -> usize {
+        let mut cost = self.stored_rows * self.d_model * self.dtype.size();
+        if self.dtype == AdapterDType::I8 {
+            cost += self.stored_rows * 8; // f32 scale + zero per row
+        }
+        if let Some(ix) = &self.index {
+            cost += ix.len() * 4;
+        }
+        cost
     }
 
     fn read_at(&self, byte_offset: u64, buf: &mut [u8]) -> Result<()> {
@@ -841,33 +1067,107 @@ impl ColdTable {
         Ok(())
     }
 
-    /// Fault the whole table back into a resident source.
+    /// Decode one *stored* row (by physical index) into `out`.
+    fn read_stored_row(&self, stored: usize, out: &mut [f32]) -> Result<()> {
+        let d = self.d_model;
+        let esize = self.dtype.size();
+        let offset = (stored * d * esize) as u64;
+        // The cold path allocates a row-sized scratch read; only gathers
+        // that miss both RAM tiers pay this (the resident hot path stays
+        // allocation-free, DESIGN.md §9).
+        let mut raw = vec![0u8; d * esize];
+        self.read_at(offset, &mut raw)?;
+        match self.dtype {
+            AdapterDType::F32 => {
+                for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            AdapterDType::F16 => {
+                for (o, c) in out.iter_mut().zip(raw.chunks_exact(2)) {
+                    *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+                }
+            }
+            AdapterDType::I8 => {
+                let scale = self.scale.as_ref().expect("i8 cold table has scale")[stored];
+                let zero = self.zero.as_ref().expect("i8 cold table has zero")[stored];
+                for (o, &b) in out.iter_mut().zip(raw.iter()) {
+                    *o = scale * (b as i8 as f32) + zero;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fault the whole table back into a resident source of the same
+    /// tier shape (dense stays dense, dedup'd stays dedup'd).
     pub fn load_resident(&self) -> Result<Arc<dyn RowSource>> {
-        let elems = self.layers * self.vocab * self.d_model;
+        let elems = self.stored_rows * self.d_model;
         let mut raw = vec![0u8; elems * self.dtype.size()];
         self.read_at(0, &mut raw)?;
-        match self.dtype {
+        // The stored payload's geometry: the full table for dense spills,
+        // the `[1, U, d]` pool for dedup'd ones.
+        let (l, v) = match &self.index {
+            Some(_) => (1, self.stored_rows),
+            None => (self.layers, self.vocab),
+        };
+        let dense: Arc<dyn RowSource> = match self.dtype {
             AdapterDType::F32 => {
                 let data: Vec<f32> = raw
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect();
-                Ok(Arc::new(TaskP::new(self.layers, self.vocab, self.d_model, data)?))
+                Arc::new(TaskP::new(l, v, self.d_model, data)?)
             }
             AdapterDType::F16 => {
                 let data: Vec<u16> = raw
                     .chunks_exact(2)
                     .map(|c| u16::from_le_bytes([c[0], c[1]]))
                     .collect();
-                Ok(Arc::new(QuantizedTaskP::new(
-                    self.layers,
-                    self.vocab,
+                Arc::new(QuantizedTaskP::new(l, v, self.d_model, data)?)
+            }
+            AdapterDType::I8 => {
+                let data: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+                Arc::new(Int8TaskP::new(
+                    l,
+                    v,
                     self.d_model,
                     data,
-                )?))
+                    self.scale.clone().expect("i8 cold table has scale"),
+                    self.zero.clone().expect("i8 cold table has zero"),
+                )?)
             }
+        };
+        match &self.index {
+            Some(ix) => Ok(Arc::new(DedupTaskP::new(
+                self.layers,
+                self.vocab,
+                self.d_model,
+                ix.clone(),
+                dense,
+            )?)),
+            None => Ok(dense),
         }
     }
+}
+
+/// Positioned read during `ColdTable::open`, before the long-lived file
+/// handle exists.
+fn read_exact_at_path(path: &Path, offset: u64, buf: &mut [u8]) -> Result<()> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, offset)?;
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut file = file;
+        file.seek(SeekFrom::Start(offset))?;
+        file.read_exact(buf)?;
+    }
+    Ok(())
 }
 
 impl RowSource for ColdTable {
@@ -896,31 +1196,39 @@ impl RowSource for ColdTable {
     }
 
     fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()> {
-        let d = self.d_model;
-        let esize = self.dtype.size();
-        let offset = ((layer * self.vocab + token) * d * esize) as u64;
-        // The cold path allocates a row-sized scratch read; only gathers
-        // that miss both RAM tiers pay this (the resident hot path stays
-        // allocation-free, DESIGN.md §9).
-        let mut raw = vec![0u8; d * esize];
-        self.read_at(offset, &mut raw)?;
-        match self.dtype {
-            AdapterDType::F32 => {
-                for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
-                    *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        match &self.index {
+            Some(ix) => match ix[layer * self.vocab + token] {
+                0 => {
+                    out.fill(0.0);
+                    Ok(())
                 }
-            }
-            AdapterDType::F16 => {
-                for (o, c) in out.iter_mut().zip(raw.chunks_exact(2)) {
-                    *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
-                }
-            }
+                slot => self.read_stored_row((slot - 1) as usize, out),
+            },
+            None => self.read_stored_row(layer * self.vocab + token, out),
         }
-        Ok(())
     }
 
     fn spill_into(&self, _w: &mut dyn std::io::Write) -> Result<()> {
         bail!("disk-tier table is already spilled")
+    }
+
+    fn quant_params(&self) -> Option<(&[f32], &[f32])> {
+        match (&self.scale, &self.zero) {
+            (Some(s), Some(z)) => Some((s, z)),
+            _ => None,
+        }
+    }
+
+    fn dedup_index(&self) -> Option<&[u32]> {
+        self.index.as_deref()
+    }
+
+    fn row_stats(&self) -> RowCounts {
+        RowCounts {
+            logical: self.layers * self.vocab,
+            stored: self.stored_rows,
+            zero_shared: self.zero_rows,
+        }
     }
 }
 
@@ -1107,7 +1415,7 @@ mod tests {
         let cfg = AdapterConfig {
             ram_budget_bytes: bytes16,
             dtype: AdapterDType::F16,
-            spill_dir: None,
+            ..Default::default()
         };
         let r = Residency::new(l, v, d, cfg);
         let mut rng = Pcg64::new(8);
@@ -1253,6 +1561,149 @@ mod tests {
         assert_eq!(s.prefetch_wasted, 1, "{s:?}");
         assert_eq!(s.prefetch_hits, 0, "{s:?}");
         assert!(s.resident_bytes <= bytes);
+    }
+
+    /// Int8 tables must survive a spill/fault-in cycle *tier-faithfully*:
+    /// the `.aotckpt` stores the codes plus scale/zero sidecars, and both
+    /// the cold positioned reads and the faulted-in table dequantize
+    /// bit-identically to the original resident int8 tier.
+    #[test]
+    fn int8_spill_and_fault_in_are_tier_faithful() {
+        let (l, v, d) = (2, 12, 8);
+        let mut rng = Pcg64::new(31);
+        let p = TaskP::new(l, v, d, rng.normal_vec(l * v * d, 1.0)).unwrap();
+        let resident = Int8TaskP::from_taskp(&p);
+        let mut want = Vec::new();
+        for layer in 0..l {
+            for tok in 0..v {
+                want.push(row_of(&resident, layer, tok));
+            }
+        }
+        let bytes = resident.resident_bytes();
+        assert_eq!(bytes, l * v * d + l * v * 8);
+        let cfg = AdapterConfig {
+            ram_budget_bytes: bytes,
+            dtype: AdapterDType::I8,
+            ..Default::default()
+        };
+        let r = Residency::new(l, v, d, cfg);
+        r.insert("a", Arc::new(resident)).unwrap();
+        assert_eq!(r.resident_bytes(), bytes);
+        let q2 = Int8TaskP::from_taskp(&TaskP::new(l, v, d, rng.normal_vec(l * v * d, 1.0)).unwrap());
+        r.insert("b", Arc::new(q2)).unwrap(); // evicts "a" to disk
+        assert_eq!(r.stats().spilled_tasks, 1);
+        // Cold serve (pin "b" so "a" cannot fault in): positioned reads
+        // decode through the resident scale/zero sidecars, bit-exactly.
+        r.pin("b", true).unwrap();
+        let cold = r.resolve("a").unwrap();
+        assert_eq!(cold.tier(), "disk");
+        assert_eq!(cold.dtype(), AdapterDType::I8);
+        for layer in 0..l {
+            for tok in 0..v {
+                assert_eq!(row_of(cold.as_ref(), layer, tok), want[layer * v + tok], "cold l{layer} t{tok}");
+            }
+        }
+        // Fault-in: the reloaded table is the same tier at the same cost.
+        r.pin("b", false).unwrap();
+        let warm = r.resolve("a").unwrap();
+        assert_eq!(warm.tier(), "ram-int8");
+        for layer in 0..l {
+            for tok in 0..v {
+                assert_eq!(row_of(warm.as_ref(), layer, tok), want[layer * v + tok], "warm l{layer} t{tok}");
+            }
+        }
+        // `ColdTable::resident_cost` promised exactly the faulted-in
+        // footprint — accounting is exact, not estimated.
+        assert_eq!(warm.resident_bytes(), bytes);
+        assert_eq!(r.resident_bytes(), bytes);
+    }
+
+    /// A dedup'd table spills as pool + index (+ int8 sidecars) and
+    /// faults back in as the same dedup'd int8 tier: same row stats, same
+    /// bytes, bit-identical rows, and the gauges return to zero on remove.
+    #[test]
+    fn dedup_spill_and_fault_in_keep_index_and_pool() {
+        let (l, v, d) = (2, 16, 4);
+        // Tokens 0..8 fuse to zero in both layers; tokens 8 and 9 share
+        // one bit-identical row; the rest are distinct.
+        let mut data = vec![0f32; l * v * d];
+        for layer in 0..l {
+            for tok in 8..v {
+                let row = &mut data[(layer * v + tok) * d..(layer * v + tok + 1) * d];
+                let base = if tok < 10 { 1.0 } else { (layer * v + tok) as f32 };
+                for (k, x) in row.iter_mut().enumerate() {
+                    *x = base + k as f32;
+                }
+            }
+        }
+        let p = TaskP::new(l, v, d, data).unwrap();
+        let plan = crate::peft::fuse::dedup_rows(&p, 0.0);
+        let make = || {
+            Arc::new(DedupTaskP::from_plan(l, v, &plan, AdapterDType::I8).unwrap())
+                as Arc<dyn RowSource>
+        };
+        let table = make();
+        let mut want = Vec::new();
+        for layer in 0..l {
+            for tok in 0..v {
+                want.push(row_of(table.as_ref(), layer, tok));
+            }
+        }
+        let bytes = table.resident_bytes();
+        let counts = table.row_stats();
+        assert_eq!(counts.logical, l * v);
+        assert_eq!(counts.stored, plan.unique_rows());
+        assert_eq!(counts.zero_shared, plan.zero_rows);
+        let cfg = AdapterConfig {
+            ram_budget_bytes: bytes,
+            dtype: AdapterDType::I8,
+            dedup: true,
+            ..Default::default()
+        };
+        let r = Residency::new(l, v, d, cfg);
+        r.insert("a", table).unwrap();
+        let s = r.stats();
+        assert_eq!(s.resident_bytes, bytes);
+        assert_eq!(
+            (s.dedup_logical_rows, s.dedup_stored_rows, s.dedup_zero_rows),
+            (counts.logical, counts.stored, counts.zero_shared)
+        );
+        r.insert("b", make()).unwrap(); // evicts "a" to disk
+        assert_eq!(r.stats().spilled_tasks, 1);
+        // Row counts are tier-invariant: the spilled "a" still counts.
+        assert_eq!(r.stats().dedup_logical_rows, 2 * counts.logical);
+        // Cold serve goes through the resident index (zero rows never
+        // touch the file), bit-exactly.
+        r.pin("b", true).unwrap();
+        let cold = r.resolve("a").unwrap();
+        assert_eq!(cold.tier(), "disk");
+        assert_eq!(cold.row_stats(), counts);
+        for layer in 0..l {
+            for tok in 0..v {
+                assert_eq!(row_of(cold.as_ref(), layer, tok), want[layer * v + tok], "cold l{layer} t{tok}");
+            }
+        }
+        // Fault back in: same dedup'd int8 tier, exact same footprint.
+        r.pin("b", false).unwrap();
+        let warm = r.resolve("a").unwrap();
+        assert_eq!(warm.tier(), "ram-int8+dedup");
+        assert_eq!(warm.row_stats(), counts);
+        assert_eq!(warm.resident_bytes(), bytes);
+        for layer in 0..l {
+            for tok in 0..v {
+                assert_eq!(row_of(warm.as_ref(), layer, tok), want[layer * v + tok], "warm l{layer} t{tok}");
+            }
+        }
+        assert_eq!(r.resident_bytes(), bytes);
+        // Retiring both tasks returns every gauge exactly to zero.
+        r.remove("a").unwrap();
+        r.remove("b").unwrap();
+        let s = r.stats();
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(
+            (s.dedup_logical_rows, s.dedup_stored_rows, s.dedup_zero_rows),
+            (0, 0, 0)
+        );
     }
 
     #[test]

@@ -30,10 +30,25 @@ use super::pool::GatherPool;
 use super::quant::AdapterDType;
 use super::residency::{AdapterConfig, AdapterStats, Residency};
 
+/// Logical-vs-stored row counts of a source — the dedup observability
+/// that feeds `AdapterStats::dedup_ratio` (DESIGN.md §12).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RowCounts {
+    /// Rows the table answers for: `layers × vocab`, every tier.
+    pub logical: usize,
+    /// Rows physically stored (the dedup pool's `U`; == `logical` for
+    /// dense tables).
+    pub stored: usize,
+    /// Logical rows served by the shared all-zero row (stored nowhere).
+    pub zero_shared: usize,
+}
+
 /// One tier's view of a task table: "give me row (layer, token)".
 ///
 /// Implementations: [`TaskP`] (resident f32),
 /// [`super::quant::QuantizedTaskP`] (resident f16),
+/// [`super::quant::Int8TaskP`] (resident int8), [`DedupTaskP`] (a
+/// `u32` row-index indirection over any of those),
 /// [`super::residency::ColdTable`] (disk).  `copy_row` always produces
 /// f32 into the caller's (arena-owned) buffer, so the device-visible bias
 /// layout is identical across tiers.
@@ -43,7 +58,8 @@ pub trait RowSource: Send + Sync {
     fn d_model(&self) -> usize;
     /// Storage dtype of this source.
     fn dtype(&self) -> AdapterDType;
-    /// Tier label (`"ram-f32"`, `"ram-f16"`, `"disk"`) for tests/logs.
+    /// Tier label (`"ram-f32"`, `"ram-f16"`, `"ram-int8"`,
+    /// `"ram-*+dedup"`, `"disk"`) for tests/logs.
     fn tier(&self) -> &'static str;
     /// Host RAM pinned by this source (0 for disk-backed tables).
     fn resident_bytes(&self) -> usize;
@@ -53,6 +69,25 @@ pub trait RowSource: Send + Sync {
     /// Stream the raw table payload (little-endian, storage dtype) for
     /// spilling to disk.  Disk-backed sources decline.
     fn spill_into(&self, w: &mut dyn std::io::Write) -> Result<()>;
+    /// Per-stored-row `(scale, zero)` of an affine-quantized source
+    /// (the int8 tier); `None` for exact dtypes.  The spill path writes
+    /// these as f32 sidecar tensors.
+    fn quant_params(&self) -> Option<(&[f32], &[f32])> {
+        None
+    }
+    /// The `u32` row-index indirection of a dedup'd source (`0` = shared
+    /// zero row, `k` = stored row `k − 1`); `None` for dense tables.
+    fn dedup_index(&self) -> Option<&[u32]> {
+        None
+    }
+    /// Logical/stored/zero-shared row counts.  Dense default: every
+    /// logical row is stored.  Must be identical for every tier of the
+    /// same table version (residency accounting adds these at insert and
+    /// subtracts at retire, across spills and fault-ins).
+    fn row_stats(&self) -> RowCounts {
+        let logical = self.layers() * self.vocab();
+        RowCounts { logical, stored: logical, zero_shared: 0 }
+    }
 }
 
 /// L2 norms of every vocabulary row at `layer` — the §4.3 analysis
@@ -166,6 +201,146 @@ impl RowSource for TaskP {
     }
 }
 
+/// A dedup'd task table: a per-layer `u32` row-index indirection over a
+/// pool of unique rows (DESIGN.md §12).
+///
+/// `index[layer·V + token] == 0` is the all-zero row every task shares —
+/// `copy_row` fills zeros without touching storage (paper §4.3: most
+/// trained ‖P_x‖ are near zero, so most gathers land here).  Nonzero
+/// entries point into `rows`, an ordinary dense [`RowSource`] of
+/// geometry `[1, U, d]`, so dedup composes with every storage dtype
+/// (f32/f16/int8 pools).  Index and pool live behind one `Arc` snapshot:
+/// in-flight gathers can never see a new index over an old pool.
+pub struct DedupTaskP {
+    layers: usize,
+    vocab: usize,
+    d_model: usize,
+    index: Vec<u32>,
+    rows: Arc<dyn RowSource>,
+    zero_rows: usize,
+}
+
+impl DedupTaskP {
+    pub fn new(
+        layers: usize,
+        vocab: usize,
+        d_model: usize,
+        index: Vec<u32>,
+        rows: Arc<dyn RowSource>,
+    ) -> Result<DedupTaskP> {
+        if index.len() != layers * vocab {
+            bail!("DedupTaskP: index length {} != {layers}x{vocab}", index.len());
+        }
+        if (rows.layers(), rows.d_model()) != (1, d_model) {
+            bail!(
+                "DedupTaskP: pool geometry [{}, {}, {}] is not [1, U, {d_model}]",
+                rows.layers(),
+                rows.vocab(),
+                rows.d_model()
+            );
+        }
+        let pool_rows = rows.vocab() as u32;
+        if let Some(&bad) = index.iter().find(|&&ix| ix > pool_rows) {
+            bail!("DedupTaskP: index entry {bad} exceeds pool of {pool_rows} rows");
+        }
+        let zero_rows = index.iter().filter(|&&ix| ix == 0).count();
+        Ok(DedupTaskP { layers, vocab, d_model, index, rows, zero_rows })
+    }
+
+    /// Build from a fuse-time [`super::fuse::DedupPlan`], quantizing the
+    /// unique-row pool to the configured storage dtype.
+    pub fn from_plan(
+        layers: usize,
+        vocab: usize,
+        plan: &super::fuse::DedupPlan,
+        dtype: AdapterDType,
+    ) -> Result<DedupTaskP> {
+        let d = plan.d_model;
+        let unique = plan.unique_rows();
+        let rows: Arc<dyn RowSource> = match dtype {
+            AdapterDType::F32 => Arc::new(TaskP::new(1, unique, d, plan.unique.clone())?),
+            AdapterDType::F16 => Arc::new(super::quant::QuantizedTaskP::new(
+                1,
+                unique,
+                d,
+                super::quant::quantize(&plan.unique),
+            )?),
+            AdapterDType::I8 => {
+                Arc::new(super::quant::Int8TaskP::from_rows(1, unique, d, &plan.unique))
+            }
+        };
+        DedupTaskP::new(layers, vocab, d, plan.index.clone(), rows)
+    }
+
+    /// The unique-row pool (the residency layer streams it on spill).
+    pub fn rows(&self) -> &Arc<dyn RowSource> {
+        &self.rows
+    }
+}
+
+impl RowSource for DedupTaskP {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn dtype(&self) -> AdapterDType {
+        self.rows.dtype()
+    }
+
+    fn tier(&self) -> &'static str {
+        match self.rows.dtype() {
+            AdapterDType::F32 => "ram-f32+dedup",
+            AdapterDType::F16 => "ram-f16+dedup",
+            AdapterDType::I8 => "ram-int8+dedup",
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.index.len() * 4 + self.rows.resident_bytes()
+    }
+
+    #[inline]
+    fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()> {
+        match self.index[layer * self.vocab + token] {
+            0 => {
+                out.fill(0.0);
+                Ok(())
+            }
+            slot => self.rows.copy_row(0, (slot - 1) as usize, out),
+        }
+    }
+
+    fn spill_into(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        // The "p" tensor of a dedup'd spill is the pool; the index and
+        // any quant sidecars are separate tensors (residency::write_spill).
+        self.rows.spill_into(w)
+    }
+
+    fn quant_params(&self) -> Option<(&[f32], &[f32])> {
+        self.rows.quant_params()
+    }
+
+    fn dedup_index(&self) -> Option<&[u32]> {
+        Some(&self.index)
+    }
+
+    fn row_stats(&self) -> RowCounts {
+        RowCounts {
+            logical: self.layers * self.vocab,
+            stored: self.rows.vocab(),
+            zero_shared: self.zero_rows,
+        }
+    }
+}
+
 /// Minimum live elements per layer before the gather fans out to scoped
 /// threads (below this, spawn overhead rivals the copy itself).
 const PARALLEL_MIN_ELEMS: usize = 16 * 1024;
@@ -210,17 +385,24 @@ impl PStore {
     }
 
     /// Register (or hot-replace) a task's fused table.  The table is
-    /// quantized to the configured storage dtype here, at fuse time; a
-    /// table that cannot fit the RAM budget goes straight to the disk
-    /// tier.  In-flight gathers against a replaced table finish on their
-    /// snapshot.
+    /// dedup'd (when `--adapter-dedup` is on) and quantized to the
+    /// configured storage dtype here, at fuse time; a table that cannot
+    /// fit the RAM budget goes straight to the disk tier.  In-flight
+    /// gathers against a replaced table finish on their snapshot.
     pub fn insert(&self, task: &str, p: TaskP) -> Result<()> {
         if (p.layers, p.vocab, p.d_model) != (self.layers, self.vocab, self.d_model) {
             bail!("task {task}: table geometry mismatch");
         }
-        let table: Arc<dyn RowSource> = match self.residency.config().dtype {
-            AdapterDType::F32 => Arc::new(p),
-            AdapterDType::F16 => Arc::new(super::quant::QuantizedTaskP::from_taskp(&p)),
+        let cfg = self.residency.config();
+        let table: Arc<dyn RowSource> = if cfg.dedup {
+            let plan = super::fuse::dedup_rows(&p, cfg.dedup_eps);
+            Arc::new(DedupTaskP::from_plan(p.layers, p.vocab, &plan, cfg.dtype)?)
+        } else {
+            match cfg.dtype {
+                AdapterDType::F32 => Arc::new(p),
+                AdapterDType::F16 => Arc::new(super::quant::QuantizedTaskP::from_taskp(&p)),
+                AdapterDType::I8 => Arc::new(super::quant::Int8TaskP::from_taskp(&p)),
+            }
         };
         self.residency.insert(task, table)
     }
@@ -796,9 +978,125 @@ mod tests {
             ram_budget_bytes: parse_bytes("4KiB").unwrap(),
             dtype: AdapterDType::parse("f16").unwrap(),
             spill_dir: None,
+            dedup: true,
+            dedup_eps: 0.0,
         };
         let s = PStore::with_config(1, 8, 4, cfg);
         assert_eq!(s.config().ram_budget_bytes, 4096);
         assert_eq!(s.config().dtype, AdapterDType::F16);
+        assert!(s.config().dedup);
+    }
+
+    #[test]
+    fn int8_store_quarter_bytes_and_tolerance() {
+        // d = 128 so the 8 bytes/row of scale/zero stay under the 0.27×
+        // acceptance ratio: (128 + 8) / (4·128) = 0.2656.
+        let (l, v, d, n) = (2, 30, 128, 6);
+        let cfg = AdapterConfig { dtype: AdapterDType::I8, ..Default::default() };
+        let i8_store = PStore::with_config(l, v, d, cfg);
+        let f32_store = PStore::new(l, v, d);
+        let mut rng = Pcg64::new(23);
+        let data = rng.normal_vec(l * v * d, 1.0);
+        i8_store.insert("t", TaskP::new(l, v, d, data.clone()).unwrap()).unwrap();
+        f32_store.insert("t", TaskP::new(l, v, d, data).unwrap()).unwrap();
+        // Resident bytes via the stats gauge: ≤ 0.27× the f32 tier.
+        let (i8b, f32b) = (i8_store.stats().resident_bytes, f32_store.stats().resident_bytes);
+        assert_eq!(f32b, l * v * d * 4);
+        assert!(
+            (i8b as f64) <= 0.27 * f32b as f64,
+            "int8 resident {i8b} > 0.27 × f32 {f32b}"
+        );
+        assert_eq!(i8_store.get("t").unwrap().tier(), "ram-int8");
+        let ids: Vec<i32> = (0..n).map(|_| rng.range(0, v as i64) as i32).collect();
+        let a = i8_store.gather(&["t"], &ids, n).unwrap();
+        let b = f32_store.gather(&["t"], &ids, n).unwrap();
+        // Stated int8 tier bound for unit-normal fuses: 2e-2 absolute.
+        for (x, y) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+            assert!((x - y).abs() < 2e-2, "{x} vs {y}");
+        }
+    }
+
+    /// The dedup acceptance fixture: ≥50% near-zero rows must show a
+    /// dedup ratio ≥ 2× in the stats and gather bit-exactly like the
+    /// dense store of the same dtype.
+    #[test]
+    fn dedup_store_halves_rows_and_stays_bit_exact() {
+        let (l, v, d, n) = (2, 32, 16, 8);
+        let mut rng = Pcg64::new(24);
+        // 24 of 32 tokens fuse to exactly zero per layer (75% > 50%);
+        // tokens 0 and 1 share one bit-identical row in both layers.
+        let mut data = vec![0f32; l * v * d];
+        let shared = rng.normal_vec(d, 1.0);
+        for layer in 0..l {
+            for tok in 0..8 {
+                let row = &mut data[(layer * v + tok) * d..(layer * v + tok + 1) * d];
+                if tok < 2 {
+                    row.copy_from_slice(&shared);
+                } else {
+                    for (k, x) in row.iter_mut().enumerate() {
+                        *x = (layer * v + tok) as f32 + k as f32 * 0.5;
+                    }
+                }
+            }
+        }
+        for dtype in [AdapterDType::F32, AdapterDType::F16, AdapterDType::I8] {
+            let dense = PStore::with_config(
+                l,
+                v,
+                d,
+                AdapterConfig { dtype, ..Default::default() },
+            );
+            let dedup = PStore::with_config(
+                l,
+                v,
+                d,
+                AdapterConfig { dtype, dedup: true, ..Default::default() },
+            );
+            let p = TaskP::new(l, v, d, data.clone()).unwrap();
+            dense.insert("t", TaskP::new(l, v, d, data.clone()).unwrap()).unwrap();
+            dedup.insert("t", p).unwrap();
+            let stats = dedup.stats();
+            assert_eq!(stats.dedup_logical_rows, l * v);
+            assert!(
+                stats.dedup_ratio() >= 2.0,
+                "{dtype:?}: ratio {} (stored {})",
+                stats.dedup_ratio(),
+                stats.dedup_stored_rows
+            );
+            assert!(stats.dedup_zero_rows * 2 >= l * v, "{dtype:?}: {stats:?}");
+            // Dedup'd storage is smaller than dense even with the index.
+            assert!(
+                dedup.stats().resident_bytes < dense.stats().resident_bytes,
+                "{dtype:?}"
+            );
+            let table = dedup.get("t").unwrap();
+            assert!(table.tier().ends_with("+dedup"), "{}", table.tier());
+            assert!(table.dedup_index().is_some());
+            let ids: Vec<i32> = (0..n).map(|i| (i * 3 % v) as i32).collect();
+            let a = dedup.gather(&["t"], &ids, n).unwrap();
+            let b = dense.gather(&["t"], &ids, n).unwrap();
+            // Bit-exact vs the non-dedup'd store at the same dtype.
+            for (x, y) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{dtype:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn dedup_task_p_validates_geometry() {
+        let pool: Arc<dyn RowSource> = Arc::new(TaskP::new(1, 2, 4, vec![1.0; 8]).unwrap());
+        // Index shorter than layers×vocab.
+        assert!(DedupTaskP::new(1, 4, 4, vec![0, 1], Arc::clone(&pool)).is_err());
+        // Index entry beyond the pool.
+        assert!(DedupTaskP::new(1, 2, 4, vec![0, 3], Arc::clone(&pool)).is_err());
+        // Pool with the wrong d_model.
+        assert!(DedupTaskP::new(1, 2, 8, vec![0, 1], Arc::clone(&pool)).is_err());
+        let ok = DedupTaskP::new(1, 2, 4, vec![0, 2], pool).unwrap();
+        assert_eq!(ok.row_stats(), RowCounts { logical: 2, stored: 2, zero_shared: 1 });
+        let mut out = vec![9f32; 4];
+        ok.copy_row(0, 0, &mut out).unwrap();
+        assert_eq!(out, vec![0.0; 4]);
+        ok.copy_row(0, 1, &mut out).unwrap();
+        assert_eq!(out, vec![1.0; 4]);
     }
 }

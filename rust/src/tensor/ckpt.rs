@@ -130,6 +130,16 @@ pub fn locate(path: &Path, name: &str) -> Result<TensorEntryMeta> {
     bail!("{}: no tensor named {name}", path.display())
 }
 
+/// One tensor of a streamed multi-tensor write (`save_multi_with`).
+/// The payload callback must write exactly
+/// `shape.product() * dtype.size()` little-endian bytes.
+pub struct TensorPart<'a> {
+    pub name: &'a str,
+    pub dtype: DType,
+    pub shape: &'a [usize],
+    pub payload: &'a mut dyn FnMut(&mut dyn Write) -> Result<()>,
+}
+
 /// Write a single-tensor checkpoint, streaming the payload through
 /// `payload` instead of materializing a `Tensor` (the adapter store
 /// spills multi-megabyte tables this way without a second copy).  The
@@ -142,6 +152,14 @@ pub fn save_one_with(
     shape: &[usize],
     payload: &mut dyn FnMut(&mut dyn Write) -> Result<()>,
 ) -> Result<()> {
+    save_multi_with(path, &mut [TensorPart { name, dtype, shape, payload }])
+}
+
+/// Write a checkpoint of several streamed tensors in the order given
+/// (the int8/dedup adapter tiers spill a codes tensor plus small
+/// scale/zero/index sidecars this way).  Each part's written length is
+/// verified against its header entry.
+pub fn save_multi_with(path: &Path, parts: &mut [TensorPart<'_>]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -150,24 +168,27 @@ pub fn save_one_with(
     );
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&1u32.to_le_bytes())?;
-    let nb = name.as_bytes();
-    f.write_all(&(nb.len() as u16).to_le_bytes())?;
-    f.write_all(nb)?;
-    f.write_all(&[dtype.code(), shape.len() as u8])?;
-    for &d in shape {
-        f.write_all(&(d as u32).to_le_bytes())?;
-    }
-    let nbytes = (shape.iter().product::<usize>() * dtype.size()) as u64;
-    f.write_all(&nbytes.to_le_bytes())?;
-    let data_start = f.stream_position()?;
-    payload(&mut f)?;
-    let written = f.stream_position()? - data_start;
-    if written != nbytes {
-        bail!(
-            "{}: payload wrote {written} bytes, header declares {nbytes}",
-            path.display()
-        );
+    f.write_all(&(parts.len() as u32).to_le_bytes())?;
+    for part in parts {
+        let nb = part.name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[part.dtype.code(), part.shape.len() as u8])?;
+        for &d in part.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        let nbytes = (part.shape.iter().product::<usize>() * part.dtype.size()) as u64;
+        f.write_all(&nbytes.to_le_bytes())?;
+        let data_start = f.stream_position()?;
+        (part.payload)(&mut f)?;
+        let written = f.stream_position()? - data_start;
+        if written != nbytes {
+            bail!(
+                "{}: tensor {} payload wrote {written} bytes, header declares {nbytes}",
+                path.display(),
+                part.name
+            );
+        }
     }
     f.flush()?;
     Ok(())
@@ -283,5 +304,133 @@ mod tests {
         let path = dir.join("bad.aotckpt");
         std::fs::write(&path, b"NOPE....").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn i8_roundtrip_with_sidecars() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("i8.aotckpt");
+        let codes = vec![-128i8, -7, 0, 7, 127, 1];
+        let mut tensors = BTreeMap::new();
+        tensors.insert("p".to_string(), Tensor::from_i8(&[2, 3], codes.clone()));
+        tensors.insert("p.scale".to_string(), Tensor::from_f32(&[2], vec![0.5, 0.25]));
+        tensors.insert("p.zero".to_string(), Tensor::from_f32(&[2], vec![-1.0, 2.0]));
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back["p"].dtype, DType::I8);
+        assert_eq!(back["p"].shape, vec![2, 3]);
+        assert_eq!(back["p"].as_i8().unwrap(), &codes[..]);
+        assert_eq!(back["p.scale"].as_f32().unwrap(), &[0.5, 0.25]);
+        // locate() sees the i8 entry without a payload read too.
+        let meta = locate(&path, "p").unwrap();
+        assert_eq!(meta.dtype, DType::I8);
+        assert_eq!(meta.data_len, 6);
+    }
+
+    #[test]
+    fn save_multi_with_streams_every_part() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("multi.aotckpt");
+        let codes = [5i8, -5, 100];
+        let scales = [2.0f32];
+        save_multi_with(
+            &path,
+            &mut [
+                TensorPart {
+                    name: "p",
+                    dtype: DType::I8,
+                    shape: &[1, 3],
+                    payload: &mut |w| {
+                        w.write_all(&codes.map(|c| c as u8))?;
+                        Ok(())
+                    },
+                },
+                TensorPart {
+                    name: "p.scale",
+                    dtype: DType::F32,
+                    shape: &[1],
+                    payload: &mut |w| {
+                        for s in scales {
+                            w.write_all(&s.to_le_bytes())?;
+                        }
+                        Ok(())
+                    },
+                },
+            ],
+        )
+        .unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["p"].as_i8().unwrap(), &codes[..]);
+        assert_eq!(back["p.scale"].as_f32().unwrap(), &scales[..]);
+        // A part whose payload under-writes its header length is rejected.
+        let bad = dir.join("multi_bad.aotckpt");
+        let err = save_multi_with(
+            &bad,
+            &mut [TensorPart {
+                name: "p",
+                dtype: DType::I8,
+                shape: &[4],
+                payload: &mut |w| {
+                    w.write_all(&[0u8; 2])?;
+                    Ok(())
+                },
+            }],
+        );
+        assert!(err.is_err());
+    }
+
+    /// A file written by a build that predates a dtype code (or a corrupt
+    /// one) must be rejected on load and on locate, not misread.
+    #[test]
+    fn stale_dtype_code_is_rejected() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stale.aotckpt");
+        let mut tensors = BTreeMap::new();
+        tensors.insert("p".to_string(), Tensor::from_i8(&[4], vec![1, 2, 3, 4]));
+        save(&path, &tensors).unwrap();
+        let mut raw = std::fs::read(&path).unwrap();
+        // Header (12) + name len (2) + "p" (1) → dtype byte at offset 15.
+        assert_eq!(raw[15], DType::I8.code());
+        raw[15] = 9; // a code no version of the format has assigned
+        std::fs::write(&path, &raw).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("unknown dtype code 9"), "{err}");
+        assert!(locate(&path, "p").is_err());
+    }
+
+    /// The python writer (`python/compile/ckpt.py`) and `DType::code`
+    /// must agree on every dtype code — parsed from the python source so
+    /// drift fails the build's tests rather than corrupting checkpoints.
+    #[test]
+    fn python_dtype_code_parity() {
+        let py = crate::repo_root().join("python/compile/ckpt.py");
+        let src = std::fs::read_to_string(&py)
+            .unwrap_or_else(|e| panic!("read {}: {e}", py.display()));
+        let expected = [
+            ("float32", DType::F32),
+            ("int32", DType::I32),
+            ("int64", DType::I64),
+            ("float16", DType::F16),
+            ("int8", DType::I8),
+        ];
+        for (np_name, dt) in expected {
+            let entry = format!("np.dtype(np.{np_name}): {}", dt.code());
+            assert!(
+                src.contains(&entry),
+                "python _DTYPES missing or mismatched entry `{entry}`"
+            );
+            let inv = format!("{}: np.{np_name}", dt.code());
+            assert!(
+                src.contains(&inv),
+                "python _DTYPES_INV missing or mismatched entry `{inv}`"
+            );
+        }
+        // Same number of codes on both sides (count the map entries).
+        let count = src.matches("np.dtype(np.").count();
+        assert_eq!(count, expected.len(), "python _DTYPES has extra/missing dtypes");
     }
 }

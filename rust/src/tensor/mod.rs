@@ -10,13 +10,15 @@ use anyhow::{anyhow, bail};
 /// `F16` holds raw IEEE binary16 bits (`u16` storage); conversion math
 /// lives in `peft::quant`.  It exists for the adapter store's quantized
 /// and spilled tables (DESIGN.md §10) and round-trips through `.aotckpt`
-/// like every other dtype.
+/// like every other dtype.  `I8` carries the int8 adapter tier's
+/// quantized codes (per-row scale/zero live in sibling f32 tensors).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
     F32,
     I32,
     I64,
     F16,
+    I8,
 }
 
 impl DType {
@@ -25,6 +27,7 @@ impl DType {
             DType::F32 | DType::I32 => 4,
             DType::I64 => 8,
             DType::F16 => 2,
+            DType::I8 => 1,
         }
     }
 
@@ -34,6 +37,7 @@ impl DType {
             DType::I32 => 1,
             DType::I64 => 2,
             DType::F16 => 3,
+            DType::I8 => 4,
         }
     }
 
@@ -43,6 +47,7 @@ impl DType {
             1 => DType::I32,
             2 => DType::I64,
             3 => DType::F16,
+            4 => DType::I8,
             other => bail!("unknown dtype code {other}"),
         })
     }
@@ -53,6 +58,7 @@ impl DType {
             "i32" => DType::I32,
             "i64" => DType::I64,
             "f16" => DType::F16,
+            "i8" => DType::I8,
             other => bail!("unknown dtype name {other}"),
         })
     }
@@ -100,6 +106,14 @@ impl Tensor {
             data.extend_from_slice(&b.to_le_bytes());
         }
         Tensor { dtype: DType::F16, shape: shape.to_vec(), data }
+    }
+
+    /// Build an int8 tensor from quantized codes (see `peft::quant` for
+    /// the per-row affine scale/zero math).
+    pub fn from_i8(shape: &[usize], values: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len(), "shape/value mismatch");
+        let data = values.iter().map(|v| *v as u8).collect();
+        Tensor { dtype: DType::I8, shape: shape.to_vec(), data }
     }
 
     pub fn scalar_f32(v: f32) -> Self {
@@ -160,6 +174,17 @@ impl Tensor {
             .chunks_exact(2)
             .map(|c| u16::from_le_bytes([c[0], c[1]]))
             .collect())
+    }
+
+    /// Quantized int8 codes of an i8 tensor (byte storage reinterpreted;
+    /// i8 and u8 share size and alignment so the view is always valid).
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        if self.dtype != DType::I8 {
+            bail!("tensor is {:?}, not i8", self.dtype);
+        }
+        Ok(unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const i8, self.len())
+        })
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
@@ -239,11 +264,26 @@ mod tests {
 
     #[test]
     fn dtype_codes_roundtrip() {
-        for dt in [DType::F32, DType::I32, DType::I64, DType::F16] {
+        for dt in [DType::F32, DType::I32, DType::I64, DType::F16, DType::I8] {
             assert_eq!(DType::from_code(dt.code()).unwrap(), dt);
         }
         assert_eq!(DType::from_name("f16").unwrap(), DType::F16);
         assert_eq!(DType::F16.size(), 2);
+        assert_eq!(DType::from_name("i8").unwrap(), DType::I8);
+        assert_eq!(DType::I8.code(), 4);
+        assert_eq!(DType::I8.size(), 1);
         assert!(DType::from_code(9).is_err());
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let vals = vec![-128i8, -1, 0, 1, 127, 42];
+        let t = Tensor::from_i8(&[2, 3], vals.clone());
+        assert_eq!(t.dtype, DType::I8);
+        assert_eq!(t.bytes().len(), 6);
+        assert_eq!(t.as_i8().unwrap(), &vals[..]);
+        assert!(t.as_f32().is_err());
+        assert!(Tensor::from_raw(DType::I8, vec![4], vec![0u8; 4]).is_ok());
+        assert!(Tensor::from_raw(DType::I8, vec![4], vec![0u8; 5]).is_err());
     }
 }
