@@ -247,6 +247,92 @@ fn main() {
          the tier ms columns; int8 max-abs-err asserted < 2e-2)"
     );
 
+    // ---- Part 2b: cold tier — mmap vs positioned reads (DESIGN.md §13) --
+    // One task spilled under a half-table budget, so every gather serves
+    // cold; the mapped and positioned legs run the identical workload and
+    // their outputs are asserted bit-identical.  No speed assertion: the
+    // page cache makes both legs fast and noisy on CI — the JSON rows are
+    // the deliverable.
+    {
+        let (l, d) = if test_mode { (2, 64) } else { (4, 128) };
+        let cold_vocab = if test_mode { 128 } else { 2048 };
+        let (b, n) = if test_mode { (2usize, 8usize) } else { (8, 64) };
+        let table_bytes = l * cold_vocab * d * 4;
+        let mut rng = Pcg64::new(3);
+        let data = rng.normal_vec(l * cold_vocab * d, 1.0);
+        let assignments: Vec<&str> = (0..b).map(|_| "t").collect();
+        let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, cold_vocab as i64) as i32).collect();
+        let modes: &[(&str, bool)] = &[("cold-mmap", true), ("cold-pread", false)];
+        let mut outs = Vec::new();
+        let mut timed = Vec::new();
+        for &(label, use_mmap) in modes {
+            let store = PStore::with_config(
+                l,
+                cold_vocab,
+                d,
+                AdapterConfig {
+                    ram_budget_bytes: table_bytes / 2,
+                    mmap: use_mmap,
+                    ..Default::default()
+                },
+            );
+            store.insert("t", TaskP::new(l, cold_vocab, d, data.clone()).unwrap()).unwrap();
+            let mut out = vec![0f32; l * b * n * d];
+            store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
+            outs.push(out);
+            let m = measure(&format!("cold/b{b}n{n}/{label}"), &cell_cfg, || {
+                let mut out = vec![0f32; l * b * n * d];
+                store.gather_batch(&assignments, &ids, n, b, threads, &mut out).unwrap();
+                std::hint::black_box(&out);
+            });
+            let stats = store.stats();
+            if use_mmap {
+                if stats.mmap_opens > 0 {
+                    assert!(stats.cold_rows_mapped > 0, "mapped leg never used the mapping");
+                    assert_eq!(stats.cold_rows_positioned, 0, "mapped leg fell back: {stats:?}");
+                } else {
+                    assert!(stats.mmap_fallbacks > 0, "mapping neither opened nor fell back");
+                }
+            } else {
+                assert_eq!(stats.mmap_opens, 0, "pread leg must not map: {stats:?}");
+                assert_eq!(stats.mmap_fallbacks, 0, "mmap off is not a fallback: {stats:?}");
+                assert!(stats.cold_rows_positioned > 0, "pread leg never read: {stats:?}");
+            }
+            timed.push((label, m, stats));
+        }
+        assert_eq!(
+            outs[0], outs[1],
+            "mapped and positioned cold gathers must be bit-identical"
+        );
+        let mut cold_rows = Vec::new();
+        for (label, m, stats) in &timed {
+            let mut case = m.to_json();
+            case.set("tier", Json::Str(label.to_string()));
+            case.set("ns_per_batch", Json::Num(m.mean_secs * 1e9));
+            case.set("ns_per_row", Json::Num(m.mean_secs * 1e9 / (l * b * n) as f64));
+            case.set("mmap_opens", Json::Num(stats.mmap_opens as f64));
+            case.set("mmap_fallbacks", Json::Num(stats.mmap_fallbacks as f64));
+            case.set("rows_mapped", Json::Num(stats.cold_rows_mapped as f64));
+            case.set("rows_positioned", Json::Num(stats.cold_rows_positioned as f64));
+            cases.push(case);
+            cold_rows.push(vec![
+                label.to_string(),
+                format!("{:.3}", m.mean_secs * 1e3),
+                format!("{:.0}", m.mean_secs * 1e9 / (l * b * n) as f64),
+                format!("{}", stats.cold_rows_mapped),
+                format!("{}", stats.cold_rows_positioned),
+            ]);
+        }
+        println!(
+            "{}",
+            render_table(
+                &["cold tier", "ms/batch", "ns/row", "rows mapped", "rows positioned"],
+                &cold_rows,
+            )
+        );
+        println!("(cold outputs asserted bit-identical between the mmap and pread legs)");
+    }
+
     // ---- Part 3: serial vs overlapped gather/execute (DESIGN.md §11) ----
     // A full Pipeline over the HostBackend: the serial path chains
     // `prepare` + `complete` on one thread (the gather+execute sum); the

@@ -205,7 +205,8 @@ impl MetricsSnapshot {
              gather={:.3}ms exec={:.3}ms gather_frac={:.1}% queue={} \
              arena_reuse={}/{} adapters={}r/{}s {:.1}MiB \
              hit={} fault={} cold={} evict={} prefetch={}h/{}m/{}w \
-             dedup={:.2}x zero_rows={}",
+             dedup={:.2}x zero_rows={} \
+             mmap={}o/{}f mapped={:.1}MiB cold_rows={}m/{}p",
             self.requests,
             self.batches,
             self.mean_batch_size,
@@ -229,6 +230,11 @@ impl MetricsSnapshot {
             self.adapter.prefetch_wasted,
             self.adapter.dedup_ratio(),
             self.adapter.dedup_zero_rows,
+            self.adapter.mmap_opens,
+            self.adapter.mmap_fallbacks,
+            self.adapter.mapped_bytes as f64 / (1024.0 * 1024.0),
+            self.adapter.cold_rows_mapped,
+            self.adapter.cold_rows_positioned,
         )
     }
 }
@@ -316,6 +322,11 @@ mod tests {
             dedup_logical_rows: 1000,
             dedup_stored_rows: 400,
             dedup_zero_rows: 550,
+            mmap_opens: 3,
+            mmap_fallbacks: 1,
+            mapped_bytes: 2 << 20,
+            cold_rows_mapped: 12,
+            cold_rows_positioned: 34,
         };
         m.set_adapter_counters(stats);
         let s = m.snapshot();
@@ -328,5 +339,8 @@ mod tests {
         assert!(r.contains("prefetch=4h/2m/1w"), "{r}");
         assert!(r.contains("dedup=2.50x"), "{r}");
         assert!(r.contains("zero_rows=550"), "{r}");
+        assert!(r.contains("mmap=3o/1f"), "{r}");
+        assert!(r.contains("mapped=2.0MiB"), "{r}");
+        assert!(r.contains("cold_rows=12m/34p"), "{r}");
     }
 }

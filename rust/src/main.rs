@@ -45,6 +45,11 @@ fn run(argv: &[String]) -> Result<()> {
     )
     .opt("adapter-dtype", Some("f32"), "adapter table storage dtype: f32|f16|int8")
     .opt("adapter-dedup", Some("off"), "fuse-time shared-row dedup: on|off")
+    .opt(
+        "adapter-mmap",
+        Some("auto"),
+        "mmap cold-tier spill files: on|off|auto (auto = on where supported)",
+    )
     .opt("gather-threads", Some("0"), "gather shard threads (0 = one per core)")
     .opt("prefetch", Some("on"), "gather-aware adapter prefetch: on|off")
     .opt("tasks", Some("8"), "task count (adapters demo)")
@@ -117,7 +122,8 @@ fn adapter_config_from_args(args: &Args) -> Result<AdapterConfig> {
         .get_via("adapter-dtype", AdapterDType::parse)
         .map_err(anyhow::Error::msg)?;
     let dedup = args.get_via("adapter-dedup", parse_switch).map_err(anyhow::Error::msg)?;
-    Ok(AdapterConfig { ram_budget_bytes, dtype, dedup, ..AdapterConfig::default() })
+    let mmap = args.get_via("adapter-mmap", parse_mmap_switch).map_err(anyhow::Error::msg)?;
+    Ok(AdapterConfig { ram_budget_bytes, dtype, dedup, mmap, ..AdapterConfig::default() })
 }
 
 /// Artifact-free demo of the tiered adapter store (DESIGN.md §10, §12):
@@ -215,6 +221,15 @@ fn run_adapters_demo(args: &Args, cfg: AdapterConfig) -> Result<()> {
         a.prefetch_misses,
         a.prefetch_wasted,
     );
+    println!(
+        "cold tier: {} mmap opens / {} fallbacks, {:.1} MiB mapped, \
+         rows served {} mapped / {} positioned",
+        a.mmap_opens,
+        a.mmap_fallbacks,
+        a.mapped_bytes as f64 / (1 << 20) as f64,
+        a.cold_rows_mapped,
+        a.cold_rows_positioned,
+    );
     if dedup {
         println!(
             "dedup: {:.2}x ({} logical rows -> {} stored, {} shared-zero)",
@@ -226,6 +241,16 @@ fn run_adapters_demo(args: &Args, cfg: AdapterConfig) -> Result<()> {
     }
     coordinator.shutdown();
     Ok(())
+}
+
+/// Parse `--adapter-mmap`: a plain on/off switch plus `auto`, which
+/// defers to [`aotpt::peft::default_mmap`] (on, unless the
+/// `AOTPT_ADAPTER_MMAP` environment variable disables it).
+fn parse_mmap_switch(s: &str) -> Result<bool> {
+    if s.trim().eq_ignore_ascii_case("auto") {
+        return Ok(aotpt::peft::default_mmap());
+    }
+    parse_switch(s)
 }
 
 /// Parse an on/off CLI switch.

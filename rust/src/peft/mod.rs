@@ -10,8 +10,9 @@
 //! * `quant` — the f16 and int8 storage tiers (fused-time quantization,
 //!   on-gather dequant into the arena buffers; DESIGN.md §10).
 //! * `residency` — the disk tier and hot task lifecycle: RAM budget, LRU
-//!   spill to `.aotckpt`, on-demand fault-in, pinning, and
-//!   register/replace/unregister on `&self` while serving.
+//!   spill to `.aotckpt`, mmap-backed cold serving with positioned-read
+//!   fallback (`--adapter-mmap`; DESIGN.md §13), on-demand fault-in,
+//!   pinning, and register/replace/unregister on `&self` while serving.
 //! * `fuse` — host-side implementations of the FC/Kronecker fuse math,
 //!   cross-checked against the `fuse_*` HLO artifacts in tests; also the
 //!   fuse-time shared-row dedup pass behind `--adapter-dedup`
@@ -31,7 +32,9 @@ pub mod store;
 pub use arena::GatherArena;
 pub use pool::GatherPool;
 pub use quant::{AdapterDType, Int8TaskP, QuantizedTaskP};
-pub use residency::{parse_bytes, AdapterConfig, AdapterStats, ColdTable};
+pub use residency::{
+    default_mmap, parse_bytes, AdapterConfig, AdapterStats, ColdCounters, ColdTable,
+};
 pub use store::{row_norms, DedupTaskP, PStore, RowCounts, RowSource, TaskP};
 
 /// Every fine-tuning method of the paper (Table 1).

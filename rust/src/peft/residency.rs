@@ -7,8 +7,11 @@
 //! * **resident** — the table lives in host RAM (f32 or f16 per
 //!   `AdapterConfig::dtype`) and gathers copy rows straight out of it;
 //! * **spilled** — the table lives in a `.aotckpt` file; a [`ColdTable`]
-//!   keeps the file open and serves rows by positioned reads, and the
-//!   next resolve *faults the table back in* if the RAM budget allows.
+//!   keeps the file open — and, with `--adapter-mmap on` (the default
+//!   where supported), memory-mapped — serving rows straight from the
+//!   page cache, or by positioned reads as the fallback; the next
+//!   resolve *faults the table back in* if the RAM budget allows
+//!   (DESIGN.md §13).
 //!
 //! Mutability rules (the lifecycle invariants the concurrency tests
 //! assert):
@@ -44,6 +47,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, bail, Context};
 
 use crate::tensor::{ckpt, DType};
+use crate::util::mmap::Mmap;
 use crate::Result;
 
 use super::quant::{f16_bits_to_f32, AdapterDType, Int8TaskP, QuantizedTaskP};
@@ -77,6 +81,11 @@ pub struct AdapterConfig {
     /// dedup'd gather bit-exact; larger values are an explicit opt-in to
     /// lossy snapping.
     pub dedup_eps: f32,
+    /// Serve the disk tier from a read-only `mmap` of each spill file
+    /// (CLI `--adapter-mmap`; DESIGN.md §13).  Where the mapping shim is
+    /// unavailable or the syscall fails, the cold tier falls back to
+    /// positioned reads and counts the fallback.
+    pub mmap: bool,
 }
 
 impl Default for AdapterConfig {
@@ -87,7 +96,22 @@ impl Default for AdapterConfig {
             spill_dir: None,
             dedup: false,
             dedup_eps: 0.0,
+            mmap: default_mmap(),
         }
+    }
+}
+
+/// Default for [`AdapterConfig::mmap`] (CLI `--adapter-mmap auto`): on,
+/// unless the `AOTPT_ADAPTER_MMAP` environment variable says `off` (or
+/// `0`/`false`/`no`).  The env override is how CI runs the whole test
+/// suite as an mmap on/off matrix without touching every constructor.
+pub fn default_mmap() -> bool {
+    match std::env::var("AOTPT_ADAPTER_MMAP") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "off" | "0" | "false" | "no"
+        ),
+        Err(_) => true,
     }
 }
 
@@ -166,6 +190,20 @@ pub struct AdapterStats {
     pub dedup_stored_rows: usize,
     /// Logical rows served by the shared all-zero row.
     pub dedup_zero_rows: usize,
+    /// Spill files successfully memory-mapped at `ColdTable::open`.
+    pub mmap_opens: usize,
+    /// Requested mappings that fell back to positioned reads (shim
+    /// unavailable on this platform, or the syscall failed).
+    pub mmap_fallbacks: usize,
+    /// Bytes currently memory-mapped (a gauge, not a counter).  Mapped
+    /// pages are page-cache-owned and charged ~0 against the RAM budget;
+    /// the gauge settles to zero once the last reference to every cold
+    /// table — store entry or in-flight gather snapshot — drops.
+    pub mapped_bytes: usize,
+    /// Cold rows decoded straight out of a mapping.
+    pub cold_rows_mapped: usize,
+    /// Cold rows served by positioned reads.
+    pub cold_rows_positioned: usize,
 }
 
 impl AdapterStats {
@@ -177,6 +215,27 @@ impl AdapterStats {
         }
         self.dedup_logical_rows as f64 / self.dedup_stored_rows as f64
     }
+}
+
+/// Cold-tier mmap counters, shared (`Arc`) between the residency
+/// manager and every [`ColdTable`] it opens.  Sharing — instead of
+/// folding these into the manager's own atomics — keeps the
+/// `mapped_bytes` gauge honest for tables that outlive their store
+/// entry inside in-flight gather snapshots: the decrement runs in
+/// `ColdTable::drop`, i.e. exactly when the last reference unmaps.
+#[derive(Debug, Default)]
+pub struct ColdCounters {
+    /// Spill files successfully mapped at open.
+    pub mmap_opens: AtomicUsize,
+    /// Requested mappings that fell back to positioned reads.
+    pub mmap_fallbacks: AtomicUsize,
+    /// Bytes currently mapped (gauge: added at open, subtracted on the
+    /// owning table's last drop).
+    pub mapped_bytes: AtomicUsize,
+    /// Cold rows decoded straight out of a mapping.
+    pub rows_mapped: AtomicUsize,
+    /// Cold rows served by positioned reads.
+    pub rows_positioned: AtomicUsize,
 }
 
 enum Tier {
@@ -245,6 +304,9 @@ pub struct Residency {
     dedup_logical_rows: AtomicUsize,
     dedup_stored_rows: AtomicUsize,
     dedup_zero_rows: AtomicUsize,
+    /// Shared with every [`ColdTable`] this store opens (see
+    /// [`ColdCounters`] for why the gauge lives outside the manager).
+    cold_counters: Arc<ColdCounters>,
 }
 
 /// The lazily-spawned background prefetch worker.  It holds only a
@@ -330,6 +392,7 @@ impl Residency {
             dedup_logical_rows: AtomicUsize::new(0),
             dedup_stored_rows: AtomicUsize::new(0),
             dedup_zero_rows: AtomicUsize::new(0),
+            cold_counters: Arc::new(ColdCounters::default()),
         }
     }
 
@@ -826,6 +889,8 @@ impl Residency {
             self.d_model,
             dtype,
             index.is_some(),
+            self.cfg.mmap,
+            Arc::clone(&self.cold_counters),
         )?;
         Ok(Arc::new(cold))
     }
@@ -872,6 +937,11 @@ impl Residency {
             dedup_logical_rows: self.dedup_logical_rows.load(Ordering::Relaxed),
             dedup_stored_rows: self.dedup_stored_rows.load(Ordering::Relaxed),
             dedup_zero_rows: self.dedup_zero_rows.load(Ordering::Relaxed),
+            mmap_opens: self.cold_counters.mmap_opens.load(Ordering::Relaxed),
+            mmap_fallbacks: self.cold_counters.mmap_fallbacks.load(Ordering::Relaxed),
+            mapped_bytes: self.cold_counters.mapped_bytes.load(Ordering::Relaxed),
+            cold_rows_mapped: self.cold_counters.rows_mapped.load(Ordering::Relaxed),
+            cold_rows_positioned: self.cold_counters.rows_positioned.load(Ordering::Relaxed),
         }
     }
 }
@@ -901,21 +971,33 @@ impl Drop for Residency {
     }
 }
 
-/// The disk tier: a spilled table served by positioned reads from its
-/// `.aotckpt` file.  Rows dequantize into the caller's buffer exactly
-/// like the resident tiers, so a cold gather is bit-identical to the
+/// The disk tier: a spilled table served from its `.aotckpt` file —
+/// preferably through a read-only mmap established once at open
+/// (DESIGN.md §13), falling back to positioned reads where mapping is
+/// unavailable.  Rows dequantize into the caller's buffer exactly like
+/// the resident tiers, so a cold gather is bit-identical to the
 /// resident result of the same storage dtype (exact for f32; the
-/// dequantized values for f16/int8).
+/// dequantized values for f16/int8), and bit-identical between the
+/// mapped and positioned paths (they share one decoder).
 ///
 /// The big `p` payload (codes/pool) stays on disk; the small sidecars —
 /// dedup index, int8 scale/zero — are kept resident at open, because a
 /// positioned read per row would need them anyway to find and decode the
 /// row.  `resident_bytes` still reports 0: sidecars are metadata
-/// overhead of the open file handle, not budget-managed table storage
-/// (see `resident_cost` for what a fault-in will charge).
+/// overhead of the open file handle, and mapped pages are owned by the
+/// page cache — neither is budget-managed table storage (see
+/// `resident_cost` for what a fault-in will charge).
 pub struct ColdTable {
     path: PathBuf,
     file: Mutex<File>,
+    /// Whole-file read-only mapping; `None` in positioned-read mode.
+    /// Snapshot-safe by construction: in-flight gathers hold the
+    /// `Arc<ColdTable>`, so `munmap` runs only when the last reference
+    /// drops, after unregister/evict.
+    map: Option<Mmap>,
+    /// Shared cold-tier counters; the `mapped_bytes` gauge is
+    /// decremented in this table's `Drop`.
+    counters: Arc<ColdCounters>,
     data_offset: u64,
     layers: usize,
     vocab: usize,
@@ -938,6 +1020,12 @@ impl ColdTable {
     /// geometry, dtype and layout (`dedup` says whether a `p.index`
     /// indirection is required).  Rejects stale files whose layout does
     /// not match what the current configuration would have written.
+    ///
+    /// With `use_mmap` the whole file is mapped read-only once, here,
+    /// and rows are decoded straight from the mapping; a failed mapping
+    /// (unsupported platform, syscall error) is counted and degrades to
+    /// positioned reads — never an open failure.
+    #[allow(clippy::too_many_arguments)]
     pub fn open(
         path: &Path,
         layers: usize,
@@ -945,6 +1033,8 @@ impl ColdTable {
         d_model: usize,
         dtype: AdapterDType,
         dedup: bool,
+        use_mmap: bool,
+        counters: Arc<ColdCounters>,
     ) -> Result<ColdTable> {
         let meta = ckpt::locate(path, SPILL_TENSOR)?;
         let stored_rows = if dedup {
@@ -973,6 +1063,14 @@ impl ColdTable {
                 path.display(),
                 meta.dtype,
                 want
+            );
+        }
+        let payload_len = stored_rows * d_model * dtype.size();
+        if meta.data_len as usize != payload_len {
+            bail!(
+                "{}: spilled table payload is {} bytes, expected {payload_len}",
+                path.display(),
+                meta.data_len
             );
         }
         let sidecar_f32 = |name: &str, want_len: usize| -> Result<Vec<f32>> {
@@ -1016,9 +1114,44 @@ impl ColdTable {
             (None, None)
         };
         let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let map = if use_mmap {
+            match Mmap::map_file(&file) {
+                Ok(m) => {
+                    // `locate` already validated the payload extent
+                    // against the file length, but the file could have
+                    // been truncated between that read and the mapping —
+                    // and a mapped load past EOF is SIGBUS, not an error.
+                    // Re-check against the mapping itself.
+                    if meta.data_offset + payload_len as u64 > m.len() as u64 {
+                        bail!(
+                            "{}: mapping of {} bytes ends before the payload at [{}, {}) (truncated)",
+                            path.display(),
+                            m.len(),
+                            meta.data_offset,
+                            meta.data_offset + payload_len as u64
+                        );
+                    }
+                    counters.mmap_opens.fetch_add(1, Ordering::Relaxed);
+                    counters.mapped_bytes.fetch_add(m.len(), Ordering::Relaxed);
+                    Some(m)
+                }
+                Err(e) => {
+                    counters.mmap_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    crate::warnln!(
+                        "mmap of {} unavailable ({e:#}); serving cold rows by positioned reads",
+                        path.display()
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
         Ok(ColdTable {
             path: path.to_path_buf(),
             file: Mutex::new(file),
+            map,
+            counters,
             data_offset: meta.data_offset,
             layers,
             vocab,
@@ -1052,19 +1185,8 @@ impl ColdTable {
 
     fn read_at(&self, byte_offset: u64, buf: &mut [u8]) -> Result<()> {
         let file = self.file.lock().unwrap();
-        #[cfg(unix)]
-        {
-            use std::os::unix::fs::FileExt;
-            file.read_exact_at(buf, self.data_offset + byte_offset)?;
-        }
-        #[cfg(not(unix))]
-        {
-            use std::io::{Read, Seek, SeekFrom};
-            let mut file = file;
-            file.seek(SeekFrom::Start(self.data_offset + byte_offset))?;
-            file.read_exact(buf)?;
-        }
-        Ok(())
+        read_full_at(&*file, self.data_offset + byte_offset, buf)
+            .with_context(|| format!("read {}", self.path.display()))
     }
 
     /// Decode one *stored* row (by physical index) into `out`.
@@ -1072,11 +1194,26 @@ impl ColdTable {
         let d = self.d_model;
         let esize = self.dtype.size();
         let offset = (stored * d * esize) as u64;
-        // The cold path allocates a row-sized scratch read; only gathers
-        // that miss both RAM tiers pay this (the resident hot path stays
-        // allocation-free, DESIGN.md §9).
+        if let Some(map) = &self.map {
+            // Mapped cold serve: dequantize straight out of the page
+            // cache — no read syscall, no scratch copy (DESIGN.md §13).
+            let raw = map.slice(self.data_offset + offset, d * esize)?;
+            self.counters.rows_mapped.fetch_add(1, Ordering::Relaxed);
+            return self.decode_row(stored, raw, out);
+        }
+        // The positioned-read path allocates a row-sized scratch read;
+        // only gathers that miss both RAM tiers and the mapping pay this
+        // (the resident hot path stays allocation-free, DESIGN.md §9).
         let mut raw = vec![0u8; d * esize];
         self.read_at(offset, &mut raw)?;
+        self.counters.rows_positioned.fetch_add(1, Ordering::Relaxed);
+        self.decode_row(stored, &raw, out)
+    }
+
+    /// Dequantize one stored row's raw bytes into `out` — shared by the
+    /// mapped and positioned cold paths, so the two are bit-identical by
+    /// construction.
+    fn decode_row(&self, stored: usize, raw: &[u8], out: &mut [f32]) -> Result<()> {
         match self.dtype {
             AdapterDType::F32 => {
                 for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
@@ -1100,11 +1237,20 @@ impl ColdTable {
     }
 
     /// Fault the whole table back into a resident source of the same
-    /// tier shape (dense stays dense, dedup'd stays dedup'd).
+    /// tier shape (dense stays dense, dedup'd stays dedup'd).  The
+    /// faulted-in copy is *real* RAM (charged against the budget), so
+    /// the payload is copied out of the mapping — or read — either way.
     pub fn load_resident(&self) -> Result<Arc<dyn RowSource>> {
         let elems = self.stored_rows * self.d_model;
-        let mut raw = vec![0u8; elems * self.dtype.size()];
-        self.read_at(0, &mut raw)?;
+        let nbytes = elems * self.dtype.size();
+        let raw: Vec<u8> = match &self.map {
+            Some(map) => map.slice(self.data_offset, nbytes)?.to_vec(),
+            None => {
+                let mut raw = vec![0u8; nbytes];
+                self.read_at(0, &mut raw)?;
+                raw
+            }
+        };
         // The stored payload's geometry: the full table for dense spills,
         // the `[1, U, d]` pool for dedup'd ones.
         let (l, v) = match &self.index {
@@ -1151,23 +1297,76 @@ impl ColdTable {
     }
 }
 
+impl Drop for ColdTable {
+    fn drop(&mut self) {
+        // The mapped-bytes gauge comes down only here — on the *last*
+        // reference — so it correctly includes mappings kept alive by
+        // in-flight gather snapshots after unregister/evict, and settles
+        // to zero exactly when the last such snapshot drops.
+        if let Some(m) = &self.map {
+            self.counters.mapped_bytes.fetch_sub(m.len(), Ordering::Relaxed);
+        }
+    }
+}
+
+/// One positioned-read attempt, syscall-shaped: it may return fewer
+/// bytes than asked (a short read) or fail with `EINTR`.  The retry
+/// loop lives in [`read_full_at`]; tests drive it through a pipe-like
+/// shim that doles bytes out a few at a time and injects interruptions.
+pub(crate) trait ReadAt {
+    fn read_at_offset(&self, buf: &mut [u8], offset: u64) -> std::io::Result<usize>;
+}
+
+impl ReadAt for File {
+    fn read_at_offset(&self, buf: &mut [u8], offset: u64) -> std::io::Result<usize> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.read_at(buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut f = self;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read(buf)
+        }
+    }
+}
+
+/// Fill `buf` from `offset`, retrying short reads and `EINTR` instead
+/// of erroring on partial reads (a pipe- or network-backed spill store
+/// legally returns them).  Running out of data mid-range is a typed
+/// error — a truncated spill file fails the affected request, it never
+/// panics.
+pub(crate) fn read_full_at<R: ReadAt + ?Sized>(
+    src: &R,
+    mut offset: u64,
+    mut buf: &mut [u8],
+) -> Result<()> {
+    while !buf.is_empty() {
+        match src.read_at_offset(buf, offset) {
+            Ok(0) => bail!(
+                "unexpected end of file at offset {offset} ({} bytes missing)",
+                buf.len()
+            ),
+            Ok(n) => {
+                let rest = buf;
+                buf = &mut rest[n..];
+                offset += n as u64;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
 /// Positioned read during `ColdTable::open`, before the long-lived file
 /// handle exists.
 fn read_exact_at_path(path: &Path, offset: u64, buf: &mut [u8]) -> Result<()> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
-    #[cfg(unix)]
-    {
-        use std::os::unix::fs::FileExt;
-        file.read_exact_at(buf, offset)?;
-    }
-    #[cfg(not(unix))]
-    {
-        use std::io::{Read, Seek, SeekFrom};
-        let mut file = file;
-        file.seek(SeekFrom::Start(offset))?;
-        file.read_exact(buf)?;
-    }
-    Ok(())
+    read_full_at(&file, offset, buf).with_context(|| format!("read {}", path.display()))
 }
 
 impl RowSource for ColdTable {
@@ -1704,6 +1903,105 @@ mod tests {
             (s.dedup_logical_rows, s.dedup_stored_rows, s.dedup_zero_rows),
             (0, 0, 0)
         );
+    }
+
+    /// Satellite regression: positioned cold reads must survive a reader
+    /// that returns partial reads and `EINTR` (pipe semantics) instead of
+    /// erroring, and must report running out of data as a typed error.
+    #[test]
+    fn read_full_at_retries_short_reads_and_interrupts() {
+        /// A pipe-backed reader shim: at most `chunk` bytes per call,
+        /// with an injected `EINTR` before every other attempt.
+        struct PipeReader {
+            data: Vec<u8>,
+            chunk: usize,
+            calls: AtomicUsize,
+        }
+        impl ReadAt for PipeReader {
+            fn read_at_offset(&self, buf: &mut [u8], offset: u64) -> std::io::Result<usize> {
+                if self.calls.fetch_add(1, Ordering::Relaxed) % 2 == 0 {
+                    return Err(std::io::Error::from(std::io::ErrorKind::Interrupted));
+                }
+                let off = offset as usize;
+                if off >= self.data.len() {
+                    return Ok(0);
+                }
+                let n = buf.len().min(self.chunk).min(self.data.len() - off);
+                buf[..n].copy_from_slice(&self.data[off..off + n]);
+                Ok(n)
+            }
+        }
+
+        let data: Vec<u8> = (0..100u8).collect();
+        let pipe = PipeReader { data: data.clone(), chunk: 7, calls: AtomicUsize::new(0) };
+        let mut buf = vec![0u8; 100];
+        read_full_at(&pipe, 0, &mut buf).unwrap();
+        assert_eq!(buf, data);
+        // An offset read stitches the same bytes together.
+        let mut mid = vec![0u8; 20];
+        read_full_at(&pipe, 40, &mut mid).unwrap();
+        assert_eq!(mid, data[40..60]);
+        // Running out of data mid-range is a typed error, not a panic or
+        // a hang.
+        let mut over = vec![0u8; 10];
+        let err = read_full_at(&pipe, 95, &mut over).unwrap_err();
+        assert!(err.to_string().contains("unexpected end of file"), "{err}");
+    }
+
+    #[test]
+    fn mmap_off_serves_cold_by_positioned_reads_only() {
+        let (l, v, d) = (1, 16, 4);
+        let bytes = l * v * d * 4;
+        let cfg = AdapterConfig {
+            ram_budget_bytes: bytes / 2,
+            mmap: false,
+            ..Default::default()
+        };
+        let r = Residency::new(l, v, d, cfg);
+        r.insert("x", constant_table(1.0, l, v, d)).unwrap();
+        let src = r.resolve("x").unwrap();
+        assert_eq!(src.tier(), "disk");
+        assert_eq!(row_of(src.as_ref(), 0, 3), vec![1.0; d]);
+        let s = r.stats();
+        assert_eq!(s.mmap_opens, 0, "{s:?}");
+        assert_eq!(s.mmap_fallbacks, 0, "mmap off is not a fallback: {s:?}");
+        assert_eq!(s.mapped_bytes, 0, "{s:?}");
+        assert_eq!(s.cold_rows_mapped, 0, "{s:?}");
+        assert_eq!(s.cold_rows_positioned, 1, "{s:?}");
+    }
+
+    #[test]
+    fn mmap_on_maps_spill_and_gauge_settles_on_last_drop() {
+        let (l, v, d) = (1, 16, 4);
+        let bytes = l * v * d * 4;
+        let cfg = AdapterConfig {
+            ram_budget_bytes: bytes / 2,
+            mmap: true,
+            ..Default::default()
+        };
+        let r = Residency::new(l, v, d, cfg);
+        r.insert("x", constant_table(2.0, l, v, d)).unwrap();
+        let src = r.resolve("x").unwrap();
+        assert_eq!(src.tier(), "disk");
+        assert_eq!(row_of(src.as_ref(), 0, 5), vec![2.0; d]);
+        let s = r.stats();
+        if !Mmap::supported() {
+            // No shim on this platform: the open degraded gracefully.
+            assert_eq!(s.mmap_fallbacks, 1, "{s:?}");
+            assert_eq!(s.cold_rows_positioned, 1, "{s:?}");
+            return;
+        }
+        assert_eq!(s.mmap_opens, 1, "{s:?}");
+        assert!(s.mapped_bytes > 0, "{s:?}");
+        assert_eq!(s.cold_rows_mapped, 1, "{s:?}");
+        assert_eq!(s.cold_rows_positioned, 0, "{s:?}");
+        // The snapshot keeps the mapping alive across unregister...
+        r.remove("x").unwrap();
+        assert!(r.stats().mapped_bytes > 0, "mapping dropped under a live snapshot");
+        assert_eq!(row_of(src.as_ref(), 0, 7), vec![2.0; d]);
+        // ...and the gauge settles to zero on the last drop.
+        drop(src);
+        assert_eq!(r.stats().mapped_bytes, 0);
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //! f32 `Vec` — it speaks to every tier through [`RowSource`], so tables
 //! may live in RAM as f32 ([`TaskP`]), in RAM as f16
 //! ([`super::quant::QuantizedTaskP`]), or on disk
-//! ([`super::residency::ColdTable`]), moving between tiers under an LRU
-//! RAM budget while the pipeline is serving.  All lifecycle operations
+//! ([`super::residency::ColdTable`] — mmap-backed where supported, with a
+//! positioned-read fallback; DESIGN.md §13), moving between tiers under
+//! an LRU RAM budget while the pipeline is serving.  All lifecycle operations
 //! (`insert`/`remove`/`pin`) take `&self`; in-flight gathers hold `Arc`
 //! snapshots, so eviction and unregistration never corrupt a running
 //! batch.
@@ -980,6 +981,7 @@ mod tests {
             spill_dir: None,
             dedup: true,
             dedup_eps: 0.0,
+            mmap: true,
         };
         let s = PStore::with_config(1, 8, 4, cfg);
         assert_eq!(s.config().ram_budget_bytes, 4096);

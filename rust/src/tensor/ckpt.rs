@@ -79,8 +79,9 @@ pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
 }
 
 /// Where one tensor's payload lives inside a checkpoint file — the
-/// adapter disk tier (`peft::residency::ColdTable`) reads rows by
-/// positioned I/O at `data_offset` without loading the table.
+/// adapter disk tier (`peft::residency::ColdTable`) serves rows from an
+/// mmap slice, or by positioned I/O, at `data_offset` without loading
+/// the table.
 #[derive(Clone, Debug)]
 pub struct TensorEntryMeta {
     pub dtype: DType,
@@ -91,10 +92,14 @@ pub struct TensorEntryMeta {
 }
 
 /// Find `name` in a checkpoint without reading any tensor payload.
+///
+/// The located payload extent is validated against the file's length, so
+/// a truncated file is a typed error here — before anyone maps it and
+/// faults, or positioned-reads into EOF halfway through a gather.
 pub fn locate(path: &Path, name: &str) -> Result<TensorEntryMeta> {
-    let mut f = BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
-    );
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    let mut f = BufReader::new(file);
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -122,6 +127,13 @@ pub fn locate(path: &Path, name: &str) -> Result<TensorEntryMeta> {
         let data_len = read_u64(&mut f)?;
         offset += 2 + name_len as u64 + 2 + 4 * ndim as u64 + 8;
         if entry_name == name {
+            if offset + data_len > file_len {
+                bail!(
+                    "{}: tensor {name} payload [{offset}, {}) runs past the {file_len}-byte file (truncated?)",
+                    path.display(),
+                    offset + data_len
+                );
+            }
             return Ok(TensorEntryMeta { dtype, shape, data_offset: offset, data_len });
         }
         f.seek_relative(data_len as i64)?;
@@ -400,6 +412,23 @@ mod tests {
         let err = load(&path).unwrap_err();
         assert!(err.to_string().contains("unknown dtype code 9"), "{err}");
         assert!(locate(&path, "p").is_err());
+    }
+
+    /// A truncated checkpoint must fail `locate` with a typed error —
+    /// the mmap cold path relies on this extent check to never map (and
+    /// later SIGBUS on) a payload the file does not actually contain.
+    #[test]
+    fn locate_rejects_truncated_payload() {
+        let dir = std::env::temp_dir().join("aotpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.aotckpt");
+        let mut tensors = BTreeMap::new();
+        tensors.insert("p".to_string(), Tensor::from_f32(&[4], vec![1.0, 2.0, 3.0, 4.0]));
+        save(&path, &tensors).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let err = locate(&path, "p").unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
     }
 
     /// The python writer (`python/compile/ckpt.py`) and `DType::code`

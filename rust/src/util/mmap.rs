@@ -1,0 +1,213 @@
+//! Vendored read-only memory mapping — a minimal `extern "C"` shim over
+//! `mmap`/`munmap` (std already links libc on unix; no external crate).
+//!
+//! The adapter disk tier maps each spill file once at open and serves
+//! cold gathers straight from the mapping, so the OS page cache — not
+//! the store's LRU — owns cold-row residency (DESIGN.md §13).  Scope is
+//! deliberately tiny: whole-file, read-only, `MAP_PRIVATE` mappings with
+//! length-checked slices.  On platforms without the shim, or when the
+//! syscall fails, [`Mmap::map_file`] returns an error and callers fall
+//! back to positioned reads.
+
+use std::fs::File;
+
+use anyhow::bail;
+
+use crate::Result;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    /// `MAP_FAILED` is `(void *) -1`, not null.
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    // The `off_t` offset is declared `i64`: correct on every 64-bit unix
+    // (where `mmap` and `mmap64` coincide); 32-bit targets are cfg'd out
+    // above rather than risking an off_t ABI mismatch.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A whole-file, read-only, private mapping, unmapped on drop.
+///
+/// The pages are immutable for the mapping's lifetime as far as safe
+/// code can tell — but truncating the *file* underneath a live mapping
+/// turns loads past the new EOF into `SIGBUS` on every unix, which is
+/// why the adapter cold tier validates the payload extent against the
+/// file length before trusting a mapping (`peft::residency`).
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+// Safety: the mapping is read-only and uniquely owned.  Shared
+// references only ever hand out `&[u8]`, and the pages stay valid until
+// `Drop` (which needs `&mut self`, so no borrow can outlive them).
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Whether this build can map files at all.  The shim is declared
+    /// for 64-bit unix; everywhere else `map_file` always errors.
+    pub fn supported() -> bool {
+        cfg!(all(unix, target_pointer_width = "64"))
+    }
+
+    /// Map `file` read-only in its entirety (its length at call time).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn map_file(file: &File) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            // mmap(len = 0) is EINVAL; an empty file needs no pages.
+            return Ok(Mmap { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| anyhow::anyhow!("file of {len} bytes is too large to map"))?;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED || ptr.is_null() {
+            bail!("mmap of {len} bytes failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr: ptr as *const u8, len })
+    }
+
+    /// Unsupported platform: always an error; callers fall back to
+    /// positioned reads.
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn map_file(_file: &File) -> Result<Mmap> {
+        bail!("memory mapping is not supported on this platform")
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The whole mapping as a byte slice.
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // Safety: `ptr` is a live PROT_READ mapping of exactly `len`
+        // bytes for as long as `self` is borrowed.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// A length-checked window: a typed error — never a fault — when the
+    /// requested range runs past the mapping.
+    pub fn slice(&self, offset: u64, len: usize) -> Result<&[u8]> {
+        let end = offset
+            .checked_add(len as u64)
+            .ok_or_else(|| anyhow::anyhow!("mmap slice range overflows"))?;
+        if end > self.len as u64 {
+            bail!(
+                "mmap slice [{offset}, {end}) exceeds mapping of {} bytes",
+                self.len
+            );
+        }
+        let offset = offset as usize;
+        Ok(&self.as_slice()[offset..offset + len])
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len > 0 {
+            // Safety: `ptr`/`len` are exactly what mmap returned, and
+            // `Mmap` is not `Clone`, so this is the only unmap.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::path::PathBuf;
+
+    fn tmp_file(name: &str, data: &[u8]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("aotpt-mmap-tests-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(data).unwrap();
+        path
+    }
+
+    #[test]
+    fn mmap_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Mmap>();
+    }
+
+    #[test]
+    fn maps_whole_file_and_length_checks_slices() {
+        if !Mmap::supported() {
+            return;
+        }
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let path = tmp_file("roundtrip.bin", &data);
+        let map = Mmap::map_file(&File::open(&path).unwrap()).unwrap();
+        assert_eq!(map.len(), data.len());
+        assert_eq!(map.as_slice(), &data[..]);
+        assert_eq!(map.slice(100, 50).unwrap(), &data[100..150]);
+        assert_eq!(map.slice(data.len() as u64, 0).unwrap(), &[] as &[u8]);
+        // Past-the-end windows are typed errors, not faults.
+        let err = map.slice(996, 8).unwrap_err();
+        assert!(err.to_string().contains("exceeds mapping"), "{err}");
+        assert!(map.slice(u64::MAX, 2).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_maps_as_empty() {
+        if !Mmap::supported() {
+            return;
+        }
+        let path = tmp_file("empty.bin", &[]);
+        let map = Mmap::map_file(&File::open(&path).unwrap()).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.as_slice(), &[] as &[u8]);
+        assert_eq!(map.slice(0, 0).unwrap(), &[] as &[u8]);
+        assert!(map.slice(0, 1).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unsupported_platform_reports_error() {
+        if Mmap::supported() {
+            return;
+        }
+        let path = tmp_file("unsupported.bin", &[1, 2, 3]);
+        assert!(Mmap::map_file(&File::open(&path).unwrap()).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

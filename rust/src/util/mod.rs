@@ -1,11 +1,13 @@
 //! Small in-tree substrates (no external crates are available offline):
-//! RNG, statistics, thread pool, logging, wall-clock timing.
+//! RNG, statistics, thread pool, logging, wall-clock timing, mmap.
 
 pub mod log;
+pub mod mmap;
 pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use mmap::Mmap;
 pub use rng::Pcg64;
 pub use timer::Timer;

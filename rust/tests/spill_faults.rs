@@ -1,0 +1,424 @@
+//! Spill-file fault injection for the cold tier (DESIGN.md §13).
+//!
+//! The disk tier's contract under corruption: every fault — truncation
+//! before or after open, a bit-flipped dtype code, short or missing
+//! sidecar tensors, an out-of-range dedup index — is a **typed error**
+//! that fails only the affected task; the store never panics, other
+//! tasks keep serving, and the residency accounting stays exact.  Every
+//! fault case runs in both `--adapter-mmap` modes (except
+//! truncation-after-open, which is positioned-read-only: poking a live
+//! mapping past EOF is SIGBUS territory, which is exactly why
+//! `ColdTable::open` validates the payload extent against the mapping
+//! up front).
+//!
+//! The suite ends with the acceptance parity property: mapped and
+//! positioned cold serving are bit-identical across f32/f16/int8 and
+//! dedup'd tables, including the `load_resident` fault-in path.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use aotpt::peft::{
+    AdapterConfig, AdapterDType, ColdCounters, ColdTable, PStore, RowSource, TaskP,
+};
+use aotpt::tensor::{ckpt, DType, Tensor};
+use aotpt::util::Pcg64;
+
+const L: usize = 2;
+const V: usize = 16;
+const D: usize = 4;
+
+/// A fresh per-test scratch directory under the system temp dir.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let name = format!("aotpt-spill-faults-{tag}-{}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Build a store whose single task "t" is guaranteed to live on the disk
+/// tier: a 1-byte RAM budget spills every insert (0 would mean
+/// *unlimited*), with the spill file landing in `dir`.
+fn spilled_store(dir: &Path, cfg0: AdapterConfig, data: Vec<f32>) -> PStore {
+    let cfg = AdapterConfig {
+        ram_budget_bytes: 1,
+        spill_dir: Some(dir.to_path_buf()),
+        ..cfg0
+    };
+    let store = PStore::with_config(L, V, D, cfg);
+    store.insert("t", TaskP::new(L, V, D, data).unwrap()).unwrap();
+    store
+}
+
+/// The single spill file inside `dir`.
+fn spill_file(dir: &Path) -> PathBuf {
+    let mut files: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "aotckpt"))
+        .collect();
+    assert_eq!(files.len(), 1, "expected one spill file in {}", dir.display());
+    files.pop().unwrap()
+}
+
+/// The spill file of `task` inside `dir` (name prefix `{task}-`).
+fn spill_file_for(dir: &Path, task: &str) -> PathBuf {
+    let prefix = format!("{task}-");
+    let mut files: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name()
+                .is_some_and(|n| n.to_string_lossy().starts_with(&prefix))
+        })
+        .collect();
+    assert_eq!(files.len(), 1, "expected one spill file for {task}");
+    files.pop().unwrap()
+}
+
+fn all_rows(src: &dyn RowSource) -> Vec<Vec<f32>> {
+    let mut rows = Vec::with_capacity(L * V);
+    for layer in 0..L {
+        for tok in 0..V {
+            let mut out = vec![0f32; D];
+            src.copy_row(layer, tok, &mut out).unwrap();
+            rows.push(out);
+        }
+    }
+    rows
+}
+
+/// A file truncated before open is rejected by `ckpt::locate`'s extent
+/// check — in both mmap modes, before anything is mapped.
+#[test]
+fn truncated_spill_file_is_rejected_at_open() {
+    let dir = tmp_dir("trunc-open");
+    let mut rng = Pcg64::new(11);
+    let data = rng.normal_vec(L * V * D, 1.0);
+    let _store = spilled_store(
+        &dir,
+        AdapterConfig { mmap: false, ..Default::default() },
+        data,
+    );
+    let raw = fs::read(spill_file(&dir)).unwrap();
+    let cut = dir.join("cut.aotckpt");
+    fs::write(&cut, &raw[..raw.len() / 2]).unwrap();
+    for use_mmap in [false, true] {
+        let counters = Arc::new(ColdCounters::default());
+        let err = ColdTable::open(
+            &cut,
+            L,
+            V,
+            D,
+            AdapterDType::F32,
+            false,
+            use_mmap,
+            Arc::clone(&counters),
+        )
+        .err()
+        .expect("truncated spill file must fail to open");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated"), "mmap={use_mmap}: {msg}");
+        assert_eq!(counters.mapped_bytes.load(Ordering::Relaxed), 0);
+    }
+}
+
+/// Truncation *after* open (positioned-read mode — a live mapping would
+/// SIGBUS instead of erroring, which is why the mapped path re-validates
+/// extents at open): reads past the cut fail with a typed error, reads
+/// before it keep serving, other tasks are untouched, and a failed
+/// fault-in rolls its budget reservation back to the byte.
+#[test]
+fn truncation_after_open_fails_only_that_task_and_keeps_accounting() {
+    let dir = tmp_dir("trunc-live");
+    let table_bytes = L * V * D * 4;
+    let cfg = AdapterConfig {
+        ram_budget_bytes: table_bytes,
+        spill_dir: Some(dir.clone()),
+        mmap: false,
+        ..Default::default()
+    };
+    let store = PStore::with_config(L, V, D, cfg);
+    store.insert("ok", TaskP::new(L, V, D, vec![1.0; L * V * D]).unwrap()).unwrap();
+    store.pin("ok", true).unwrap();
+    // "ok" is pinned and fills the budget, so "bad" spills itself.
+    store.insert("bad", TaskP::new(L, V, D, vec![2.0; L * V * D]).unwrap()).unwrap();
+    let bad_file = spill_file_for(&dir, "bad");
+    let raw = fs::read(&bad_file).unwrap();
+    fs::write(&bad_file, &raw[..raw.len() / 2]).unwrap();
+
+    let src = store.get("bad").unwrap();
+    assert_eq!(src.tier(), "disk");
+    let before = store.stats();
+    let mut row = vec![0f32; D];
+    let err = src.copy_row(L - 1, V - 1, &mut row).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unexpected end of file"),
+        "{err:#}"
+    );
+    // Rows before the cut still decode...
+    src.copy_row(0, 0, &mut row).unwrap();
+    assert_eq!(row, vec![2.0; D]);
+    // ...and the failed read changed no accounting.
+    let after = store.stats();
+    assert_eq!(after.resident_bytes, before.resident_bytes);
+    assert_eq!(after.resident_tasks, before.resident_tasks);
+    assert_eq!(after.spilled_tasks, before.spilled_tasks);
+    // The healthy task is untouched.
+    store.get("ok").unwrap().copy_row(0, 0, &mut row).unwrap();
+    assert_eq!(row, vec![1.0; D]);
+
+    // Unpin "ok" so resolving "bad" attempts a full fault-in: the load
+    // hits the cut and the budget reservation must roll back exactly.
+    store.pin("ok", false).unwrap();
+    let err = store.get("bad").err().expect("fault-in of a truncated file must fail");
+    assert!(
+        format!("{err:#}").contains("unexpected end of file"),
+        "{err:#}"
+    );
+    let stats = store.stats();
+    assert_eq!(stats.resident_bytes, 0, "leaked reservation: {stats:?}");
+    assert_eq!(stats.resident_tasks, 0, "{stats:?}");
+    assert_eq!(stats.spilled_tasks, 2, "{stats:?}");
+    // "ok" (evicted to make room for the failed fault-in) comes back.
+    let ok = store.get("ok").unwrap();
+    ok.copy_row(L - 1, 0, &mut row).unwrap();
+    assert_eq!(row, vec![1.0; D]);
+}
+
+/// A bit-flipped dtype code byte — an unknown code or a valid-but-wrong
+/// one — is rejected at open in both mmap modes.
+#[test]
+fn bit_flipped_dtype_code_is_rejected() {
+    let dir = tmp_dir("dtype-flip");
+    let mut rng = Pcg64::new(13);
+    let data = rng.normal_vec(L * V * D, 1.0);
+    let _store = spilled_store(
+        &dir,
+        AdapterConfig { mmap: false, ..Default::default() },
+        data,
+    );
+    let raw = fs::read(spill_file(&dir)).unwrap();
+    // The first tensor is "p": its dtype code byte sits at absolute
+    // offset 15 (12-byte header + name_len u16 + 1-byte name).
+    assert_eq!(raw[15], DType::F32.code(), "spill layout changed under the test");
+    for (code, needle) in [(9u8, "unknown dtype code"), (DType::F16.code(), "dtype")] {
+        let mut flipped = raw.clone();
+        flipped[15] = code;
+        let path = dir.join(format!("flipped-{code}.aotckpt"));
+        fs::write(&path, &flipped).unwrap();
+        for use_mmap in [false, true] {
+            let err = ColdTable::open(
+                &path,
+                L,
+                V,
+                D,
+                AdapterDType::F32,
+                false,
+                use_mmap,
+                Arc::new(ColdCounters::default()),
+            )
+            .err()
+            .expect("flipped dtype code must fail to open");
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "code {code}, mmap={use_mmap}: {msg}");
+        }
+    }
+}
+
+/// Sidecar faults on an int8+dedup spill: missing `p.index`, missing or
+/// short `p.scale`/`p.zero`, and an out-of-range index entry are all
+/// typed open errors in both mmap modes.
+#[test]
+fn short_or_missing_sidecars_are_rejected() {
+    let dir = tmp_dir("sidecars");
+    let u = 3usize; // stored pool rows
+    let idx: Vec<i32> = (0..L * V).map(|i| (i % (u + 1)) as i32).collect();
+    let pool = || Tensor::from_i8(&[1, u, D], vec![7i8; u * D]);
+    let index = || Tensor::from_i32(&[L, V], idx.clone());
+    let scale = |len: usize| Tensor::from_f32(&[len], vec![0.5; len]);
+
+    let write = |name: &str, tensors: Vec<(&str, Tensor)>| -> PathBuf {
+        let path = dir.join(format!("{name}.aotckpt"));
+        let map: std::collections::BTreeMap<String, Tensor> =
+            tensors.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        ckpt::save(&path, &map).unwrap();
+        path
+    };
+
+    let mut bad_index = idx.clone();
+    bad_index[5] = (u + 1) as i32; // points past the pool
+    let cases = [
+        (
+            write("no-index", vec![("p", pool()), ("p.scale", scale(u)), ("p.zero", scale(u))]),
+            "p.index",
+        ),
+        (
+            write("no-scale", vec![("p", pool()), ("p.index", index()), ("p.zero", scale(u))]),
+            "p.scale",
+        ),
+        (
+            write("no-zero", vec![("p", pool()), ("p.index", index()), ("p.scale", scale(u))]),
+            "p.zero",
+        ),
+        (
+            write(
+                "short-scale",
+                vec![
+                    ("p", pool()),
+                    ("p.index", index()),
+                    ("p.scale", scale(u - 1)),
+                    ("p.zero", scale(u)),
+                ],
+            ),
+            "wrong dtype/length",
+        ),
+        (
+            write(
+                "short-zero",
+                vec![
+                    ("p", pool()),
+                    ("p.index", index()),
+                    ("p.scale", scale(u)),
+                    ("p.zero", scale(u - 1)),
+                ],
+            ),
+            "wrong dtype/length",
+        ),
+        (
+            write(
+                "bad-index",
+                vec![
+                    ("p", pool()),
+                    ("p.index", Tensor::from_i32(&[L, V], bad_index)),
+                    ("p.scale", scale(u)),
+                    ("p.zero", scale(u)),
+                ],
+            ),
+            "exceeds pool",
+        ),
+    ];
+    for (path, needle) in &cases {
+        for use_mmap in [false, true] {
+            let err = ColdTable::open(
+                path,
+                L,
+                V,
+                D,
+                AdapterDType::I8,
+                true,
+                use_mmap,
+                Arc::new(ColdCounters::default()),
+            )
+            .err()
+            .expect("sidecar fault must fail to open");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains(needle),
+                "{}: mmap={use_mmap}: wanted {needle:?} in {msg}",
+                path.display()
+            );
+        }
+    }
+}
+
+/// Unlink-while-open (unix): deleting the spill file after the cold
+/// table opened it keeps serving through the live inode — for both the
+/// mapping and the positioned-read descriptor.
+#[cfg(unix)]
+#[test]
+fn file_deleted_after_open_keeps_serving() {
+    for use_mmap in [false, true] {
+        let dir = tmp_dir(&format!("unlink-{use_mmap}"));
+        let mut rng = Pcg64::new(17);
+        let data = rng.normal_vec(L * V * D, 1.0);
+        let reference = TaskP::new(L, V, D, data.clone()).unwrap();
+        let store = spilled_store(
+            &dir,
+            AdapterConfig { mmap: use_mmap, ..Default::default() },
+            data,
+        );
+        let src = store.get("t").unwrap();
+        assert_eq!(src.tier(), "disk");
+        fs::remove_file(spill_file(&dir)).unwrap();
+        for layer in 0..L {
+            for tok in 0..V {
+                let mut out = vec![0f32; D];
+                src.copy_row(layer, tok, &mut out).unwrap();
+                assert_eq!(out.as_slice(), reference.row(layer, tok), "mmap={use_mmap}");
+            }
+        }
+        assert_eq!(store.stats().spilled_tasks, 1);
+    }
+}
+
+/// The acceptance parity property: mapped and positioned cold serving
+/// are bit-identical for every storage dtype, dense and dedup'd — both
+/// row by row through the store and for the `load_resident` fault-in
+/// path — and the mapped-bytes gauge settles to zero when the tables
+/// drop.
+#[test]
+fn mapped_vs_positioned_cold_parity_across_tiers() {
+    for dtype in [AdapterDType::F32, AdapterDType::F16, AdapterDType::I8] {
+        for dedup in [false, true] {
+            let tag = format!("parity-{}-{dedup}", dtype.name());
+            let mut rng = Pcg64::new(19);
+            let mut data = rng.normal_vec(L * V * D, 1.0);
+            if dedup {
+                // Shared rows for the dedup pass to collapse.
+                for row in (0..L * V).step_by(3) {
+                    data[row * D..(row + 1) * D].fill(0.0);
+                }
+            }
+            let dir_m = tmp_dir(&format!("{tag}-mmap"));
+            let dir_p = tmp_dir(&format!("{tag}-pread"));
+            let cfg = AdapterConfig { dtype, dedup, ..Default::default() };
+            let mapped = spilled_store(
+                &dir_m,
+                AdapterConfig { mmap: true, ..cfg.clone() },
+                data.clone(),
+            );
+            let positioned = spilled_store(&dir_p, AdapterConfig { mmap: false, ..cfg }, data);
+            let m = mapped.get("t").unwrap();
+            let p = positioned.get("t").unwrap();
+            assert_eq!(m.tier(), "disk", "{tag}");
+            assert_eq!(p.tier(), "disk", "{tag}");
+            let m_rows = all_rows(m.as_ref());
+            assert_eq!(m_rows, all_rows(p.as_ref()), "{tag}: cold rows diverge");
+
+            // The fault-in path: a table loaded resident from the spill
+            // file serves the same bits, whichever way it was read.
+            let path = spill_file(&dir_m);
+            for use_mmap in [false, true] {
+                let counters = Arc::new(ColdCounters::default());
+                let cold = ColdTable::open(
+                    &path,
+                    L,
+                    V,
+                    D,
+                    dtype,
+                    dedup,
+                    use_mmap,
+                    Arc::clone(&counters),
+                )
+                .unwrap();
+                let warm = cold.load_resident().unwrap();
+                assert_eq!(
+                    all_rows(warm.as_ref()),
+                    m_rows,
+                    "{tag}: mmap={use_mmap} fault-in diverges"
+                );
+                drop(warm);
+                drop(cold);
+                assert_eq!(
+                    counters.mapped_bytes.load(Ordering::Relaxed),
+                    0,
+                    "{tag}: mapping leaked"
+                );
+            }
+        }
+    }
+}
