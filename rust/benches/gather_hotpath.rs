@@ -39,6 +39,7 @@ use aotpt::coordinator::{
     Bucket, HostBackend, Metrics, Pipeline, Request, TaskRegistry, WorkItem,
 };
 use aotpt::json::Json;
+use aotpt::peft::kernel;
 use aotpt::peft::{AdapterConfig, AdapterDType, GatherArena, PStore, TaskP};
 use aotpt::tensor::Tensor;
 use aotpt::util::Pcg64;
@@ -471,10 +472,130 @@ fn main() {
         println!("(asserted: overlapped ns/batch < serial gather+execute sum)");
     }
 
+    // ---- Part 4: row kernels — scalar vs SIMD per dtype (DESIGN.md §14) --
+    // Each available kernel is forced in turn and the full gather re-run
+    // over resident, cold-mmap and cold-pread stores of every dtype; all
+    // legs are asserted bit-identical to the scalar resident reference,
+    // the resident leg is timed per kernel (ns/row into the JSON), and on
+    // AVX2 hosts the SIMD f16/int8 dequant must be >= 2x the scalar leg.
+    {
+        let (kl, kd) = if test_mode { (2usize, 64usize) } else { (4, 256) };
+        let k_vocab = if test_mode { 128 } else { 4096 };
+        let (kb, kn) = if test_mode { (2usize, 8usize) } else { (8, 64) };
+        let kernels = kernel::available();
+        #[cfg(target_arch = "x86_64")]
+        let has_avx2 = std::is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let has_avx2 = false;
+        let dtypes: &[(&str, AdapterDType)] =
+            &[("f32", AdapterDType::F32), ("f16", AdapterDType::F16), ("int8", AdapterDType::I8)];
+        let mut rng = Pcg64::new(5);
+        let data = rng.normal_vec(kl * k_vocab * kd, 1.0);
+        let assignments: Vec<&str> = (0..kb).map(|_| "t").collect();
+        let ids: Vec<i32> = (0..kb * kn).map(|_| rng.range(0, k_vocab as i64) as i32).collect();
+        let mut kernel_rows = Vec::new();
+        for &(dname, dtype) in dtypes {
+            let table_bytes = kl * k_vocab * kd * dtype.size();
+            let mk_store = |budget: usize, mmap: bool| {
+                let s = PStore::with_config(
+                    kl,
+                    k_vocab,
+                    kd,
+                    AdapterConfig { dtype, ram_budget_bytes: budget, mmap, ..Default::default() },
+                );
+                s.insert("t", TaskP::new(kl, k_vocab, kd, data.clone()).unwrap()).unwrap();
+                s
+            };
+            let resident = mk_store(0, true);
+            // Half-table budgets force the disk tier, so the cold legs
+            // also exercise the sorted gather plan under every kernel.
+            let cold_map = mk_store(table_bytes / 2, true);
+            let cold_pread = mk_store(table_bytes / 2, false);
+
+            kernel::force(kernel::scalar());
+            let mut reference = vec![0f32; kl * kb * kn * kd];
+            resident.gather_batch(&assignments, &ids, kn, kb, threads, &mut reference).unwrap();
+
+            let arena = GatherArena::new();
+            let mut ns_per_kernel: Vec<(&str, f64)> = Vec::new();
+            for &k in &kernels {
+                kernel::force(k);
+                let legs: [(&str, &PStore); 3] = [
+                    ("resident", &resident),
+                    ("cold-mmap", &cold_map),
+                    ("cold-pread", &cold_pread),
+                ];
+                for (leg, store) in legs {
+                    let mut out = vec![0f32; kl * kb * kn * kd];
+                    store.gather_batch(&assignments, &ids, kn, kb, threads, &mut out).unwrap();
+                    let same = out.iter().zip(&reference).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(
+                        same,
+                        "{dname}/{leg} under kernel {} diverges from the scalar reference",
+                        k.name
+                    );
+                }
+                let m = measure(&format!("kernel/{dname}/{}", k.name), &cell_cfg, || {
+                    let mut out = arena.take_f32(kb, kn, "kbias", kl * kb * kn * kd);
+                    resident.gather_batch(&assignments, &ids, kn, kb, threads, &mut out).unwrap();
+                    std::hint::black_box(&out);
+                    arena.put_f32(kb, kn, "kbias", out);
+                });
+                let ns_row = m.mean_secs * 1e9 / (kl * kb * kn) as f64;
+                let mut case = m.to_json();
+                case.set("kernel", Json::Str(k.name.to_string()));
+                case.set("tier", Json::Str(dname.to_string()));
+                case.set("ns_per_batch", Json::Num(m.mean_secs * 1e9));
+                case.set("ns_per_row", Json::Num(ns_row));
+                case.set("allocs", Json::Num(arena.allocs() as f64));
+                cases.push(case);
+                ns_per_kernel.push((k.name, ns_row));
+            }
+            // Zero-alloc invariant holds under every kernel: one arena
+            // checkout per dtype, reused across all kernel legs.
+            assert_eq!(arena.allocs(), 1, "{dname}: kernel legs must reuse one arena buffer");
+            // Plan-sort counters: cold batches walk sorted plans, the
+            // resident-only batches never build one.
+            assert!(
+                cold_map.stats().gather_rows_sorted > 0,
+                "{dname}: cold gathers must count sorted rows"
+            );
+            let rstats = resident.stats();
+            assert_eq!(rstats.gather_rows_sorted, 0, "{dname}: resident gathers built a plan");
+            assert!(rstats.gather_rows_unsorted > 0, "{dname}: unsorted rows uncounted");
+
+            let scalar_ns = ns_per_kernel[0].1;
+            for &(kname, ns_row) in &ns_per_kernel {
+                kernel_rows.push(vec![
+                    dname.to_string(),
+                    kname.to_string(),
+                    format!("{ns_row:.1}"),
+                    format!("{:.2}x", scalar_ns / ns_row),
+                ]);
+            }
+            let &(best_name, best_ns) = ns_per_kernel.last().unwrap();
+            if !test_mode && has_avx2 && (dname == "f16" || dname == "int8") {
+                assert!(
+                    best_ns * 2.0 <= scalar_ns,
+                    "{dname}: SIMD {best_name} ({best_ns:.1} ns/row) must be >= 2x faster \
+                     than scalar ({scalar_ns:.1} ns/row)"
+                );
+            }
+        }
+        let auto = kernel::set_active(kernel::KernelMode::Auto);
+        println!("{}", render_table(&["dtype", "kernel", "ns/row", "vs scalar"], &kernel_rows));
+        println!(
+            "(auto-dispatch selects {}; resident/cold-mmap/cold-pread legs asserted \
+             bit-identical to scalar for every kernel)",
+            auto.name
+        );
+    }
+
     let doc = Json::from_pairs(vec![
         ("bench", Json::Str("gather_hotpath".into())),
         ("threads", Json::Num(threads as f64)),
         ("test_mode", Json::Bool(test_mode)),
+        ("kernel", Json::Str(kernel::active().name.to_string())),
         ("cases", cases),
     ]);
     let path = aotpt::repo_root().join("BENCH_gather.json");

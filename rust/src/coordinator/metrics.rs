@@ -206,7 +206,8 @@ impl MetricsSnapshot {
              arena_reuse={}/{} adapters={}r/{}s {:.1}MiB \
              hit={} fault={} cold={} evict={} prefetch={}h/{}m/{}w \
              dedup={:.2}x zero_rows={} \
-             mmap={}o/{}f mapped={:.1}MiB cold_rows={}m/{}p",
+             mmap={}o/{}f mapped={:.1}MiB cold_rows={}m/{}p \
+             kernel={} gsort={}s/{}u",
             self.requests,
             self.batches,
             self.mean_batch_size,
@@ -235,6 +236,9 @@ impl MetricsSnapshot {
             self.adapter.mapped_bytes as f64 / (1024.0 * 1024.0),
             self.adapter.cold_rows_mapped,
             self.adapter.cold_rows_positioned,
+            self.adapter.kernel,
+            self.adapter.gather_rows_sorted,
+            self.adapter.gather_rows_unsorted,
         )
     }
 }
@@ -327,6 +331,9 @@ mod tests {
             mapped_bytes: 2 << 20,
             cold_rows_mapped: 12,
             cold_rows_positioned: 34,
+            kernel: "avx2",
+            gather_rows_sorted: 64,
+            gather_rows_unsorted: 1024,
         };
         m.set_adapter_counters(stats);
         let s = m.snapshot();
@@ -342,5 +349,7 @@ mod tests {
         assert!(r.contains("mmap=3o/1f"), "{r}");
         assert!(r.contains("mapped=2.0MiB"), "{r}");
         assert!(r.contains("cold_rows=12m/34p"), "{r}");
+        assert!(r.contains("kernel=avx2"), "{r}");
+        assert!(r.contains("gsort=64s/1024u"), "{r}");
     }
 }

@@ -50,6 +50,12 @@ fn run(argv: &[String]) -> Result<()> {
         Some("auto"),
         "mmap cold-tier spill files: on|off|auto (auto = on where supported)",
     )
+    .opt(
+        "kernel",
+        Some("auto"),
+        "row-kernel dispatch: auto (best SIMD for this host) | scalar \
+         (AOTPT_KERNEL overrides auto)",
+    )
     .opt("gather-threads", Some("0"), "gather shard threads (0 = one per core)")
     .opt("prefetch", Some("on"), "gather-aware adapter prefetch: on|off")
     .opt("tasks", Some("8"), "task count (adapters demo)")
@@ -69,6 +75,18 @@ fn run(argv: &[String]) -> Result<()> {
     // typo'd --adapter-dtype fails here, listing the valid values, rather
     // than on the first task registration deep inside a running pipeline.
     let adapter_cfg = adapter_config_from_args(&args)?;
+
+    // Pin the row-kernel dispatch before any gather runs (DESIGN.md §14).
+    // `auto` still honors the AOTPT_KERNEL environment override.
+    let kernel_mode = args
+        .get_via("kernel", aotpt::peft::KernelMode::parse)
+        .map_err(anyhow::Error::msg)?;
+    let kernel = aotpt::peft::kernel::set_active(kernel_mode);
+    aotpt::util::log::log(
+        aotpt::util::log::Level::Debug,
+        module_path!(),
+        &format!("row kernel: {}", kernel.name),
+    );
 
     // The adapters demo is artifact-free (HostBackend); everything else
     // reads the manifest.

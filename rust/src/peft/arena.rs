@@ -18,6 +18,10 @@
 //!   rows, whose logits are dropped after execute);
 //! * geometry is part of the key, so a bucket change never resizes a
 //!   buffer in place; a stale-length buffer is dropped and re-allocated;
+//! * a cold batch may *copy* rows in plan-sorted order (DESIGN.md §14),
+//!   but every row lands in its fixed output slot, so a checked-out
+//!   buffer's contents never depend on the copy order — the filler-row
+//!   and overwrite rules above hold unchanged under the plan sort;
 //! * under overlapped serving (DESIGN.md §11) up to **two** checkouts per
 //!   bucket are in flight at once — one `PreparedBatch` queued while
 //!   another executes — so the flat steady state is at most two buffer

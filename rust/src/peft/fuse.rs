@@ -27,6 +27,7 @@ use anyhow::{anyhow, bail};
 use crate::tensor::Tensor;
 use crate::Result;
 
+use super::kernel;
 use super::store::TaskP;
 
 /// tanh-approximated GELU, bit-matching `kernels/ref.py`.
@@ -193,11 +194,16 @@ pub fn dedup_rows(p: &TaskP, eps: f32) -> DedupPlan {
     let rows = p.layers * p.vocab;
     let data = p.data();
     let mut index = Vec::with_capacity(rows);
-    let mut unique = Vec::new();
+    let mut unique: Vec<f32> = Vec::new();
     let mut zero_rows = 0usize;
-    // Key rows by their exact bit pattern: f32 compare would conflate
-    // 0.0/-0.0 and choke on NaN; bits make dedup deterministic.
-    let mut seen: HashMap<Vec<u32>, u32> = HashMap::new();
+    // Compare rows by their exact bytes: f32 compare would conflate
+    // 0.0/-0.0 and choke on NaN; bytes make dedup deterministic.  Rows
+    // bucket by `kernel::row_hash` and candidates are confirmed with the
+    // dispatched `rows_equal` (SIMD memcmp) instead of materializing a
+    // `Vec<u32>` key per row — hashing plus one vector compare per
+    // candidate beats a per-row key allocation on large V·d tables.
+    let k = kernel::active();
+    let mut seen: HashMap<u64, Vec<u32>> = HashMap::new();
     for r in 0..rows {
         let row = &data[r * d..(r + 1) * d];
         if row.iter().all(|&x| x.abs() <= eps) {
@@ -205,10 +211,16 @@ pub fn dedup_rows(p: &TaskP, eps: f32) -> DedupPlan {
             zero_rows += 1;
             continue;
         }
-        let key: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
-        let next = (seen.len() + 1) as u32;
-        let slot = *seen.entry(key).or_insert_with(|| {
+        let bytes = kernel::f32_bytes(row);
+        let bucket = seen.entry(kernel::row_hash(bytes)).or_default();
+        let hit = bucket.iter().copied().find(|&slot| {
+            let s = (slot - 1) as usize * d;
+            k.rows_equal(kernel::f32_bytes(&unique[s..s + d]), bytes)
+        });
+        let slot = hit.unwrap_or_else(|| {
+            let next = (unique.len() / d + 1) as u32;
             unique.extend_from_slice(row);
+            bucket.push(next);
             next
         });
         index.push(slot);

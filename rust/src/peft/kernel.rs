@@ -1,0 +1,714 @@
+//! Runtime-dispatched SIMD row kernels for the gather/dequant hot path.
+//!
+//! Every row the gather serves — resident f32 copies, f16/int8 dequant,
+//! cold-tier byte decodes, and the dedup pass's row comparisons — funnels
+//! through one of four primitive kernels (DESIGN.md §14):
+//!
+//! * `f16_le`    — little-endian IEEE binary16 payload → f32,
+//! * `i8_affine` — int8 codes → `scale · q + zero` f32,
+//! * `f32_le`    — little-endian f32 payload → f32 (wide row copy),
+//! * `bytes_eq`  — bytewise row equality (f32 bit-pattern equality).
+//!
+//! Each primitive has a portable scalar implementation plus SIMD variants
+//! selected **at run time** via `std::arch` feature detection on first
+//! use: AVX2 and SSE2 on x86_64, NEON on little-endian aarch64.  The
+//! selection is overridable — `AOTPT_KERNEL=scalar|auto` (the CI matrix
+//! lever, mirroring `AOTPT_ADAPTER_MMAP`) and the `--kernel` CLI flag —
+//! so the scalar fallback stays exercised everywhere the SIMD paths run.
+//!
+//! **Bit parity is the contract**: every SIMD path must produce the exact
+//! bit pattern of the scalar path for every input (asserted exhaustively
+//! over all 65536 f16 patterns in `rust/tests/kernel_parity.rs`).  The
+//! f16 kernels therefore use a branch-free integer construction of the
+//! scalar conversion (never the F16C `vcvtph2ps` instruction, which
+//! quietens signaling NaNs), and the int8 kernels use an explicit
+//! multiply-then-add (never FMA, which Rust's scalar `scale * q + zero`
+//! does not contract to).  All kernels accept unaligned pointers and any
+//! length; odd tails fall through to the scalar loop.
+//!
+//! Dispatch is one relaxed atomic pointer load per call — negligible next
+//! to a row's worth of work — and swapping the active kernel at run time
+//! (`set_active`) is how the bench and the parity tests drive every
+//! implementation through the same gather code.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+use anyhow::bail;
+
+use crate::Result;
+
+use super::quant::f16_bits_to_f32;
+
+/// One dispatchable implementation set.  The function pointers are
+/// `unsafe` because they take raw pointers; the safe methods below do the
+/// length bookkeeping.
+pub struct RowKernel {
+    /// Implementation name (`scalar`, `sse2`, `avx2`, `neon`) — surfaced
+    /// through `AdapterStats` and `BENCH_gather.json`.
+    pub name: &'static str,
+    f16_le: unsafe fn(*const u8, *mut f32, usize),
+    i8_affine: unsafe fn(*const i8, f32, f32, *mut f32, usize),
+    f32_le: unsafe fn(*const u8, *mut f32, usize),
+    bytes_eq: unsafe fn(*const u8, *const u8, usize) -> bool,
+}
+
+impl RowKernel {
+    /// Decode a little-endian f16 payload into f32.
+    ///
+    /// Contract: `src.len() == 2 * dst.len()` (debug-asserted; release
+    /// builds decode the common prefix).
+    #[inline]
+    pub fn dequant_f16_le(&self, src: &[u8], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len() * 2, "f16 payload/output length mismatch");
+        let n = dst.len().min(src.len() / 2);
+        unsafe { (self.f16_le)(src.as_ptr(), dst.as_mut_ptr(), n) }
+    }
+
+    /// Dequantize native-order f16 bit patterns into f32.
+    ///
+    /// Contract: `bits.len() == dst.len()` (debug-asserted; release
+    /// builds decode the common prefix).
+    #[inline]
+    pub fn dequant_f16(&self, bits: &[u16], dst: &mut [f32]) {
+        debug_assert_eq!(bits.len(), dst.len(), "f16 bits/output length mismatch");
+        let n = bits.len().min(dst.len());
+        if cfg!(target_endian = "little") {
+            unsafe { (self.f16_le)(bits.as_ptr() as *const u8, dst.as_mut_ptr(), n) }
+        } else {
+            for (o, &b) in dst[..n].iter_mut().zip(bits) {
+                *o = f16_bits_to_f32(b);
+            }
+        }
+    }
+
+    /// Dequantize int8 codes: `dst[i] = scale * codes[i] + zero`.
+    ///
+    /// Contract: `codes.len() == dst.len()` (debug-asserted; release
+    /// builds decode the common prefix).
+    #[inline]
+    pub fn dequant_i8(&self, codes: &[i8], scale: f32, zero: f32, dst: &mut [f32]) {
+        debug_assert_eq!(codes.len(), dst.len(), "i8 codes/output length mismatch");
+        let n = codes.len().min(dst.len());
+        unsafe { (self.i8_affine)(codes.as_ptr(), scale, zero, dst.as_mut_ptr(), n) }
+    }
+
+    /// Same as [`dequant_i8`](Self::dequant_i8) over a raw byte payload
+    /// (the cold tier's stored rows).
+    #[inline]
+    pub fn dequant_i8_bytes(&self, raw: &[u8], scale: f32, zero: f32, dst: &mut [f32]) {
+        debug_assert_eq!(raw.len(), dst.len(), "i8 payload/output length mismatch");
+        let n = raw.len().min(dst.len());
+        unsafe { (self.i8_affine)(raw.as_ptr() as *const i8, scale, zero, dst.as_mut_ptr(), n) }
+    }
+
+    /// Decode a little-endian f32 payload into f32.
+    ///
+    /// Contract: `src.len() == 4 * dst.len()` (debug-asserted; release
+    /// builds decode the common prefix).
+    #[inline]
+    pub fn decode_f32_le(&self, src: &[u8], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len() * 4, "f32 payload/output length mismatch");
+        let n = dst.len().min(src.len() / 4);
+        unsafe { (self.f32_le)(src.as_ptr(), dst.as_mut_ptr(), n) }
+    }
+
+    /// Wide f32 row copy (the resident f32 tier's gather move).
+    ///
+    /// Contract: `src.len() == dst.len()` (debug-asserted; release builds
+    /// copy the common prefix).
+    #[inline]
+    pub fn copy_f32(&self, src: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len(), "f32 row copy length mismatch");
+        let n = src.len().min(dst.len());
+        if cfg!(target_endian = "little") {
+            unsafe { (self.f32_le)(src.as_ptr() as *const u8, dst.as_mut_ptr(), n) }
+        } else {
+            dst[..n].copy_from_slice(&src[..n]);
+        }
+    }
+
+    /// Bytewise equality over two rows (f32 bit-pattern equality — NaNs
+    /// with equal payloads compare equal, `+0.0` and `-0.0` differ).
+    /// Slices of different lengths are never equal.
+    #[inline]
+    pub fn rows_equal(&self, a: &[u8], b: &[u8]) -> bool {
+        a.len() == b.len() && unsafe { (self.bytes_eq)(a.as_ptr(), b.as_ptr(), a.len()) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar (portable reference — always available, endian-correct).
+// ---------------------------------------------------------------------
+
+unsafe fn f16_le_scalar(src: *const u8, dst: *mut f32, n: usize) {
+    for i in 0..n {
+        let b = u16::from_le_bytes([*src.add(2 * i), *src.add(2 * i + 1)]);
+        *dst.add(i) = f16_bits_to_f32(b);
+    }
+}
+
+unsafe fn i8_affine_scalar(src: *const i8, scale: f32, zero: f32, dst: *mut f32, n: usize) {
+    for i in 0..n {
+        *dst.add(i) = scale * (*src.add(i) as f32) + zero;
+    }
+}
+
+unsafe fn f32_le_scalar(src: *const u8, dst: *mut f32, n: usize) {
+    for i in 0..n {
+        let p = src.add(4 * i);
+        *dst.add(i) = f32::from_le_bytes([*p, *p.add(1), *p.add(2), *p.add(3)]);
+    }
+}
+
+unsafe fn bytes_eq_scalar(a: *const u8, b: *const u8, n: usize) -> bool {
+    // Word-at-a-time over unaligned 8-byte chunks, byte tail.
+    let words = n / 8;
+    for i in 0..words {
+        let x = (a.add(8 * i) as *const u64).read_unaligned();
+        let y = (b.add(8 * i) as *const u64).read_unaligned();
+        if x != y {
+            return false;
+        }
+    }
+    for i in words * 8..n {
+        if *a.add(i) != *b.add(i) {
+            return false;
+        }
+    }
+    true
+}
+
+static SCALAR: RowKernel = RowKernel {
+    name: "scalar",
+    f16_le: f16_le_scalar,
+    i8_affine: i8_affine_scalar,
+    f32_le: f32_le_scalar,
+    bytes_eq: bytes_eq_scalar,
+};
+
+// ---------------------------------------------------------------------
+// x86_64: SSE2 (baseline) and AVX2 (detected).
+//
+// The f16 path is the branch-free construction of the scalar conversion
+// (after Giesen): shift the 15 payload bits up 13, add 112 to the
+// exponent field; lanes whose f16 exponent saturated (inf/NaN) get the
+// bias added once more (31 + 224 = 255), and subnormal lanes (exponent
+// zero) are rebuilt exactly as `mant · 2⁻²⁴` by setting the implicit-one
+// bit and subtracting 2⁻¹⁴ — an exact f32 subtraction, so the result is
+// bit-identical to the scalar `mant as f32 / 16_777_216.0`.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::{bytes_eq_scalar, f16_le_scalar, f32_le_scalar, i8_affine_scalar, RowKernel};
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn f16_le_sse2(src: *const u8, dst: *mut f32, n: usize) {
+        let exp_mask = _mm_set1_epi32(0x7c00 << 13);
+        let magic = _mm_set1_epi32(112 << 23);
+        let one_mant = _mm_set1_epi32(1 << 23);
+        let sub_bias = _mm_castsi128_ps(_mm_set1_epi32(113 << 23));
+        let zero = _mm_setzero_si128();
+        let mut i = 0;
+        while i + 4 <= n {
+            let h = _mm_loadl_epi64(src.add(2 * i) as *const __m128i);
+            let hu = _mm_unpacklo_epi16(h, zero);
+            let sign = _mm_slli_epi32::<16>(_mm_and_si128(hu, _mm_set1_epi32(0x8000)));
+            let em = _mm_slli_epi32::<13>(_mm_and_si128(hu, _mm_set1_epi32(0x7fff)));
+            let exp = _mm_and_si128(em, exp_mask);
+            let base = _mm_add_epi32(em, magic);
+            let is_inf_nan = _mm_cmpeq_epi32(exp, exp_mask);
+            let norm = _mm_add_epi32(base, _mm_and_si128(is_inf_nan, magic));
+            let is_sub = _mm_cmpeq_epi32(exp, zero);
+            let subval = _mm_sub_ps(_mm_castsi128_ps(_mm_add_epi32(base, one_mant)), sub_bias);
+            // SSE2 has no blendv: select via and/andnot/or on the mask.
+            let val = _mm_or_si128(
+                _mm_and_si128(is_sub, _mm_castps_si128(subval)),
+                _mm_andnot_si128(is_sub, norm),
+            );
+            let out = _mm_or_ps(_mm_castsi128_ps(val), _mm_castsi128_ps(sign));
+            _mm_storeu_ps(dst.add(i), out);
+            i += 4;
+        }
+        f16_le_scalar(src.add(2 * i), dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn i8_affine_sse2(src: *const i8, scale: f32, zero: f32, dst: *mut f32, n: usize) {
+        let s = _mm_set1_ps(scale);
+        let z = _mm_set1_ps(zero);
+        let mut i = 0;
+        while i + 4 <= n {
+            let raw = (src.add(i) as *const i32).read_unaligned();
+            let q = _mm_cvtsi32_si128(raw);
+            // Sign-extend i8 → i32: duplicate each byte up through the
+            // lane, then arithmetic-shift the top byte down.
+            let w16 = _mm_unpacklo_epi8(q, q);
+            let w32 = _mm_unpacklo_epi16(w16, w16);
+            let w = _mm_srai_epi32::<24>(w32);
+            let f = _mm_cvtepi32_ps(w);
+            // mul-then-add, not FMA: bit parity with the scalar
+            // `scale * q + zero`, which Rust never contracts.
+            _mm_storeu_ps(dst.add(i), _mm_add_ps(_mm_mul_ps(f, s), z));
+            i += 4;
+        }
+        i8_affine_scalar(src.add(i), scale, zero, dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn f32_le_sse2(src: *const u8, dst: *mut f32, n: usize) {
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_si128(src.add(4 * i) as *const __m128i);
+            _mm_storeu_si128(dst.add(i) as *mut __m128i, v);
+            i += 4;
+        }
+        f32_le_scalar(src.add(4 * i), dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn bytes_eq_sse2(a: *const u8, b: *const u8, n: usize) -> bool {
+        let mut i = 0;
+        while i + 16 <= n {
+            let x = _mm_loadu_si128(a.add(i) as *const __m128i);
+            let y = _mm_loadu_si128(b.add(i) as *const __m128i);
+            if _mm_movemask_epi8(_mm_cmpeq_epi8(x, y)) != 0xffff {
+                return false;
+            }
+            i += 16;
+        }
+        bytes_eq_scalar(a.add(i), b.add(i), n - i)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn f16_le_avx2(src: *const u8, dst: *mut f32, n: usize) {
+        let exp_mask = _mm256_set1_epi32(0x7c00 << 13);
+        let magic = _mm256_set1_epi32(112 << 23);
+        let one_mant = _mm256_set1_epi32(1 << 23);
+        let sub_bias = _mm256_castsi256_ps(_mm256_set1_epi32(113 << 23));
+        let zero = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(src.add(2 * i) as *const __m128i);
+            let hu = _mm256_cvtepu16_epi32(h);
+            let sign = _mm256_slli_epi32::<16>(_mm256_and_si256(hu, _mm256_set1_epi32(0x8000)));
+            let em = _mm256_slli_epi32::<13>(_mm256_and_si256(hu, _mm256_set1_epi32(0x7fff)));
+            let exp = _mm256_and_si256(em, exp_mask);
+            let base = _mm256_add_epi32(em, magic);
+            let is_inf_nan = _mm256_cmpeq_epi32(exp, exp_mask);
+            let norm = _mm256_add_epi32(base, _mm256_and_si256(is_inf_nan, magic));
+            let is_sub = _mm256_cmpeq_epi32(exp, zero);
+            let grown = _mm256_castsi256_ps(_mm256_add_epi32(base, one_mant));
+            let subval = _mm256_sub_ps(grown, sub_bias);
+            let val = _mm256_blendv_ps(
+                _mm256_castsi256_ps(norm),
+                subval,
+                _mm256_castsi256_ps(is_sub),
+            );
+            let out = _mm256_or_ps(val, _mm256_castsi256_ps(sign));
+            _mm256_storeu_ps(dst.add(i), out);
+            i += 8;
+        }
+        f16_le_sse2(src.add(2 * i), dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn i8_affine_avx2(src: *const i8, scale: f32, zero: f32, dst: *mut f32, n: usize) {
+        let s = _mm256_set1_ps(scale);
+        let z = _mm256_set1_ps(zero);
+        let mut i = 0;
+        // Unrolled ×2: 16 codes per iteration.
+        while i + 16 <= n {
+            let q0 = _mm_loadl_epi64(src.add(i) as *const __m128i);
+            let q1 = _mm_loadl_epi64(src.add(i + 8) as *const __m128i);
+            let f0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q0));
+            let f1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q1));
+            _mm256_storeu_ps(dst.add(i), _mm256_add_ps(_mm256_mul_ps(f0, s), z));
+            _mm256_storeu_ps(dst.add(i + 8), _mm256_add_ps(_mm256_mul_ps(f1, s), z));
+            i += 16;
+        }
+        while i + 8 <= n {
+            let q = _mm_loadl_epi64(src.add(i) as *const __m128i);
+            let f = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+            _mm256_storeu_ps(dst.add(i), _mm256_add_ps(_mm256_mul_ps(f, s), z));
+            i += 8;
+        }
+        i8_affine_scalar(src.add(i), scale, zero, dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn f32_le_avx2(src: *const u8, dst: *mut f32, n: usize) {
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_si256(src.add(4 * i) as *const __m256i);
+            _mm256_storeu_si256(dst.add(i) as *mut __m256i, v);
+            i += 8;
+        }
+        f32_le_sse2(src.add(4 * i), dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn bytes_eq_avx2(a: *const u8, b: *const u8, n: usize) -> bool {
+        let mut i = 0;
+        while i + 32 <= n {
+            let x = _mm256_loadu_si256(a.add(i) as *const __m256i);
+            let y = _mm256_loadu_si256(b.add(i) as *const __m256i);
+            if _mm256_movemask_epi8(_mm256_cmpeq_epi8(x, y)) != -1 {
+                return false;
+            }
+            i += 32;
+        }
+        bytes_eq_sse2(a.add(i), b.add(i), n - i)
+    }
+
+    pub(super) static SSE2: RowKernel = RowKernel {
+        name: "sse2",
+        f16_le: f16_le_sse2,
+        i8_affine: i8_affine_sse2,
+        f32_le: f32_le_sse2,
+        bytes_eq: bytes_eq_sse2,
+    };
+
+    pub(super) static AVX2: RowKernel = RowKernel {
+        name: "avx2",
+        f16_le: f16_le_avx2,
+        i8_affine: i8_affine_avx2,
+        f32_le: f32_le_avx2,
+        bytes_eq: bytes_eq_avx2,
+    };
+}
+
+// ---------------------------------------------------------------------
+// aarch64 (little-endian): NEON — part of the aarch64 baseline, but
+// detected anyway so an exotic runtime can still demote to scalar.
+// ---------------------------------------------------------------------
+
+#[cfg(all(target_arch = "aarch64", target_endian = "little"))]
+mod arm {
+    use std::arch::aarch64::*;
+
+    use super::{bytes_eq_scalar, f16_le_scalar, f32_le_scalar, i8_affine_scalar, RowKernel};
+
+    #[target_feature(enable = "neon")]
+    unsafe fn f16_le_neon(src: *const u8, dst: *mut f32, n: usize) {
+        let exp_mask = vdupq_n_u32(0x7c00 << 13);
+        let magic = vdupq_n_u32(112 << 23);
+        let one_mant = vdupq_n_u32(1 << 23);
+        let sub_bias = vreinterpretq_f32_u32(vdupq_n_u32(113 << 23));
+        let mut i = 0;
+        while i + 4 <= n {
+            let h = vld1_u16(src.add(2 * i) as *const u16);
+            let hu = vmovl_u16(h);
+            let sign = vshlq_n_u32::<16>(vandq_u32(hu, vdupq_n_u32(0x8000)));
+            let em = vshlq_n_u32::<13>(vandq_u32(hu, vdupq_n_u32(0x7fff)));
+            let exp = vandq_u32(em, exp_mask);
+            let base = vaddq_u32(em, magic);
+            let is_inf_nan = vceqq_u32(exp, exp_mask);
+            let norm = vaddq_u32(base, vandq_u32(is_inf_nan, magic));
+            let is_sub = vceqq_u32(exp, vdupq_n_u32(0));
+            let subval = vsubq_f32(vreinterpretq_f32_u32(vaddq_u32(base, one_mant)), sub_bias);
+            let val = vbslq_u32(is_sub, vreinterpretq_u32_f32(subval), norm);
+            let out = vorrq_u32(val, sign);
+            vst1q_f32(dst.add(i), vreinterpretq_f32_u32(out));
+            i += 4;
+        }
+        f16_le_scalar(src.add(2 * i), dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn i8_affine_neon(src: *const i8, scale: f32, zero: f32, dst: *mut f32, n: usize) {
+        let s = vdupq_n_f32(scale);
+        let z = vdupq_n_f32(zero);
+        let mut i = 0;
+        while i + 8 <= n {
+            let q = vld1_s8(src.add(i));
+            let w = vmovl_s8(q);
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+            // mul-then-add, not vfma: bit parity with the scalar path.
+            vst1q_f32(dst.add(i), vaddq_f32(vmulq_f32(lo, s), z));
+            vst1q_f32(dst.add(i + 4), vaddq_f32(vmulq_f32(hi, s), z));
+            i += 8;
+        }
+        i8_affine_scalar(src.add(i), scale, zero, dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn f32_le_neon(src: *const u8, dst: *mut f32, n: usize) {
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_u8(dst.add(i) as *mut u8, vld1q_u8(src.add(4 * i)));
+            i += 4;
+        }
+        f32_le_scalar(src.add(4 * i), dst.add(i), n - i);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn bytes_eq_neon(a: *const u8, b: *const u8, n: usize) -> bool {
+        let mut i = 0;
+        while i + 16 <= n {
+            let eq = vceqq_u8(vld1q_u8(a.add(i)), vld1q_u8(b.add(i)));
+            if vminvq_u8(eq) != 0xff {
+                return false;
+            }
+            i += 16;
+        }
+        bytes_eq_scalar(a.add(i), b.add(i), n - i)
+    }
+
+    pub(super) static NEON: RowKernel = RowKernel {
+        name: "neon",
+        f16_le: f16_le_neon,
+        i8_affine: i8_affine_neon,
+        f32_le: f32_le_neon,
+        bytes_eq: bytes_eq_neon,
+    };
+}
+
+// ---------------------------------------------------------------------
+// Selection and dispatch.
+// ---------------------------------------------------------------------
+
+/// How to pick the active kernel (CLI `--kernel`, env `AOTPT_KERNEL`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Best detected SIMD set — unless `AOTPT_KERNEL=scalar` overrides
+    /// (the env is the CI matrix lever, mirroring `AOTPT_ADAPTER_MMAP`).
+    Auto,
+    /// The portable scalar reference, unconditionally.
+    Scalar,
+}
+
+impl KernelMode {
+    pub fn parse(s: &str) -> Result<KernelMode> {
+        Ok(match s {
+            "auto" => KernelMode::Auto,
+            "scalar" => KernelMode::Scalar,
+            other => bail!("unknown kernel mode {other:?} (expected one of: auto, scalar)"),
+        })
+    }
+}
+
+/// The globally active kernel; null until first use.
+static ACTIVE: AtomicPtr<RowKernel> = AtomicPtr::new(std::ptr::null_mut());
+
+/// The active kernel, selecting on first use (env override, then CPU
+/// feature detection).
+#[inline]
+pub fn active() -> &'static RowKernel {
+    let p = ACTIVE.load(Ordering::Acquire);
+    if p.is_null() {
+        let k = select(KernelMode::Auto);
+        ACTIVE.store(k as *const RowKernel as *mut RowKernel, Ordering::Release);
+        k
+    } else {
+        unsafe { &*p }
+    }
+}
+
+/// Re-select the active kernel (the `--kernel` flag; also how the bench
+/// flips scalar ↔ SIMD in-process).  Returns the selection.
+pub fn set_active(mode: KernelMode) -> &'static RowKernel {
+    force(select(mode))
+}
+
+/// Install a specific kernel (benches/tests iterating `available()`).
+pub fn force(k: &'static RowKernel) -> &'static RowKernel {
+    ACTIVE.store(k as *const RowKernel as *mut RowKernel, Ordering::Release);
+    k
+}
+
+/// The portable scalar reference kernel.
+pub fn scalar() -> &'static RowKernel {
+    &SCALAR
+}
+
+/// Every kernel runnable on this host, scalar first, best last.
+pub fn available() -> Vec<&'static RowKernel> {
+    let mut v: Vec<&'static RowKernel> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        v.push(&x86::SSE2);
+        if std::is_x86_feature_detected!("avx2") {
+            v.push(&x86::AVX2);
+        }
+    }
+    #[cfg(all(target_arch = "aarch64", target_endian = "little"))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            v.push(&arm::NEON);
+        }
+    }
+    v
+}
+
+fn select(mode: KernelMode) -> &'static RowKernel {
+    if mode == KernelMode::Scalar {
+        return &SCALAR;
+    }
+    if let Ok(v) = std::env::var("AOTPT_KERNEL") {
+        match KernelMode::parse(v.trim()) {
+            Ok(KernelMode::Scalar) => return &SCALAR,
+            Ok(KernelMode::Auto) => {}
+            Err(_) => {
+                eprintln!("warning: ignoring invalid AOTPT_KERNEL={v:?} (expected auto|scalar)")
+            }
+        }
+    }
+    detect()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> &'static RowKernel {
+    if std::is_x86_feature_detected!("avx2") {
+        &x86::AVX2
+    } else {
+        // SSE2 is part of the x86_64 baseline.
+        &x86::SSE2
+    }
+}
+
+#[cfg(all(target_arch = "aarch64", target_endian = "little"))]
+fn detect() -> &'static RowKernel {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        &arm::NEON
+    } else {
+        &SCALAR
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", all(target_arch = "aarch64", target_endian = "little"))))]
+fn detect() -> &'static RowKernel {
+    &SCALAR
+}
+
+// ---------------------------------------------------------------------
+// Row hashing (the dedup pass's bucket key).
+// ---------------------------------------------------------------------
+
+/// FNV-1a over the row bytes, eight bytes at a time.  Not cryptographic —
+/// hash collisions only cost an extra `rows_equal` check in the dedup
+/// pass, never a wrong merge.
+pub fn row_hash(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        h ^= u64::from_le_bytes(c.try_into().unwrap());
+        h = h.wrapping_mul(PRIME);
+    }
+    for &b in chunks.remainder() {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// View an f32 row as raw bytes (for `row_hash`/`rows_equal`).
+pub fn f32_bytes(row: &[f32]) -> &[u8] {
+    // Safety: f32 has no padding and u8 has alignment 1; the length in
+    // bytes cannot overflow because the slice exists.
+    unsafe { std::slice::from_raw_parts(row.as_ptr() as *const u8, std::mem::size_of_val(row)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::quant::f32_to_f16_bits;
+    use super::*;
+
+    #[test]
+    fn scalar_matches_quant_reference() {
+        let values = [0.0f32, -0.0, 1.0, -2.5, 1e-4, 6.1e-5, f32::INFINITY, f32::NAN];
+        let bits: Vec<u16> = values.iter().map(|&v| f32_to_f16_bits(v)).collect();
+        let mut out = vec![0f32; bits.len()];
+        scalar().dequant_f16(&bits, &mut out);
+        for (&b, &o) in bits.iter().zip(&out) {
+            assert_eq!(o.to_bits(), f16_bits_to_f32(b).to_bits());
+        }
+    }
+
+    #[test]
+    fn every_available_kernel_is_bit_exact_on_specials() {
+        // Smoke parity here; the exhaustive 65536-pattern sweep lives in
+        // rust/tests/kernel_parity.rs.
+        let bits: Vec<u16> = vec![
+            0x0000, 0x8000, 0x0001, 0x8001, 0x03ff, 0x0400, 0x7bff, 0x7c00, 0xfc00, 0x7c01,
+            0x7e00, 0xfe55, 0x3c00, 0xbc00, 0x5555, 0xaaaa,
+        ];
+        let mut reference = vec![0f32; bits.len()];
+        scalar().dequant_f16(&bits, &mut reference);
+        for k in available() {
+            let mut out = vec![0f32; bits.len()];
+            k.dequant_f16(&bits, &mut out);
+            for (i, (r, o)) in reference.iter().zip(&out).enumerate() {
+                assert_eq!(
+                    r.to_bits(),
+                    o.to_bits(),
+                    "kernel {} diverges from scalar on f16 bits {:#06x}",
+                    k.name,
+                    bits[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn i8_affine_matches_scalar_for_every_kernel() {
+        let codes: Vec<i8> = (-128i16..=127).map(|q| q as i8).collect();
+        for &(scale, zero) in &[(0.031f32, -1.5f32), (0.0, 0.0), (-2.25e-3, 7.0)] {
+            let mut reference = vec![0f32; codes.len()];
+            scalar().dequant_i8(&codes, scale, zero, &mut reference);
+            for k in available() {
+                let mut out = vec![0f32; codes.len()];
+                k.dequant_i8(&codes, scale, zero, &mut out);
+                for (r, o) in reference.iter().zip(&out) {
+                    assert_eq!(r.to_bits(), o.to_bits(), "kernel {} i8 divergence", k.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_equal_is_bytewise() {
+        for k in available() {
+            let a: Vec<u8> = (0..100u8).collect();
+            let mut b = a.clone();
+            assert!(k.rows_equal(&a, &b), "{}", k.name);
+            b[99] = 0xff;
+            assert!(!k.rows_equal(&a, &b), "{} missed a tail diff", k.name);
+            b[99] = 99;
+            b[40] = 0xff;
+            assert!(!k.rows_equal(&a, &b), "{} missed a body diff", k.name);
+            assert!(!k.rows_equal(&a, &a[..99]), "{} ignored length", k.name);
+            assert!(k.rows_equal(&[], &[]), "{} empty rows are equal", k.name);
+        }
+    }
+
+    #[test]
+    fn row_hash_discriminates_and_is_stable() {
+        let a = f32_bytes(&[1.0, 2.0, 3.0]);
+        let b = f32_bytes(&[1.0, 2.0, 4.0]);
+        assert_eq!(row_hash(a), row_hash(a));
+        assert_ne!(row_hash(a), row_hash(b));
+        // +0.0 and -0.0 have different bit patterns, so different keys.
+        assert_ne!(row_hash(f32_bytes(&[0.0])), row_hash(f32_bytes(&[-0.0])));
+    }
+
+    #[test]
+    fn mode_parses_and_rejects() {
+        assert_eq!(KernelMode::parse("auto").unwrap(), KernelMode::Auto);
+        assert_eq!(KernelMode::parse("scalar").unwrap(), KernelMode::Scalar);
+        let err = KernelMode::parse("avx512").unwrap_err().to_string();
+        assert!(err.contains("auto"), "error should list valid modes: {err}");
+    }
+
+    #[test]
+    fn available_starts_with_scalar() {
+        let v = available();
+        assert_eq!(v[0].name, "scalar");
+        assert!(!v.is_empty());
+    }
+}

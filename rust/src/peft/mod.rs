@@ -21,15 +21,20 @@
 //!   serving gather allocates nothing (DESIGN.md §9).
 //! * `pool` — the persistent layer-sharded gather worker pool: spawned
 //!   once per pipeline, parked between batches (DESIGN.md §11).
+//! * `kernel` — runtime-dispatched SIMD row kernels (AVX2/SSE2/NEON with
+//!   a scalar fallback, `--kernel`/`AOTPT_KERNEL` override) behind every
+//!   row move, dequant and dedup comparison (DESIGN.md §14).
 
 pub mod arena;
 pub mod fuse;
+pub mod kernel;
 pub mod pool;
 pub mod quant;
 pub mod residency;
 pub mod store;
 
 pub use arena::GatherArena;
+pub use kernel::{KernelMode, RowKernel};
 pub use pool::GatherPool;
 pub use quant::{AdapterDType, Int8TaskP, QuantizedTaskP};
 pub use residency::{

@@ -37,6 +37,8 @@ struct GatherShard {
     ids_len: usize,
     out: *mut f32,
     out_len: usize,
+    plan: *const u32,
+    plan_len: usize,
     first_layer: usize,
     layer_block: usize,
     n: usize,
@@ -98,8 +100,13 @@ fn run_shard(shard: &GatherShard) -> Result<()> {
     let sources = unsafe { std::slice::from_raw_parts(shard.sources, shard.sources_len) };
     let ids = unsafe { std::slice::from_raw_parts(shard.ids, shard.ids_len) };
     let out = unsafe { std::slice::from_raw_parts_mut(shard.out, shard.out_len) };
+    let plan = if shard.plan_len == 0 {
+        &[][..]
+    } else {
+        unsafe { std::slice::from_raw_parts(shard.plan, shard.plan_len) }
+    };
     for (i, layer_out) in out.chunks_mut(shard.layer_block).enumerate() {
-        gather_layer(sources, shard.first_layer + i, ids, shard.n, shard.d, layer_out)?;
+        gather_layer(sources, shard.first_layer + i, ids, shard.n, shard.d, plan, layer_out)?;
     }
     Ok(())
 }
@@ -161,7 +168,10 @@ impl GatherPool {
     /// contiguous layer ranges across the pool.  The calling thread
     /// gathers the first shard itself while the workers run the rest,
     /// then blocks until every shard landed — the borrowed inputs never
-    /// escape this call.
+    /// escape this call.  A non-empty `plan` (cold batches) makes every
+    /// shard copy its rows in (source table, token id) order
+    /// (DESIGN.md §14).
+    #[allow(clippy::too_many_arguments)]
     pub fn gather(
         &self,
         sources: &[Arc<dyn RowSource>],
@@ -169,6 +179,7 @@ impl GatherPool {
         n: usize,
         d: usize,
         layer_block: usize,
+        plan: &[u32],
         out: &mut [f32],
     ) -> Result<()> {
         if out.is_empty() {
@@ -177,7 +188,7 @@ impl GatherPool {
         let total_layers = out.len() / layer_block;
         if total_layers <= 1 || self.threads == 1 {
             for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
-                gather_layer(sources, layer, ids, n, d, layer_out)?;
+                gather_layer(sources, layer, ids, n, d, plan, layer_out)?;
             }
             return Ok(());
         }
@@ -200,6 +211,8 @@ impl GatherPool {
                     ids_len: ids.len(),
                     out: chunk.as_mut_ptr(),
                     out_len: chunk.len(),
+                    plan: plan.as_ptr(),
+                    plan_len: plan.len(),
                     first_layer: idx * layers_per,
                     layer_block,
                     n,
@@ -214,7 +227,7 @@ impl GatherPool {
         }
         if let Some(chunk) = inline {
             for (i, layer_out) in chunk.chunks_mut(layer_block).enumerate() {
-                if let Err(e) = gather_layer(sources, i, ids, n, d, layer_out) {
+                if let Err(e) = gather_layer(sources, i, ids, n, d, plan, layer_out) {
                     latch.record(e);
                     break;
                 }
@@ -260,7 +273,7 @@ mod tests {
         let layer_block = b * n * d;
         let mut out = vec![0f32; l * layer_block];
         for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
-            gather_layer(srcs, layer, ids, n, d, layer_out).unwrap();
+            gather_layer(srcs, layer, ids, n, d, &[], layer_out).unwrap();
         }
         out
     }
@@ -275,7 +288,7 @@ mod tests {
         for threads in [1, 2, 3, 8, 16] {
             let pool = GatherPool::new(threads);
             let mut got = vec![0f32; l * b * n * d];
-            pool.gather(&srcs, &ids, n, d, b * n * d, &mut got).unwrap();
+            pool.gather(&srcs, &ids, n, d, b * n * d, &[], &mut got).unwrap();
             assert_eq!(want, got, "threads={threads}");
         }
     }
@@ -292,7 +305,7 @@ mod tests {
             let ids: Vec<i32> = (0..b * n).map(|_| rng.range(0, v as i64) as i32).collect();
             let want = serial(&srcs, &ids, n, d, l);
             let mut got = vec![1e9f32; l * b * n * d];
-            pool.gather(&srcs, &ids, n, d, b * n * d, &mut got).unwrap();
+            pool.gather(&srcs, &ids, n, d, b * n * d, &[], &mut got).unwrap();
             assert_eq!(want, got, "batch {batch}");
         }
     }
@@ -304,7 +317,7 @@ mod tests {
         let pool = GatherPool::new(16);
         let want = serial(&srcs, &ids_of(b * n, v), n, d, l);
         let mut got = vec![0f32; l * b * n * d];
-        pool.gather(&srcs, &ids_of(b * n, v), n, d, b * n * d, &mut got).unwrap();
+        pool.gather(&srcs, &ids_of(b * n, v), n, d, b * n * d, &[], &mut got).unwrap();
         assert_eq!(want, got);
     }
 

@@ -134,12 +134,17 @@ pub fn quantize(values: &[f32]) -> Vec<u16> {
 }
 
 /// Dequantize `bits` into `out` (the on-gather direction; `out` is an
-/// arena-owned slice, so this performs no allocation).
+/// arena-owned slice, so this performs no allocation).  Runs on the
+/// active SIMD row kernel (DESIGN.md §14), bit-identical to the scalar
+/// [`f16_bits_to_f32`] per element.
+///
+/// Contract: `bits.len() == out.len()`.  Mismatched lengths are a caller
+/// bug — debug builds assert; release builds dequantize only the common
+/// prefix (the historical `zip` behavior).
 #[inline]
 pub fn dequantize_into(bits: &[u16], out: &mut [f32]) {
-    for (o, &b) in out.iter_mut().zip(bits) {
-        *o = f16_bits_to_f32(b);
-    }
+    debug_assert_eq!(bits.len(), out.len(), "dequantize_into: bits/out length mismatch");
+    super::kernel::active().dequant_f16(bits, out);
 }
 
 /// One task's fused table stored as binary16 — the RAM-halving middle
@@ -252,13 +257,18 @@ pub fn quantize_row_i8(row: &[f32], codes: &mut [i8]) -> (f32, f32) {
 }
 
 /// Dequantize one int8 row into `out` (the on-gather direction; `out`
-/// is an arena-owned slice, so this performs no allocation).  The tight
-/// loop is a single fused multiply-add per element.
+/// is an arena-owned slice, so this performs no allocation).  Runs on
+/// the active SIMD row kernel (DESIGN.md §14): `scale·q + zero` per
+/// element, multiply-then-add on every path (no FMA contraction), so
+/// SIMD and scalar agree bit for bit.
+///
+/// Contract: `codes.len() == out.len()`.  Mismatched lengths are a
+/// caller bug — debug builds assert; release builds dequantize only the
+/// common prefix (the historical `zip` behavior).
 #[inline]
 pub fn dequantize_i8_into(codes: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
-    for (o, &q) in out.iter_mut().zip(codes) {
-        *o = scale * (q as f32) + zero;
-    }
+    debug_assert_eq!(codes.len(), out.len(), "dequantize_i8_into: codes/out length mismatch");
+    super::kernel::active().dequant_i8(codes, scale, zero, out);
 }
 
 /// One task's fused table stored as per-row affine int8 — quarter the

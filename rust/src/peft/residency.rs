@@ -50,7 +50,7 @@ use crate::tensor::{ckpt, DType};
 use crate::util::mmap::Mmap;
 use crate::Result;
 
-use super::quant::{f16_bits_to_f32, AdapterDType, Int8TaskP, QuantizedTaskP};
+use super::quant::{AdapterDType, Int8TaskP, QuantizedTaskP};
 use super::store::{DedupTaskP, RowCounts, RowSource, TaskP};
 
 /// Name of the main table tensor inside a spill file.  Tiered layouts
@@ -204,6 +204,14 @@ pub struct AdapterStats {
     pub cold_rows_mapped: usize,
     /// Cold rows served by positioned reads.
     pub cold_rows_positioned: usize,
+    /// The row kernel currently dispatching every copy/dequant
+    /// (DESIGN.md §14): "avx2", "sse2", "neon" or "scalar".
+    pub kernel: &'static str,
+    /// Rows gathered through a sorted gather plan (batches touching the
+    /// disk tier walk their cold tables in (table, token) order).
+    pub gather_rows_sorted: usize,
+    /// Rows gathered in plain token order (all-resident batches).
+    pub gather_rows_unsorted: usize,
 }
 
 impl AdapterStats {
@@ -304,6 +312,10 @@ pub struct Residency {
     dedup_logical_rows: AtomicUsize,
     dedup_stored_rows: AtomicUsize,
     dedup_zero_rows: AtomicUsize,
+    /// Rows gathered through a sorted plan vs in token order
+    /// (DESIGN.md §14; fed by `PStore` after every gather batch).
+    gather_rows_sorted: AtomicUsize,
+    gather_rows_unsorted: AtomicUsize,
     /// Shared with every [`ColdTable`] this store opens (see
     /// [`ColdCounters`] for why the gauge lives outside the manager).
     cold_counters: Arc<ColdCounters>,
@@ -392,7 +404,19 @@ impl Residency {
             dedup_logical_rows: AtomicUsize::new(0),
             dedup_stored_rows: AtomicUsize::new(0),
             dedup_zero_rows: AtomicUsize::new(0),
+            gather_rows_sorted: AtomicUsize::new(0),
+            gather_rows_unsorted: AtomicUsize::new(0),
             cold_counters: Arc::new(ColdCounters::default()),
+        }
+    }
+
+    /// Record one gather batch's row count against the sorted or
+    /// unsorted counter (called by `PStore` after the batch completes).
+    pub(super) fn note_gather_rows(&self, rows: usize, sorted: bool) {
+        if sorted {
+            self.gather_rows_sorted.fetch_add(rows, Ordering::Relaxed);
+        } else {
+            self.gather_rows_unsorted.fetch_add(rows, Ordering::Relaxed);
         }
     }
 
@@ -942,6 +966,9 @@ impl Residency {
             mapped_bytes: self.cold_counters.mapped_bytes.load(Ordering::Relaxed),
             cold_rows_mapped: self.cold_counters.rows_mapped.load(Ordering::Relaxed),
             cold_rows_positioned: self.cold_counters.rows_positioned.load(Ordering::Relaxed),
+            kernel: super::kernel::active().name,
+            gather_rows_sorted: self.gather_rows_sorted.load(Ordering::Relaxed),
+            gather_rows_unsorted: self.gather_rows_unsorted.load(Ordering::Relaxed),
         }
     }
 }
@@ -1214,23 +1241,14 @@ impl ColdTable {
     /// mapped and positioned cold paths, so the two are bit-identical by
     /// construction.
     fn decode_row(&self, stored: usize, raw: &[u8], out: &mut [f32]) -> Result<()> {
+        let k = super::kernel::active();
         match self.dtype {
-            AdapterDType::F32 => {
-                for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
-                    *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-                }
-            }
-            AdapterDType::F16 => {
-                for (o, c) in out.iter_mut().zip(raw.chunks_exact(2)) {
-                    *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
-                }
-            }
+            AdapterDType::F32 => k.decode_f32_le(raw, out),
+            AdapterDType::F16 => k.dequant_f16_le(raw, out),
             AdapterDType::I8 => {
                 let scale = self.scale.as_ref().expect("i8 cold table has scale")[stored];
                 let zero = self.zero.as_ref().expect("i8 cold table has zero")[stored];
-                for (o, &b) in out.iter_mut().zip(raw.iter()) {
-                    *o = scale * (b as i8 as f32) + zero;
-                }
+                k.dequant_i8_bytes(raw, scale, zero, out);
             }
         }
         Ok(())

@@ -22,7 +22,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use anyhow::bail;
+use anyhow::{bail, Context};
 
 use crate::tensor::Tensor;
 use crate::Result;
@@ -190,7 +190,7 @@ impl RowSource for TaskP {
 
     #[inline]
     fn copy_row(&self, layer: usize, token: usize, out: &mut [f32]) -> Result<()> {
-        out.copy_from_slice(self.row(layer, token));
+        super::kernel::active().copy_f32(self.row(layer, token), out);
         Ok(())
     }
 
@@ -357,6 +357,10 @@ pub struct PStore {
     /// Shared with the background prefetch worker (which holds a `Weak`),
     /// hence the `Arc`.
     residency: Arc<Residency>,
+    /// Recycled gather-plan index buffers (cold batches only — resident
+    /// batches never build a plan), so the sorted cold gather stays
+    /// allocation-free in steady state too (DESIGN.md §14).
+    plan_pool: Mutex<Vec<Vec<u32>>>,
 }
 
 impl PStore {
@@ -378,6 +382,7 @@ impl PStore {
             vocab,
             d_model,
             residency: Arc::new(Residency::new(layers, vocab, d_model, cfg)),
+            plan_pool: Mutex::new(Vec::new()),
         }
     }
 
@@ -525,6 +530,7 @@ impl PStore {
         let live = assignments.len();
         let d = self.d_model;
         let layer_block = b * n * d;
+        let plan = self.build_plan(&sources, ids, n);
         // Scoped threads cost tens of microseconds to spawn; only go
         // parallel when the per-layer copy is large enough to repay that
         // (single-row/short-sequence batches stay serial).
@@ -533,35 +539,46 @@ impl PStore {
         } else {
             threads.clamp(1, self.layers)
         };
-        if threads == 1 {
+        let result = if threads == 1 {
+            let mut res = Ok(());
             for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
-                gather_layer(&sources, layer, ids, n, d, layer_out)?;
+                res = gather_layer(&sources, layer, ids, n, d, &plan, layer_out);
+                if res.is_err() {
+                    break;
+                }
             }
-            return Ok(());
-        }
-        let layers_per = self.layers.div_ceil(threads);
-        // Only the disk tier can fail mid-copy; the first error wins and
-        // fails the whole batch (partial output is discarded upstream).
-        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        std::thread::scope(|scope| {
-            for (chunk_idx, chunk) in out.chunks_mut(layers_per * layer_block).enumerate() {
-                let sources = &sources;
-                let first_err = &first_err;
-                scope.spawn(move || {
-                    for (i, layer_out) in chunk.chunks_mut(layer_block).enumerate() {
-                        let layer = chunk_idx * layers_per + i;
-                        if let Err(e) = gather_layer(sources, layer, ids, n, d, layer_out) {
-                            *first_err.lock().unwrap() = Some(e);
-                            return;
+            res
+        } else {
+            let layers_per = self.layers.div_ceil(threads);
+            // Only the disk tier can fail mid-copy; the first error wins
+            // and fails the whole batch (partial output is discarded
+            // upstream).
+            let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            std::thread::scope(|scope| {
+                for (chunk_idx, chunk) in out.chunks_mut(layers_per * layer_block).enumerate() {
+                    let sources = &sources;
+                    let first_err = &first_err;
+                    let plan = &plan;
+                    scope.spawn(move || {
+                        for (i, layer_out) in chunk.chunks_mut(layer_block).enumerate() {
+                            let layer = chunk_idx * layers_per + i;
+                            if let Err(e) = gather_layer(sources, layer, ids, n, d, plan, layer_out)
+                            {
+                                *first_err.lock().unwrap() = Some(e);
+                                return;
+                            }
                         }
-                    }
-                });
+                    });
+                }
+            });
+            match first_err.into_inner().unwrap() {
+                Some(e) => Err(e),
+                None => Ok(()),
             }
-        });
-        match first_err.into_inner().unwrap() {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
+        };
+        self.residency.note_gather_rows(live * n * self.layers, !plan.is_empty());
+        self.retire_plan(plan);
+        result
     }
 
     /// The overlapped pipeline's gather: identical semantics and geometry
@@ -584,13 +601,60 @@ impl PStore {
         let live = assignments.len();
         let d = self.d_model;
         let layer_block = b * n * d;
-        if live * n * d < PARALLEL_MIN_ELEMS || pool.threads() == 1 {
+        let plan = self.build_plan(&sources, ids, n);
+        let result = if live * n * d < PARALLEL_MIN_ELEMS || pool.threads() == 1 {
+            let mut res = Ok(());
             for (layer, layer_out) in out.chunks_mut(layer_block).enumerate() {
-                gather_layer(&sources, layer, ids, n, d, layer_out)?;
+                res = gather_layer(&sources, layer, ids, n, d, &plan, layer_out);
+                if res.is_err() {
+                    break;
+                }
             }
-            return Ok(());
+            res
+        } else {
+            pool.gather(&sources, ids, n, d, layer_block, &plan, out)
+        };
+        self.residency.note_gather_rows(live * n * self.layers, !plan.is_empty());
+        self.retire_plan(plan);
+        result
+    }
+
+    /// Build the per-batch gather plan (DESIGN.md §14): when any live
+    /// row serves from the disk tier, order the row copies by
+    /// (source table, token id) so cold/mmap reads walk the spill file —
+    /// and the page cache behind it — near-sequentially instead of in
+    /// token order.  One plan covers every layer (the sort key does not
+    /// depend on the layer).  Resident-only batches return the empty
+    /// plan and allocate nothing: RAM rows gain nothing from reordering,
+    /// and the zero-alloc steady state must hold.  Every planned copy
+    /// still writes to its fixed `[l, b, n, d]` slot, so the output is
+    /// bit-identical to the unplanned walk.
+    fn build_plan(&self, sources: &[Arc<dyn RowSource>], ids: &[i32], n: usize) -> Vec<u32> {
+        if n == 0 || !sources.iter().any(|s| s.tier() == "disk") {
+            return Vec::new();
         }
-        pool.gather(&sources, ids, n, d, layer_block, out)
+        let mut plan = self.plan_pool.lock().unwrap().pop().unwrap_or_default();
+        plan.clear();
+        plan.extend(0..(sources.len() * n) as u32);
+        plan.sort_unstable_by_key(|&e| {
+            let j = e as usize / n;
+            // Thin-pointer cast drops the vtable half of the fat pointer:
+            // the sort only needs a stable per-table identity.
+            (Arc::as_ptr(&sources[j]) as *const u8 as usize, ids[e as usize])
+        });
+        plan
+    }
+
+    /// Return a plan buffer to the pool (bounded), so steady-state cold
+    /// gathers reuse instead of allocating.
+    fn retire_plan(&self, plan: Vec<u32>) {
+        if plan.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.plan_pool.lock().unwrap();
+        if pool.len() < 8 {
+            pool.push(plan);
+        }
     }
 
     /// Shared validation + snapshot resolution for the gather entry
@@ -622,7 +686,7 @@ impl PStore {
         if live * n * d * self.layers == 0 {
             return Ok(None);
         }
-        self.validate_ids(&ids[..live * n])?;
+        self.validate_ids(assignments, &ids[..live * n], n)?;
         let sources: Vec<Arc<dyn RowSource>> = assignments
             .iter()
             .map(|t| self.get(t))
@@ -643,10 +707,16 @@ impl PStore {
         self.residency.prefetch_backlog()
     }
 
-    fn validate_ids(&self, ids: &[i32]) -> Result<()> {
-        for &tok in ids {
-            if tok < 0 || tok as usize >= self.vocab {
-                bail!("token id {tok} outside vocabulary [0, {})", self.vocab);
+    fn validate_ids(&self, assignments: &[&str], ids: &[i32], n: usize) -> Result<()> {
+        for (j, task) in assignments.iter().enumerate() {
+            for (t, &tok) in ids[j * n..(j + 1) * n].iter().enumerate() {
+                if tok < 0 || tok as usize >= self.vocab {
+                    bail!(
+                        "task {task:?} (batch row {j}, seq position {t}): token id {tok} \
+                         outside vocabulary [0, {})",
+                        self.vocab
+                    );
+                }
             }
         }
         Ok(())
@@ -655,21 +725,40 @@ impl PStore {
 
 /// Copy one layer's rows for every live assignment (ids pre-validated).
 /// Shared by the scoped-thread path, the pooled path and the serial
-/// fallback — `pub(crate)` so [`GatherPool`] workers can run it.
+/// fallback — `pub(crate)` so [`GatherPool`] workers can run it.  With a
+/// non-empty `plan` (cold batches, DESIGN.md §14) rows are copied in
+/// (source table, token id) order; each copy still writes to the fixed
+/// slot of its (row, position) pair, so the output layout is identical
+/// to the unplanned walk.
 pub(crate) fn gather_layer(
     sources: &[Arc<dyn RowSource>],
     layer: usize,
     ids: &[i32],
     n: usize,
     d: usize,
+    plan: &[u32],
     out: &mut [f32],
 ) -> Result<()> {
-    for (j, src) in sources.iter().enumerate() {
-        let row_base = j * n * d;
-        for t in 0..n {
-            let tok = ids[j * n + t] as usize;
-            src.copy_row(layer, tok, &mut out[row_base + t * d..row_base + (t + 1) * d])?;
+    if plan.is_empty() {
+        for (j, src) in sources.iter().enumerate() {
+            let row_base = j * n * d;
+            for t in 0..n {
+                let tok = ids[j * n + t] as usize;
+                let slot = &mut out[row_base + t * d..row_base + (t + 1) * d];
+                src.copy_row(layer, tok, slot).with_context(|| {
+                    format!("gather: layer {layer}, batch row {j}, token {tok}")
+                })?;
+            }
         }
+        return Ok(());
+    }
+    for &e in plan {
+        let e = e as usize;
+        let (j, tok) = (e / n, ids[e] as usize);
+        let base = e * d;
+        sources[j].copy_row(layer, tok, &mut out[base..base + d]).with_context(|| {
+            format!("gather: layer {layer}, batch row {j}, token {tok}")
+        })?;
     }
     Ok(())
 }

@@ -1,0 +1,239 @@
+//! SIMD-vs-scalar bit-parity sweep for the row kernels (DESIGN.md §14).
+//!
+//! The dispatch contract is that every SIMD kernel produces the exact
+//! bit pattern of the portable scalar reference on every input.  This
+//! suite sweeps that claim across
+//!
+//! * all 65536 f16 bit patterns (every NaN payload, every subnormal),
+//! * all 256 int8 codes under several scale/zero pairs,
+//! * odd row widths (d = 1, 7, 8, 15, 16, 31, 64) so vector bodies and
+//!   scalar tails both run,
+//! * unaligned byte slices (the mmap cold tier hands out payloads at
+//!   arbitrary file offsets),
+//! * end-to-end gathers over f32/f16/int8 × dedup × resident/spilled
+//!   stores with the global kernel flipped per leg.
+//!
+//! Concurrency rule: tests in this binary run on parallel threads, so
+//! only ONE test (`gather_bit_parity_across_kernels`) may touch the
+//! global dispatch state; every other test drives kernels through
+//! direct `&RowKernel` references from `kernel::available()`.
+
+use aotpt::peft::kernel::{self, RowKernel};
+use aotpt::peft::{AdapterConfig, AdapterDType, PStore, TaskP};
+use aotpt::util::Pcg64;
+
+/// The sweep widths: one short of / exactly / one past the 4-, 8-, 16-
+/// and 32-lane boundaries, plus a realistic row width.
+const WIDTHS: [usize; 7] = [1, 7, 8, 15, 16, 31, 64];
+
+fn simd_kernels() -> Vec<&'static RowKernel> {
+    kernel::available().into_iter().filter(|k| k.name != "scalar").collect()
+}
+
+#[test]
+fn f16_parity_is_exhaustive_over_all_bit_patterns() {
+    // Every f16 value that exists: zeros, subnormals, normals, both
+    // infinities and every NaN payload (signaling and quiet).
+    let bits: Vec<u16> = (0..=u16::MAX).collect();
+    let mut reference = vec![0f32; bits.len()];
+    kernel::scalar().dequant_f16(&bits, &mut reference);
+    for k in simd_kernels() {
+        let mut out = vec![0f32; bits.len()];
+        k.dequant_f16(&bits, &mut out);
+        for (i, (r, o)) in reference.iter().zip(&out).enumerate() {
+            assert_eq!(
+                r.to_bits(),
+                o.to_bits(),
+                "kernel {} diverges on f16 bits {:#06x}: scalar {:#010x} vs {:#010x}",
+                k.name,
+                bits[i],
+                r.to_bits(),
+                o.to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn f16_parity_holds_on_odd_widths_and_unaligned_tails() {
+    // A payload dense in special values, served at every width from
+    // every byte offset 0..4 — the mmap cold tier does not align rows.
+    let specials: [u16; 12] = [
+        0x0000, 0x8000, // ±0
+        0x0001, 0x83ff, // subnormals
+        0x7c00, 0xfc00, // ±inf
+        0x7c01, 0x7e00, 0xfeaa, // NaNs (signaling + quiet payloads)
+        0x3c00, 0xbc00, 0x7bff, // ±1, f16::MAX
+    ];
+    let mut rng = Pcg64::new(41);
+    for &d in &WIDTHS {
+        let row: Vec<u16> = (0..d)
+            .map(|i| {
+                if i % 3 == 0 {
+                    specials[rng.range(0, specials.len() as i64) as usize]
+                } else {
+                    rng.range(0, u16::MAX as i64 + 1) as u16
+                }
+            })
+            .collect();
+        for offset in 0..4usize {
+            let mut bytes = vec![0u8; offset + 2 * d];
+            for (i, &b) in row.iter().enumerate() {
+                bytes[offset + 2 * i..offset + 2 * i + 2].copy_from_slice(&b.to_le_bytes());
+            }
+            let payload = &bytes[offset..];
+            let mut reference = vec![0f32; d];
+            kernel::scalar().dequant_f16_le(payload, &mut reference);
+            for k in simd_kernels() {
+                let mut out = vec![0f32; d];
+                k.dequant_f16_le(payload, &mut out);
+                let same = reference.iter().zip(&out).all(|(r, o)| r.to_bits() == o.to_bits());
+                assert!(same, "kernel {} d={d} offset={offset}", k.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn i8_parity_covers_every_code_at_every_width() {
+    // Scale/zero pairs: a typical quantizer output, exact zero scale
+    // (constant rows), a negative scale, and a subnormal-producing pair.
+    let params: [(f32, f32); 4] =
+        [(0.031, -1.5), (0.0, 4.25), (-2.25e-3, 7.0), (1.0e-41, 0.0)];
+    for &d in &WIDTHS {
+        for shift in 0..3usize {
+            // Rotate through all 256 codes so every width sees the full
+            // range across shifts.
+            let codes: Vec<i8> = (0..d).map(|i| ((i * 37 + shift * 11) % 256) as u8 as i8).collect();
+            for &(scale, zero) in &params {
+                let mut reference = vec![0f32; d];
+                kernel::scalar().dequant_i8(&codes, scale, zero, &mut reference);
+                for k in simd_kernels() {
+                    let mut out = vec![0f32; d];
+                    k.dequant_i8(&codes, scale, zero, &mut out);
+                    let same = reference.iter().zip(&out).all(|(r, o)| r.to_bits() == o.to_bits());
+                    assert!(same, "kernel {} d={d} shift={shift} scale={scale}", k.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_decode_and_copy_preserve_bits_at_every_width() {
+    let mut rng = Pcg64::new(43);
+    for &d in &WIDTHS {
+        let mut row: Vec<f32> = rng.normal_vec(d, 1.0);
+        row[0] = f32::NAN;
+        if d > 2 {
+            row[1] = -0.0;
+            row[2] = f32::INFINITY;
+        }
+        for offset in 0..4usize {
+            let mut bytes = vec![0u8; offset + 4 * d];
+            for (i, v) in row.iter().enumerate() {
+                bytes[offset + 4 * i..offset + 4 * i + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            let payload = &bytes[offset..];
+            for k in simd_kernels() {
+                let mut out = vec![0f32; d];
+                k.decode_f32_le(payload, &mut out);
+                let same = row.iter().zip(&out).all(|(r, o)| r.to_bits() == o.to_bits());
+                assert!(same, "kernel {} decode d={d} offset={offset}", k.name);
+            }
+        }
+        for k in simd_kernels() {
+            let mut out = vec![0f32; d];
+            k.copy_f32(&row, &mut out);
+            let same = row.iter().zip(&out).all(|(r, o)| r.to_bits() == o.to_bits());
+            assert!(same, "kernel {} copy d={d}", k.name);
+        }
+    }
+}
+
+#[test]
+fn rows_equal_agrees_with_scalar_at_every_length_and_diff_position() {
+    for len in 0..70usize {
+        let a: Vec<u8> = (0..len).map(|i| (i * 31 + 5) as u8).collect();
+        for k in simd_kernels() {
+            assert!(k.rows_equal(&a, &a), "{} len={len} self-equality", k.name);
+        }
+        for diff in 0..len {
+            let mut b = a.clone();
+            b[diff] ^= 0x80;
+            for k in simd_kernels() {
+                assert!(!k.rows_equal(&a, &b), "{} len={len} missed diff at {diff}", k.name);
+            }
+        }
+    }
+}
+
+/// One store per (dtype, dedup, spilled) leg at width `d`, filled with a
+/// payload that keeps shared/zero/special rows in play for dedup.
+fn build_store(dtype: AdapterDType, dedup: bool, spilled: bool, d: usize) -> PStore {
+    let (layers, vocab) = (2usize, 48usize);
+    let cfg = AdapterConfig {
+        // 1 byte of budget forces every insert straight to the disk
+        // tier, so gathers exercise the cold decode + plan sort.
+        ram_budget_bytes: if spilled { 1 } else { 0 },
+        dtype,
+        dedup,
+        ..AdapterConfig::default()
+    };
+    let store = PStore::with_config(layers, vocab, d, cfg);
+    let mut rng = Pcg64::new(7 + d as u64);
+    for task in ["a", "b"] {
+        let mut data = rng.normal_vec(layers * vocab * d, 0.8);
+        for row in 0..layers * vocab {
+            match row % 5 {
+                // Zero and repeated rows give the dedup pass something
+                // to collapse; tiny values quantize to f16 subnormals.
+                0 => data[row * d..(row + 1) * d].fill(0.0),
+                1 => data[row * d..(row + 1) * d].fill(1.0),
+                2 => data[row * d..(row + 1) * d].fill(1.0e-5),
+                _ => {}
+            }
+        }
+        store.insert(task, TaskP::new(layers, vocab, d, data).unwrap()).unwrap();
+    }
+    store
+}
+
+/// The ONLY test allowed to flip the global kernel (see module doc).
+/// Drives the full gather path — tier dispatch, dedup indirection, cold
+/// decode, gather plan sort — under every kernel and asserts the output
+/// is bit-identical to the scalar leg.
+#[test]
+fn gather_bit_parity_across_kernels() {
+    let n = 5usize;
+    let legs: [(AdapterDType, bool, bool); 5] = [
+        (AdapterDType::F32, false, false),
+        (AdapterDType::F16, false, false),
+        (AdapterDType::I8, false, false),
+        (AdapterDType::F16, true, false),
+        (AdapterDType::F16, false, true),
+    ];
+    let mut rng = Pcg64::new(11);
+    for &d in &WIDTHS {
+        for &(dtype, dedup, spilled) in &legs {
+            let store = build_store(dtype, dedup, spilled, d);
+            let ids: Vec<i32> = (0..2 * n).map(|_| rng.range(0, 48) as i32).collect();
+            kernel::force(kernel::scalar());
+            let reference = store.gather(&["a", "b"], &ids, n).unwrap();
+            let reference = reference.as_f32().unwrap();
+            for k in kernel::available() {
+                kernel::force(k);
+                let got = store.gather(&["a", "b"], &ids, n).unwrap();
+                let got = got.as_f32().unwrap();
+                let same =
+                    reference.iter().zip(got.iter()).all(|(r, o)| r.to_bits() == o.to_bits());
+                assert!(
+                    same,
+                    "kernel {} gather diverges: dtype {:?} dedup={dedup} spilled={spilled} d={d}",
+                    k.name, dtype
+                );
+            }
+        }
+    }
+    kernel::set_active(kernel::KernelMode::Auto);
+}
