@@ -32,7 +32,6 @@
 
 use std::sync::mpsc::{channel, sync_channel};
 use std::sync::Arc;
-use std::time::Instant;
 
 use aotpt::bench::{measure, render_table, BenchConfig};
 use aotpt::coordinator::{
@@ -370,11 +369,10 @@ fn main() {
             let (tx, rx) = channel();
             let ids: Vec<i32> =
                 (0..n).map(|_| rng.range(0, ov_vocab as i64) as i32).collect();
-            items.push(WorkItem {
-                request: Request { task: task_names[j % 4].into(), ids },
-                enqueued: Instant::now(),
-                respond: tx,
-            });
+            items.push(WorkItem::new(
+                Request { task: task_names[j % 4].into(), ids },
+                tx,
+            ));
             last_rx = Some(rx);
         }
         (items, last_rx.unwrap())

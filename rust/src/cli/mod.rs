@@ -1,7 +1,9 @@
 //! Tiny CLI argument parser (clap is not available offline).
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional args;
-//! generates usage text from declared options.
+//! generates usage text from declared options.  Empty values (`--key=`)
+//! and repeated occurrences of the same option or flag are parse errors
+//! — never silent last-wins.
 
 use std::collections::BTreeMap;
 
@@ -78,6 +80,9 @@ impl Args {
                     if inline.is_some() {
                         return Err(format!("--{key} is a flag and takes no value"));
                     }
+                    if self.flags.contains(&key) {
+                        return Err(format!("--{key} given more than once"));
+                    }
                     self.flags.push(key);
                 } else {
                     let value = match inline {
@@ -89,7 +94,19 @@ impl Args {
                                 .ok_or_else(|| format!("--{key} requires a value"))?
                         }
                     };
-                    self.values.insert(key, value);
+                    // An empty value (`--key=` or `--key ""`) would only
+                    // fail later, deep inside get_usize/get_via, with a
+                    // message that no longer names the culprit; reject it
+                    // here where the flag is still in hand.
+                    if value.is_empty() {
+                        return Err(format!("--{key} requires a non-empty value"));
+                    }
+                    // Duplicates are an explicit error rather than silent
+                    // last-wins: a typo'd retry of a long command line
+                    // should not quietly serve half of it.
+                    if self.values.insert(key.clone(), value).is_some() {
+                        return Err(format!("--{key} given more than once"));
+                    }
                 }
             } else {
                 self.positional.push(arg.clone());
@@ -203,6 +220,22 @@ mod tests {
         assert!(base().parse(&argv(&["--nope"])).is_err());
         assert!(base().parse(&argv(&["--steps"])).is_err());
         assert!(base().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_values() {
+        let err = base().parse(&argv(&["--model="])).unwrap_err();
+        assert!(err.contains("--model requires a non-empty value"), "{err}");
+        let err = base().parse(&argv(&["--model", ""])).unwrap_err();
+        assert!(err.contains("--model requires a non-empty value"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_options_and_flags() {
+        let err = base().parse(&argv(&["--model", "base", "--model=tiny"])).unwrap_err();
+        assert!(err.contains("--model given more than once"), "{err}");
+        let err = base().parse(&argv(&["--verbose", "--verbose"])).unwrap_err();
+        assert!(err.contains("--verbose given more than once"), "{err}");
     }
 
     #[test]

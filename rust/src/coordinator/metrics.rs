@@ -11,6 +11,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::json::Json;
 use crate::peft::AdapterStats;
 use crate::util::stats;
 
@@ -144,7 +145,8 @@ impl Metrics {
 
     /// Pipeline bookkeeping: a request was answered (ok or error).
     pub fn decr_queue_depth(&self) {
-        // Saturating: shutdown sentinels never incremented.
+        // Saturating as a last-ditch guard; the WorkItem reply guard
+        // makes increments/decrements pair exactly on every path.
         let _ = self.queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
             Some(d.saturating_sub(1))
         });
@@ -241,6 +243,50 @@ impl MetricsSnapshot {
             self.adapter.gather_rows_unsorted,
         )
     }
+
+    /// The snapshot as a JSON document (`GET /metrics?format=json`).
+    pub fn to_json(&self) -> Json {
+        let n = |x: f64| Json::Num(x);
+        let u = |x: usize| Json::Num(x as f64);
+        let mut adapter = Json::obj();
+        adapter.set("resident_bytes", u(self.adapter.resident_bytes));
+        adapter.set("resident_tasks", u(self.adapter.resident_tasks));
+        adapter.set("spilled_tasks", u(self.adapter.spilled_tasks));
+        adapter.set("hits", u(self.adapter.hits));
+        adapter.set("faults", u(self.adapter.faults));
+        adapter.set("cold_serves", u(self.adapter.cold_serves));
+        adapter.set("evictions", u(self.adapter.evictions));
+        adapter.set("spill_writes", u(self.adapter.spill_writes));
+        adapter.set("prefetch_hits", u(self.adapter.prefetch_hits));
+        adapter.set("prefetch_misses", u(self.adapter.prefetch_misses));
+        adapter.set("prefetch_wasted", u(self.adapter.prefetch_wasted));
+        adapter.set("dedup_ratio", n(self.adapter.dedup_ratio()));
+        adapter.set("dedup_zero_rows", u(self.adapter.dedup_zero_rows));
+        adapter.set("mmap_opens", u(self.adapter.mmap_opens));
+        adapter.set("mmap_fallbacks", u(self.adapter.mmap_fallbacks));
+        adapter.set("mapped_bytes", u(self.adapter.mapped_bytes));
+        adapter.set("cold_rows_mapped", u(self.adapter.cold_rows_mapped));
+        adapter.set("cold_rows_positioned", u(self.adapter.cold_rows_positioned));
+        adapter.set("kernel", Json::Str(self.adapter.kernel.to_string()));
+        adapter.set("gather_rows_sorted", u(self.adapter.gather_rows_sorted));
+        adapter.set("gather_rows_unsorted", u(self.adapter.gather_rows_unsorted));
+
+        let mut root = Json::obj();
+        root.set("requests", u(self.requests));
+        root.set("batches", u(self.batches));
+        root.set("mean_batch_size", n(self.mean_batch_size));
+        root.set("latency_p50_ms", n(self.latency_p50_ms));
+        root.set("latency_p99_ms", n(self.latency_p99_ms));
+        root.set("mean_gather_ms", n(self.mean_gather_ms));
+        root.set("mean_exec_ms", n(self.mean_exec_ms));
+        root.set("gather_fraction", n(self.gather_fraction));
+        root.set("busy_secs", n(self.busy_secs));
+        root.set("queue_depth", u(self.queue_depth));
+        root.set("arena_allocs", u(self.arena_allocs));
+        root.set("arena_reuses", u(self.arena_reuses));
+        root.set("adapter", adapter);
+        root
+    }
 }
 
 #[cfg(test)]
@@ -296,6 +342,21 @@ mod tests {
         m.incr_queue_depth();
         m.decr_queue_depth();
         assert_eq!(m.snapshot().queue_depth, 1);
+    }
+
+    #[test]
+    fn snapshot_to_json_round_trips() {
+        let m = Metrics::new();
+        m.observe_request(0.010);
+        m.observe_batch(2, 0.015, 0.001, 0.012);
+        m.incr_queue_depth();
+        let s = m.snapshot();
+        let doc = crate::json::parse(&s.to_json().to_string_compact()).unwrap();
+        assert_eq!(doc.get("requests").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("queue_depth").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.path("adapter.kernel").and_then(Json::as_str), Some(s.adapter.kernel));
+        let p50 = doc.get("latency_p50_ms").and_then(Json::as_f64).unwrap();
+        assert_eq!(p50, s.latency_p50_ms, "f64 must round-trip exactly");
     }
 
     #[test]

@@ -34,11 +34,12 @@ pub mod pipeline;
 pub mod registry;
 pub mod request;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
@@ -100,7 +101,9 @@ pub struct Coordinator {
     /// drops the prepared-batch sender, which drains and stops this
     /// thread.
     executor: Mutex<Option<JoinHandle<()>>>,
-    tx: Sender<WorkItem>,
+    /// `None` once drain/shutdown closed the queue; dropping the sender
+    /// is the worker's stop signal.
+    tx: RwLock<Option<Sender<WorkItem>>>,
 }
 
 struct Inner {
@@ -109,6 +112,9 @@ struct Inner {
     metrics: Arc<Metrics>,
     cfg: CoordinatorConfig,
     running: AtomicBool,
+    /// Cleared at the start of drain/shutdown: `submit` stops admitting
+    /// while already-queued batches flush.
+    accepting: AtomicBool,
 }
 
 impl Coordinator {
@@ -178,6 +184,7 @@ impl Coordinator {
             metrics,
             cfg,
             running: AtomicBool::new(true),
+            accepting: AtomicBool::new(true),
         });
         // The two-slot overlap queue: capacity 1 means one batch can sit
         // prepared while another executes — exactly two arena checkouts in
@@ -189,7 +196,15 @@ impl Coordinator {
                 .name("aotpt-execute".into())
                 .spawn(move || {
                     while let Ok(prepared) = prx.recv() {
-                        exec_inner.pipeline.complete(prepared);
+                        // Contain fan-out/registry panics: the unwound
+                        // batch's reply guards answer every item and the
+                        // execute thread keeps serving.  (Backend panics
+                        // are already converted to batch errors inside
+                        // `complete`.)
+                        let inner = Arc::clone(&exec_inner);
+                        let _ = catch_unwind(AssertUnwindSafe(move || {
+                            inner.pipeline.complete(prepared)
+                        }));
                     }
                 })
                 .expect("spawn execute worker");
@@ -207,7 +222,7 @@ impl Coordinator {
             inner,
             worker: Mutex::new(Some(worker)),
             executor: Mutex::new(executor),
-            tx,
+            tx: RwLock::new(Some(tx)),
         })
     }
 
@@ -216,21 +231,59 @@ impl Coordinator {
         if !self.inner.running.load(Ordering::SeqCst) {
             bail!("coordinator is shut down");
         }
+        if !self.inner.accepting.load(Ordering::SeqCst) {
+            bail!("coordinator is draining; not accepting new requests");
+        }
         self.inner.pipeline.admission.admit(&request)?;
         let (respond, receiver) = channel();
+        // The gauge is incremented here and decremented exactly once by
+        // the item's first reply — fan-out, error path, or the drop guard
+        // if shutdown lands between admission and the flush.
         self.inner.metrics.incr_queue_depth();
-        if self.tx.send(WorkItem { request, enqueued: Instant::now(), respond }).is_err() {
-            // Undo the increment: the item never reached the queue.
-            self.inner.metrics.decr_queue_depth();
+        let item = WorkItem::tracked(request, respond, Arc::clone(&self.inner.metrics));
+        let sent = {
+            let tx = self.tx.read().unwrap();
+            match tx.as_ref() {
+                // On send failure the item rides back in the error and
+                // drops: the guard answers it and settles the gauge.
+                Some(tx) => tx.send(item).is_ok(),
+                None => false,
+            }
+        };
+        if !sent {
             bail!("coordinator worker exited");
         }
         Ok(receiver)
     }
 
-    /// Convenience: synchronous classify.
+    /// Convenience: synchronous classify (no deadline).
     pub fn classify(&self, task: &str, ids: Vec<i32>) -> Result<Response> {
+        self.classify_deadline(task, ids, None)
+    }
+
+    /// Synchronous classify with an optional reply deadline.  `None`
+    /// blocks until the coordinator answers (every admitted item is
+    /// answered, even across worker panics and shutdown — the `WorkItem`
+    /// reply guard); `Some(d)` fails with a deadline error after `d`.
+    pub fn classify_deadline(
+        &self,
+        task: &str,
+        ids: Vec<i32>,
+        deadline: Option<Duration>,
+    ) -> Result<Response> {
         let rx = self.submit(Request { task: task.to_string(), ids })?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+        match deadline {
+            None => rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?,
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(result) => result,
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("deadline exceeded after {}ms", d.as_millis())
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("coordinator dropped the request")
+                }
+            },
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -247,20 +300,38 @@ impl Coordinator {
         &self.inner.pipeline
     }
 
-    /// Stop the worker and join it (then the execute thread: the worker's
-    /// exit drops the prepared-batch sender, which drains and stops it).
+    /// Graceful drain: stop admitting, close the queue, and let the
+    /// worker serve everything already admitted before joining it (the
+    /// worker's exit drops the prepared-batch sender, which drains and
+    /// stops the execute thread).  Every admitted request is answered and
+    /// the queue-depth gauge reads 0 afterwards.  Idempotent, and safe to
+    /// interleave with `shutdown` (the joins are take-once).
+    pub fn drain(&self) {
+        self.inner.accepting.store(false, Ordering::SeqCst);
+        // Closing the channel is the drain signal: the worker keeps
+        // flushing batches until `recv` reports disconnected + empty.
+        drop(self.tx.write().unwrap().take());
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+        if let Some(handle) = self.executor.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+        self.inner.running.store(false, Ordering::SeqCst);
+    }
+
+    /// Hard stop: mark not-running (the worker breaks at the next batch
+    /// boundary instead of flushing the backlog), close the queue and
+    /// join.  Residual queued items are answered "shut down" by their
+    /// reply guards when the queue drops — each decrements the gauge
+    /// exactly once, so it still settles to 0.
     pub fn shutdown(&self) {
         if !self.inner.running.swap(false, Ordering::SeqCst) {
             return;
         }
+        self.inner.accepting.store(false, Ordering::SeqCst);
+        drop(self.tx.write().unwrap().take());
         if let Some(handle) = self.worker.lock().unwrap().take() {
-            // Wake the worker with a sentinel so it observes `running=false`.
-            let (fake_tx, _) = channel();
-            let _ = self.tx.send(WorkItem {
-                request: Request { task: String::new(), ids: vec![] },
-                enqueued: Instant::now(),
-                respond: fake_tx,
-            });
             let _ = handle.join();
         }
         if let Some(handle) = self.executor.lock().unwrap().take() {
@@ -315,7 +386,12 @@ fn worker_loop(
             // The two-slot queue applies backpressure once one batch is
             // executing and another is already prepared.
             Some(ptx) => {
-                if let Some(prepared) = inner.pipeline.prepare(pending) {
+                // A panic inside `prepare` unwinds through the items —
+                // their drop guards answer every request — and the worker
+                // keeps serving instead of orphaning the queue.
+                let prepared =
+                    catch_unwind(AssertUnwindSafe(|| inner.pipeline.prepare(pending)));
+                if let Ok(Some(prepared)) = prepared {
                     if let Err(send_err) = ptx.send(prepared) {
                         let e = anyhow!("coordinator execute thread exited");
                         inner.pipeline.abort(send_err.0, &e);
@@ -323,7 +399,9 @@ fn worker_loop(
                 }
             }
             // Serial (overlap off): both halves inline, the seed behavior.
-            None => inner.pipeline.process(pending),
+            None => {
+                let _ = catch_unwind(AssertUnwindSafe(|| inner.pipeline.process(pending)));
+            }
         }
         if !inner.running.load(Ordering::SeqCst) {
             break;

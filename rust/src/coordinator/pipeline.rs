@@ -31,6 +31,8 @@
 //! [`Pipeline::process`] chains both for the serial path and tests.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
@@ -50,10 +52,91 @@ use super::request::{Request, Response};
 use super::CoordinatorConfig;
 
 /// One queued request plus its response channel.
+///
+/// The reply path is guarded: [`WorkItem::reply`] delivers at most one
+/// result per item and settles the queue-depth gauge exactly once, and
+/// the `Drop` impl answers anything still unreplied — so a panicking
+/// worker or a hard shutdown can drop items anywhere on the pipeline
+/// without hanging the submitter or leaking the gauge.
 pub struct WorkItem {
-    pub request: Request,
-    pub enqueued: Instant,
-    pub respond: Sender<Result<Response>>,
+    request: Request,
+    enqueued: Instant,
+    respond: Sender<Result<Response>>,
+    /// Present on the tracked `submit` path: the gauge that was
+    /// incremented at admission and must be decremented exactly once.
+    metrics: Option<Arc<Metrics>>,
+    replied: AtomicBool,
+}
+
+impl WorkItem {
+    /// An untracked item (tests, benches, direct pipeline callers): no
+    /// queue-depth accounting.
+    pub fn new(request: Request, respond: Sender<Result<Response>>) -> WorkItem {
+        WorkItem {
+            request,
+            enqueued: Instant::now(),
+            respond,
+            metrics: None,
+            replied: AtomicBool::new(false),
+        }
+    }
+
+    /// A gauge-tracked item (the coordinator's `submit` path): the caller
+    /// has already incremented the queue-depth gauge; the first reply —
+    /// fan-out, error path, or the drop guard — decrements it.
+    pub fn tracked(
+        request: Request,
+        respond: Sender<Result<Response>>,
+        metrics: Arc<Metrics>,
+    ) -> WorkItem {
+        WorkItem {
+            request,
+            enqueued: Instant::now(),
+            respond,
+            metrics: Some(metrics),
+            replied: AtomicBool::new(false),
+        }
+    }
+
+    pub fn request(&self) -> &Request {
+        &self.request
+    }
+
+    pub fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
+
+    /// Deliver `result` unless this item was already answered.  The first
+    /// call wins: it settles the gauge and sends; later calls (e.g. the
+    /// drop guard after a clean fan-out) are no-ops.
+    pub fn reply(&self, result: Result<Response>) {
+        if self.replied.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(metrics) = &self.metrics {
+            metrics.decr_queue_depth();
+        }
+        let _ = self.respond.send(result);
+    }
+}
+
+impl Drop for WorkItem {
+    fn drop(&mut self) {
+        self.reply(Err(anyhow!(
+            "request dropped without a reply (coordinator shut down or worker panicked)"
+        )));
+    }
+}
+
+/// Best-effort text from a `catch_unwind` payload.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// The batch-planning decision for one flush: which bucket serves the
@@ -400,8 +483,7 @@ impl FanOut {
                 }
             });
             self.metrics.observe_request(item.enqueued.elapsed().as_secs_f64());
-            self.metrics.decr_queue_depth();
-            let _ = item.respond.send(result);
+            item.reply(result);
         }
     }
 
@@ -409,8 +491,7 @@ impl FanOut {
     pub fn respond_error(&self, items: &[WorkItem], error: &anyhow::Error) {
         let msg = format!("{error:#}");
         for item in items {
-            self.metrics.decr_queue_depth();
-            let _ = item.respond.send(Err(anyhow!("{msg}")));
+            item.reply(Err(anyhow!("{msg}")));
         }
     }
 }
@@ -571,7 +652,13 @@ impl Pipeline {
     pub fn complete(&self, prepared: PreparedBatch) {
         let PreparedBatch { plan, items, bufs, t_batch, gather_secs } = prepared;
         let t_exec = Instant::now();
-        let executed = self.backend.execute(&plan, &bufs);
+        // A panicking backend must not take the execute thread (and every
+        // waiting submitter) down with it: contain the unwind and fail
+        // the batch like any other execute error.
+        let executed = catch_unwind(AssertUnwindSafe(|| self.backend.execute(&plan, &bufs)))
+            .unwrap_or_else(|payload| {
+                Err(anyhow!("backend panicked: {}", panic_message(payload.as_ref())))
+            });
         let exec_secs = t_exec.elapsed().as_secs_f64();
         // The checkout returns before any response is delivered, so a
         // submitter unblocked by the fan-out observes the same arena
@@ -760,16 +847,8 @@ mod tests {
         let (tx_a, rx_a) = std::sync::mpsc::channel();
         let (tx_bad, rx_bad) = std::sync::mpsc::channel();
         let items = vec![
-            WorkItem {
-                request: Request { task: "a".into(), ids: vec![1, 2] },
-                enqueued: Instant::now(),
-                respond: tx_a,
-            },
-            WorkItem {
-                request: Request { task: "ghost".into(), ids: vec![3] },
-                enqueued: Instant::now(),
-                respond: tx_bad,
-            },
+            WorkItem::new(Request { task: "a".into(), ids: vec![1, 2] }, tx_a),
+            WorkItem::new(Request { task: "ghost".into(), ids: vec![3] }, tx_bad),
         ];
         p.process(items);
         let ok = rx_a.recv().unwrap().unwrap();
@@ -783,11 +862,7 @@ mod tests {
         let p = pipeline();
         let mk = |task: &str, ids: Vec<i32>| {
             let (tx, rx) = std::sync::mpsc::channel();
-            let item = WorkItem {
-                request: Request { task: task.into(), ids },
-                enqueued: Instant::now(),
-                respond: tx,
-            };
+            let item = WorkItem::new(Request { task: task.into(), ids }, tx);
             (item, rx)
         };
         // Warm the arena through the chained path.
@@ -808,6 +883,70 @@ mod tests {
         let err = rx.recv().unwrap().unwrap_err();
         assert!(err.to_string().contains("execute thread exited"), "{err}");
         assert_eq!(p.arena().allocs(), allocs);
+    }
+
+    #[test]
+    fn dropped_item_replies_once_and_settles_gauge() {
+        let metrics = Arc::new(Metrics::new());
+        metrics.incr_queue_depth();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let item = WorkItem::tracked(
+            Request { task: "a".into(), ids: vec![1] },
+            tx,
+            Arc::clone(&metrics),
+        );
+        drop(item);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("dropped without a reply"), "{err}");
+        assert_eq!(metrics.snapshot().queue_depth, 0);
+
+        // An answered item decrements exactly once: the drop guard after a
+        // clean reply is a no-op.
+        metrics.incr_queue_depth();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let item = WorkItem::tracked(
+            Request { task: "a".into(), ids: vec![1] },
+            tx,
+            Arc::clone(&metrics),
+        );
+        item.reply(Err(anyhow!("first")));
+        drop(item);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("first"), "{err}");
+        assert!(rx.recv().is_err(), "second reply must not be delivered");
+        assert_eq!(metrics.snapshot().queue_depth, 0);
+    }
+
+    struct PanickingBackend;
+
+    impl Backend for PanickingBackend {
+        fn execute(&self, _plan: &BatchPlan, _bufs: &BatchBuffers) -> Result<Vec<f32>> {
+            panic!("synthetic backend crash");
+        }
+
+        fn name(&self) -> &'static str {
+            "panicking"
+        }
+    }
+
+    #[test]
+    fn backend_panic_fails_the_batch_instead_of_unwinding() {
+        let reg = registry(2, 50, 4, 3);
+        let p = Pipeline::new(
+            reg,
+            buckets(),
+            3,
+            Arc::new(PanickingBackend),
+            Arc::new(Metrics::new()),
+            1,
+            false,
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let item = WorkItem::new(Request { task: "a".into(), ids: vec![1, 2] }, tx);
+        p.process(vec![item]);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("backend panicked"), "{err}");
+        assert!(err.to_string().contains("synthetic backend crash"), "{err}");
     }
 
     #[test]

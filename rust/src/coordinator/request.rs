@@ -1,6 +1,9 @@
 //! Request/response types for the serving API.  A `Request` enters the
 //! pipeline through the admission stage (`pipeline::Admission`); the
-//! matching `Response` leaves through the fan-out stage.
+//! matching `Response` leaves through the fan-out stage.  The JSON
+//! conversions here are the wire format of `POST /v1/classify`.
+
+use crate::json::Json;
 
 /// A classification request: token ids already packed (`[CLS] … [SEP]`,
 /// unpadded — the batcher pads to the chosen bucket).
@@ -8,6 +11,30 @@
 pub struct Request {
     pub task: String,
     pub ids: Vec<i32>,
+}
+
+impl Request {
+    /// Parse the `/v1/classify` body: `{"task": "...", "ids": [...]}`.
+    /// Returns a client-facing message on malformed input.
+    pub fn from_json(doc: &Json) -> std::result::Result<Request, String> {
+        let task = doc
+            .get("task")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing or non-string field \"task\"".to_string())?;
+        let ids_json = doc
+            .get("ids")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing or non-array field \"ids\"".to_string())?;
+        let mut ids = Vec::with_capacity(ids_json.len());
+        for (i, v) in ids_json.iter().enumerate() {
+            let x = v.as_f64().ok_or_else(|| format!("ids[{i}] is not a number"))?;
+            if x.fract() != 0.0 || x < i32::MIN as f64 || x > i32::MAX as f64 {
+                return Err(format!("ids[{i}] = {x} is not an i32 token id"));
+            }
+            ids.push(x as i32);
+        }
+        Ok(Request { task: task.to_string(), ids })
+    }
 }
 
 /// The response: per-class logits for the request's task.
@@ -23,6 +50,23 @@ pub struct Response {
 }
 
 impl Response {
+    /// The `/v1/classify` response body.  Logits are emitted through f64
+    /// (exact for every f32), so a client parsing them back to f32 sees
+    /// bit-identical values to in-process `classify`.
+    pub fn to_json(&self) -> Json {
+        let mut out = Json::obj();
+        out.set("task", Json::Str(self.task.clone()));
+        out.set(
+            "logits",
+            Json::Arr(self.logits.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        out.set("argmax", Json::Num(self.argmax() as f64));
+        out.set("batch_size", Json::Num(self.batch_size as f64));
+        out.set("bucket_batch", Json::Num(self.bucket_batch as f64));
+        out.set("bucket_seq", Json::Num(self.bucket_seq as f64));
+        out
+    }
+
     pub fn argmax(&self) -> i64 {
         self.logits
             .iter()
@@ -47,5 +91,48 @@ mod tests {
             bucket_seq: 16,
         };
         assert_eq!(r.argmax(), 1);
+    }
+
+    #[test]
+    fn request_from_json_parses_and_rejects() {
+        let doc = crate::json::parse(r#"{"task":"sst2","ids":[1,2,3]}"#).unwrap();
+        let req = Request::from_json(&doc).unwrap();
+        assert_eq!(req.task, "sst2");
+        assert_eq!(req.ids, vec![1, 2, 3]);
+
+        for bad in [
+            r#"{"ids":[1]}"#,
+            r#"{"task":"t"}"#,
+            r#"{"task":"t","ids":"nope"}"#,
+            r#"{"task":"t","ids":[1.5]}"#,
+            r#"{"task":"t","ids":[3000000000]}"#,
+        ] {
+            let doc = crate::json::parse(bad).unwrap();
+            assert!(Request::from_json(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn response_json_logits_round_trip_bit_exactly() {
+        let r = Response {
+            logits: vec![0.1, -2.25, 3.0e-8],
+            task: "t".into(),
+            batch_size: 2,
+            bucket_batch: 4,
+            bucket_seq: 16,
+        };
+        let doc = crate::json::parse(&r.to_json().to_string_compact()).unwrap();
+        let back: Vec<f32> = doc
+            .get("logits")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(back.len(), r.logits.len());
+        for (a, b) in back.iter().zip(&r.logits) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(doc.get("argmax").and_then(Json::as_i64), Some(0));
     }
 }

@@ -114,6 +114,13 @@ impl Json {
         out
     }
 
+    /// Single-line form (wire format for the HTTP server).
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {

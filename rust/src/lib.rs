@@ -35,6 +35,7 @@ pub mod json;
 pub mod model;
 pub mod peft;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod tokenizer;
 pub mod train;

@@ -7,9 +7,14 @@
 //!   adapters                       artifact-free tiered adapter-store
 //!                                  demo (spill + fault-in under a RAM
 //!                                  budget; HostBackend)
+//!   serve                          HTTP serving front end: data plane
+//!                                  (`--addr`) + optional management
+//!                                  plane (`--mgmt-addr`), graceful
+//!                                  drain on SIGTERM (DESIGN.md §15)
 //!   info                           manifest / model inventory
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use aotpt::cli::Args;
 use aotpt::config::{Manifest, Scale};
@@ -19,6 +24,7 @@ use aotpt::coordinator::{
 use aotpt::experiments::{norms, quality, speed, table1};
 use aotpt::peft::{parse_bytes, TaskP};
 use aotpt::runtime::Runtime;
+use aotpt::server::{signal, Server, ServerConfig};
 use aotpt::util::Pcg64;
 use aotpt::Result;
 
@@ -60,6 +66,39 @@ fn run(argv: &[String]) -> Result<()> {
     .opt("prefetch", Some("on"), "gather-aware adapter prefetch: on|off")
     .opt("tasks", Some("8"), "task count (adapters demo)")
     .opt("requests", Some("64"), "request count (adapters demo)")
+    .opt("addr", Some("127.0.0.1:7700"), "serve: data-plane bind address")
+    .opt(
+        "mgmt-addr",
+        None,
+        "serve: management-plane bind address (omit to disable the plane)",
+    )
+    .opt(
+        "request-deadline-ms",
+        Some("30000"),
+        "serve: server-side cap on the per-request deadline",
+    )
+    .opt(
+        "queue-limit",
+        Some("256"),
+        "serve: max classify requests in flight before 429",
+    )
+    .opt(
+        "io-timeout-ms",
+        Some("10000"),
+        "serve: per-connection read/write timeout (slow-loris bound)",
+    )
+    .opt("max-conns", Some("256"), "serve: max concurrent connections")
+    .opt(
+        "backend",
+        Some("host"),
+        "serve: execute backend: host (self-contained demo tasks) | pjrt \
+         (manifest-backed backbone)",
+    )
+    .opt(
+        "demo-tasks",
+        Some("4"),
+        "serve --backend host: number of synthetic demo tasks to register",
+    )
     .flag("verbose", "debug logging")
     .parse(argv)
     .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -93,6 +132,9 @@ fn run(argv: &[String]) -> Result<()> {
     if command == "adapters" {
         return run_adapters_demo(&args, adapter_cfg);
     }
+    if command == "serve" {
+        return run_serve(&args, adapter_cfg);
+    }
     let manifest = Manifest::load(&aotpt::artifacts_dir())?;
 
     match command {
@@ -125,7 +167,7 @@ fn run(argv: &[String]) -> Result<()> {
             let runtime = Runtime::new()?;
             run_experiment(&runtime, &manifest, id, scale, &args)?;
         }
-        other => anyhow::bail!("unknown command {other} (info|table1|exp|adapters)"),
+        other => anyhow::bail!("unknown command {other} (info|table1|exp|adapters|serve)"),
     }
     Ok(())
 }
@@ -258,6 +300,116 @@ fn run_adapters_demo(args: &Args, cfg: AdapterConfig) -> Result<()> {
         );
     }
     coordinator.shutdown();
+    Ok(())
+}
+
+/// `aotpt serve`: the HTTP front end (DESIGN.md §15).  `--backend host`
+/// is fully self-contained — it registers `--demo-tasks` synthetic tasks
+/// over the HostBackend, so the serving stack (and the CI smoke job) run
+/// without artifacts.  `--backend pjrt` serves the manifest-backed
+/// backbone.  Runs until SIGTERM/SIGINT or `POST /mgmt/shutdown`, then
+/// drains: the process exits non-zero if any admitted request was lost
+/// (queue depth != 0 after drain).
+fn run_serve(args: &Args, adapter_cfg: AdapterConfig) -> Result<()> {
+    let cfg = ServerConfig {
+        addr: args.get("addr").unwrap(),
+        mgmt_addr: args.get("mgmt-addr"),
+        request_deadline: Duration::from_millis(
+            args.get_usize("request-deadline-ms").map_err(anyhow::Error::msg)?.max(1) as u64,
+        ),
+        queue_limit: args.get_usize("queue-limit").map_err(anyhow::Error::msg)?.max(1),
+        io_timeout: Duration::from_millis(
+            args.get_usize("io-timeout-ms").map_err(anyhow::Error::msg)?.max(1) as u64,
+        ),
+        max_conns: args.get_usize("max-conns").map_err(anyhow::Error::msg)?.max(1),
+        ..ServerConfig::default()
+    };
+    let gather_threads = args.get_usize("gather-threads").map_err(anyhow::Error::msg)?;
+    let prefetch = args.get_via("prefetch", parse_switch).map_err(anyhow::Error::msg)?;
+    let backend = args.get("backend").unwrap();
+
+    let coordinator = match backend.as_str() {
+        "host" => {
+            let n_tasks = args.get_usize("demo-tasks").map_err(anyhow::Error::msg)?.max(1);
+            // Same small-model analog as the adapters demo.
+            let (layers, vocab, d_model, classes) = (4usize, 2048usize, 64usize, 4usize);
+            let registry =
+                TaskRegistry::with_adapter_config(layers, vocab, d_model, classes, adapter_cfg);
+            let mut rng = Pcg64::new(17);
+            for i in 0..n_tasks {
+                let name = format!("task{i:03}");
+                let table = TaskP::new(
+                    layers,
+                    vocab,
+                    d_model,
+                    rng.normal_vec(layers * vocab * d_model, 0.5),
+                )?;
+                let head_w = aotpt::tensor::Tensor::from_f32(
+                    &[d_model, 2],
+                    rng.normal_vec(d_model * 2, 0.2),
+                );
+                let head_b = aotpt::tensor::Tensor::from_f32(&[2], vec![0.0; 2]);
+                registry.register_fused(&name, table, &head_w, &head_b)?;
+            }
+            println!("registered {n_tasks} demo tasks (task000..task{:03})", n_tasks - 1);
+            let buckets = vec![Bucket { batch: 1, seq: 32 }, Bucket { batch: 8, seq: 32 }];
+            Coordinator::with_backend(
+                registry,
+                buckets,
+                classes,
+                CoordinatorConfig {
+                    model: "host".into(),
+                    linger_ms: 1,
+                    signature: "aot".into(),
+                    gather_threads,
+                    prefetch,
+                    ..Default::default()
+                },
+                Arc::new(HostBackend),
+            )?
+        }
+        "pjrt" => {
+            let manifest = Manifest::load(&aotpt::artifacts_dir())?;
+            let model = args.get("model").unwrap_or_else(|| "small".into());
+            let info = manifest.model(&model)?;
+            let registry = TaskRegistry::with_adapter_config(
+                info.n_layers,
+                manifest.vocab_size,
+                info.d_model,
+                manifest.multitask_classes,
+                adapter_cfg,
+            );
+            let runtime = Runtime::new()?;
+            Coordinator::new(
+                runtime,
+                &manifest,
+                registry,
+                CoordinatorConfig { model, gather_threads, prefetch, ..Default::default() },
+            )?
+        }
+        other => anyhow::bail!("unknown serve backend {other} (host|pjrt)"),
+    };
+
+    let server = Server::bind(Arc::new(coordinator), cfg)?;
+    println!("data plane listening on {}", server.data_addr());
+    if let Some(addr) = server.mgmt_addr() {
+        println!("management plane listening on {addr}");
+    }
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+
+    signal::install();
+    while !signal::triggered() && !server.shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("shutdown requested; draining");
+    let snapshot = server.drain();
+    println!("{}", snapshot.render());
+    anyhow::ensure!(
+        snapshot.queue_depth == 0,
+        "drain left queue depth {} (lost replies)",
+        snapshot.queue_depth
+    );
     Ok(())
 }
 

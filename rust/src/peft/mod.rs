@@ -38,7 +38,7 @@ pub use kernel::{KernelMode, RowKernel};
 pub use pool::GatherPool;
 pub use quant::{AdapterDType, Int8TaskP, QuantizedTaskP};
 pub use residency::{
-    default_mmap, parse_bytes, AdapterConfig, AdapterStats, ColdCounters, ColdTable,
+    default_mmap, parse_bytes, AdapterConfig, AdapterStats, ColdCounters, ColdTable, TaskInfo,
 };
 pub use store::{row_norms, DedupTaskP, PStore, RowCounts, RowSource, TaskP};
 

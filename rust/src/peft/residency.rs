@@ -225,6 +225,20 @@ impl AdapterStats {
     }
 }
 
+/// One task's row in the management listing (`GET /mgmt/adapters`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskInfo {
+    pub name: String,
+    pub pinned: bool,
+    /// Tier label (`"ram-f32"`, `"disk"`, …), or `"busy"` when the
+    /// entry's state lock was contended at listing time.
+    pub tier: &'static str,
+    /// Storage dtype name; empty for `"busy"` entries.
+    pub dtype: &'static str,
+    /// Host RAM pinned by this task (0 for the disk tier).
+    pub resident_bytes: usize,
+}
+
 /// Cold-tier mmap counters, shared (`Arc`) between the residency
 /// manager and every [`ColdTable`] it opens.  Sharing — instead of
 /// folding these into the manager's own atomics — keeps the
@@ -924,6 +938,48 @@ impl Residency {
             self.entries.read().unwrap().keys().cloned().collect();
         names.sort();
         names
+    }
+
+    /// Per-task rows for the management listing (`GET /mgmt/adapters`),
+    /// sorted by name.  Uses `try_lock` on each entry's state — the lock
+    /// is held across spill/fault-in disk I/O, and the control plane must
+    /// never stall the data plane — so a contended entry reports tier
+    /// `"busy"` instead of blocking.
+    pub fn task_infos(&self) -> Vec<TaskInfo> {
+        let entries = self.entries.read().unwrap();
+        let mut sorted: Vec<&Arc<Entry>> = entries.values().collect();
+        sorted.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut out = Vec::with_capacity(sorted.len());
+        for entry in sorted {
+            let pinned = entry.pinned.load(Ordering::Relaxed);
+            let info = match entry.state.try_lock() {
+                Ok(state) => match &*state {
+                    Tier::Resident { table, .. } => TaskInfo {
+                        name: entry.name.clone(),
+                        pinned,
+                        tier: table.tier(),
+                        dtype: table.dtype().name(),
+                        resident_bytes: table.resident_bytes(),
+                    },
+                    Tier::Spilled { cold } => TaskInfo {
+                        name: entry.name.clone(),
+                        pinned,
+                        tier: cold.tier(),
+                        dtype: cold.dtype().name(),
+                        resident_bytes: cold.resident_bytes(),
+                    },
+                },
+                Err(_) => TaskInfo {
+                    name: entry.name.clone(),
+                    pinned,
+                    tier: "busy",
+                    dtype: "",
+                    resident_bytes: 0,
+                },
+            };
+            out.push(info);
+        }
+        out
     }
 
     pub fn contains(&self, name: &str) -> bool {

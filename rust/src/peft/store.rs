@@ -29,7 +29,7 @@ use crate::Result;
 
 use super::pool::GatherPool;
 use super::quant::AdapterDType;
-use super::residency::{AdapterConfig, AdapterStats, Residency};
+use super::residency::{AdapterConfig, AdapterStats, Residency, TaskInfo};
 
 /// Logical-vs-stored row counts of a source — the dedup observability
 /// that feeds `AdapterStats::dedup_ratio` (DESIGN.md §12).
@@ -436,6 +436,12 @@ impl PStore {
     /// order and type as `TaskRegistry::task_names`).
     pub fn task_names(&self) -> Vec<String> {
         self.residency.names_sorted()
+    }
+
+    /// Per-task management rows (name, pinned, tier, dtype, resident
+    /// bytes), sorted by name; never blocks on a contended entry.
+    pub fn task_infos(&self) -> Vec<TaskInfo> {
+        self.residency.task_infos()
     }
 
     pub fn len(&self) -> usize {

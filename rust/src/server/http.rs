@@ -1,0 +1,433 @@
+//! Minimal dependency-free HTTP/1.1 request/response support
+//! (DESIGN.md §15).  Scope is deliberately small: request-head parsing
+//! with hard size caps, exact `Content-Length` bodies (no chunked
+//! encoding), keep-alive with a shared carry buffer, and length-framed
+//! responses.  Everything beyond that is the routing layer's problem.
+//!
+//! Error model: an [`HttpError`] is a *connection-level* failure — the
+//! stream may be out of sync with the request framing (unread body,
+//! truncated head), so the connection loop answers it and closes.
+//! Request-level failures on an in-sync connection come back as ordinary
+//! [`Reply`] values and keep the connection usable.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+use crate::json::Json;
+
+/// Hard cap on the request head (request line + all headers).  Covers
+/// both the oversized-header and the endless-request-line attack.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Hard cap on the header count.
+pub const MAX_HEADERS: usize = 64;
+
+/// A connection-level error: one HTTP status + client-facing message.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into() }
+    }
+}
+
+/// A parsed request head (the body, if any, is still on the wire).
+#[derive(Debug)]
+pub struct RequestHead {
+    pub method: String,
+    pub path: String,
+    /// Decoded query parameters, in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Header names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+}
+
+impl RequestHead {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Declared body length (`Content-Length`, default 0).  Chunked
+    /// transfer encoding is out of scope.
+    pub fn content_length(&self) -> Result<usize, HttpError> {
+        if self.header("transfer-encoding").is_some() {
+            return Err(HttpError::new(501, "chunked transfer encoding is not supported"));
+        }
+        match self.header("content-length") {
+            None => Ok(0),
+            Some(v) => v
+                .parse()
+                .map_err(|_| HttpError::new(400, format!("bad content-length {v:?}"))),
+        }
+    }
+
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Read one request head from the connection.  `carry` holds bytes read
+/// past the previous request's framing (keep-alive pipelining); leftover
+/// bytes after the head (the body's prefix) stay in it.
+///
+/// Returns `Ok(None)` on a clean close between requests — including an
+/// idle keep-alive connection hitting the read timeout with nothing
+/// buffered.  A timeout *mid-head* is the slow-loris case and comes back
+/// as 408.
+pub fn read_head(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+) -> Result<Option<RequestHead>, HttpError> {
+    loop {
+        if let Some((end, term)) = find_head_end(carry) {
+            let head = parse_head(&carry[..end])?;
+            carry.drain(..end + term);
+            return Ok(Some(head));
+        }
+        if carry.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::new(
+                431,
+                format!("request head exceeds {MAX_HEAD_BYTES} bytes"),
+            ));
+        }
+        let mut tmp = [0u8; 4096];
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return if carry.iter().all(|b| b.is_ascii_whitespace()) {
+                    Ok(None)
+                } else {
+                    Err(HttpError::new(400, "connection closed mid-request-head"))
+                };
+            }
+            Ok(n) => carry.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return if carry.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(HttpError::new(408, "timed out reading request head"))
+                };
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::new(400, format!("read error: {e}"))),
+        }
+    }
+}
+
+/// Position and length of the head terminator (`\r\n\r\n` or `\n\n`),
+/// whichever comes first.
+fn find_head_end(buf: &[u8]) -> Option<(usize, usize)> {
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| (p, 4));
+    let lf = buf.windows(2).position(|w| w == b"\n\n").map(|p| (p, 2));
+    match (crlf, lf) {
+        (Some(a), Some(b)) => Some(if a.0 <= b.0 { a } else { b }),
+        (a, b) => a.or(b),
+    }
+}
+
+fn parse_head(raw: &[u8]) -> Result<RequestHead, HttpError> {
+    let text = std::str::from_utf8(raw)
+        .map_err(|_| HttpError::new(400, "request head is not valid UTF-8"))?;
+    let mut lines = text.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => {
+            return Err(HttpError::new(
+                400,
+                format!("malformed request line {request_line:?}"),
+            ))
+        }
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, format!("malformed method {method:?}")));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(505, format!("unsupported protocol version {version}")));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::new(400, format!("malformed request target {target:?}")));
+    }
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = Vec::new();
+    for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.push((percent_decode(k)?, percent_decode(v)?));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::new(431, format!("more than {MAX_HEADERS} headers")));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, format!("malformed header line {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok(RequestHead {
+        method: method.to_string(),
+        path: path.to_string(),
+        query,
+        headers,
+    })
+}
+
+fn percent_decode(s: &str) -> Result<String, HttpError> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let byte = bytes
+                    .get(i + 1..i + 3)
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .and_then(|h| u8::from_str_radix(h, 16).ok())
+                    .ok_or_else(|| {
+                        HttpError::new(400, format!("bad percent escape in {s:?}"))
+                    })?;
+                out.push(byte);
+                i += 3;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out)
+        .map_err(|_| HttpError::new(400, format!("query value is not UTF-8 after decoding: {s:?}")))
+}
+
+/// Read exactly `len` body bytes — the carry buffer first, then the
+/// stream — into `sink`.  `cap` bounds admission; the upload route
+/// streams to a file under a much larger cap than the JSON data plane.
+pub fn read_body_into(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    len: usize,
+    cap: usize,
+    sink: &mut dyn Write,
+) -> Result<(), HttpError> {
+    if len > cap {
+        return Err(HttpError::new(
+            413,
+            format!("body of {len} bytes exceeds the {cap}-byte limit"),
+        ));
+    }
+    let take = len.min(carry.len());
+    sink.write_all(&carry[..take]).map_err(sink_error)?;
+    carry.drain(..take);
+    let mut remaining = len - take;
+    let mut tmp = [0u8; 16 * 1024];
+    while remaining > 0 {
+        let want = remaining.min(tmp.len());
+        match stream.read(&mut tmp[..want]) {
+            Ok(0) => {
+                return Err(HttpError::new(
+                    400,
+                    format!("truncated body: {remaining} of {len} bytes missing"),
+                ))
+            }
+            Ok(n) => {
+                sink.write_all(&tmp[..n]).map_err(sink_error)?;
+                remaining -= n;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return Err(HttpError::new(408, "timed out reading request body"));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::new(400, format!("read error: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+fn sink_error(e: std::io::Error) -> HttpError {
+    HttpError::new(500, format!("failed to store request body: {e}"))
+}
+
+/// `read_body_into` buffered into RAM (the JSON data plane).
+pub fn read_body(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    len: usize,
+    cap: usize,
+) -> Result<Vec<u8>, HttpError> {
+    let mut body = Vec::with_capacity(len.min(1 << 20));
+    read_body_into(stream, carry, len, cap, &mut body)?;
+    Ok(body)
+}
+
+/// A routed response.  Always written with `Content-Length`, so the
+/// connection framing survives for keep-alive.
+#[derive(Debug)]
+pub struct Reply {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub headers: Vec<(&'static str, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Reply {
+    pub fn json(status: u16, doc: &Json) -> Reply {
+        let mut body = doc.to_string_compact().into_bytes();
+        body.push(b'\n');
+        Reply {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body,
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Reply {
+        Reply {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            headers: Vec::new(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// `{"error": message}` — every error body has this shape.
+    pub fn error(status: u16, message: &str) -> Reply {
+        let mut doc = Json::obj();
+        doc.set("error", Json::Str(message.to_string()));
+        Reply::json(status, &doc)
+    }
+
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Reply {
+        self.headers.push((name, value.into()));
+        self
+    }
+}
+
+pub fn write_reply(stream: &mut TcpStream, reply: &Reply, close: bool) -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let mut head = String::with_capacity(256);
+    let _ = write!(
+        head,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
+        reply.status,
+        status_reason(reply.status),
+        reply.content_type,
+        reply.body.len()
+    );
+    for (k, v) in &reply.headers {
+        let _ = write!(head, "{k}: {v}\r\n");
+    }
+    if close {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&reply.body)?;
+    stream.flush()
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request_line_query_and_headers() {
+        let head = parse_head(
+            b"POST /v1/classify?name=a%20b&pin=true HTTP/1.1\r\n\
+              Host: localhost\r\n\
+              Content-Length: 12\r\n\
+              Connection: Close\r\n",
+        )
+        .unwrap();
+        assert_eq!(head.method, "POST");
+        assert_eq!(head.path, "/v1/classify");
+        assert_eq!(head.query_param("name"), Some("a b"));
+        assert_eq!(head.query_param("pin"), Some("true"));
+        assert_eq!(head.header("host"), Some("localhost"));
+        assert_eq!(head.content_length().unwrap(), 12);
+        assert!(head.wants_close());
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        for (raw, status) in [
+            (&b"GARBAGE\r\n"[..], 400),
+            (&b"GET /x HTTP/1.1 EXTRA\r\n"[..], 400),
+            (&b"get /x HTTP/1.1\r\n"[..], 400),
+            (&b"GET x HTTP/1.1\r\n"[..], 400),
+            (&b"GET /x SPDY/3\r\n"[..], 505),
+            (&b"GET /x HTTP/1.1\r\nno-colon-here\r\n"[..], 400),
+        ] {
+            let err = parse_head(raw).unwrap_err();
+            assert_eq!(err.status, status, "{raw:?}: {}", err.message);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_content_length_and_chunked() {
+        let head = parse_head(b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n").unwrap();
+        assert_eq!(head.content_length().unwrap_err().status, 400);
+        let head = parse_head(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n").unwrap();
+        assert_eq!(head.content_length().unwrap_err().status, 501);
+    }
+
+    #[test]
+    fn caps_header_count() {
+        let mut raw = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADERS + 1) {
+            raw.extend_from_slice(format!("x-h{i}: v\r\n").as_bytes());
+        }
+        assert_eq!(parse_head(&raw).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn finds_both_terminators() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some((14, 4)));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\n\nrest"), Some((14, 2)));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n"), None);
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%2Fb+c").unwrap(), "a/b c");
+        assert!(percent_decode("%zz").is_err());
+        assert!(percent_decode("%2").is_err());
+    }
+}

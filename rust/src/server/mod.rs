@@ -1,0 +1,299 @@
+//! Dependency-free HTTP/1.1 serving front end (DESIGN.md §15).
+//!
+//! Two planes, two listeners:
+//!
+//! * **data** (`--addr`) — `POST /v1/classify` + `/healthz`.  Admission
+//!   is bounded (`queue_limit` in-flight → fast 429) and every request
+//!   carries a deadline (client `timeout_ms` clamped by the server cap →
+//!   504 past it).
+//! * **management** (`--mgmt-addr`, optional) — `/metrics`,
+//!   `/mgmt/adapters` (list / streamed `.aotckpt` register / unregister
+//!   / pin) and `/mgmt/shutdown`.  A separate listener means the public
+//!   data port never carries control authority.
+//!
+//! Threading: one nonblocking accept thread per plane (10ms sleep-poll,
+//! so stopping is just a flag), one thread per connection with read and
+//! write timeouts (slow-loris defense), keep-alive with a carry buffer.
+//!
+//! Graceful drain ([`Server::drain`]): refuse new connections, join the
+//! accept threads, [`Coordinator::drain`] the admitted backlog (every
+//! queued request is answered), then join the connection threads — which
+//! exit promptly because responses during drain set `connection: close`.
+
+pub mod http;
+mod routes;
+pub mod signal;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::coordinator::{Coordinator, MetricsSnapshot};
+use crate::Result;
+
+use http::{write_reply, Reply};
+
+/// Which listener a connection arrived on.  Routing is plane-scoped:
+/// data routes 404 on the management port and vice versa.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Plane {
+    Data,
+    Mgmt,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Data-plane bind address (`host:port`; port 0 picks one).
+    pub addr: String,
+    /// Management-plane bind address; `None` disables the plane.
+    pub mgmt_addr: Option<String>,
+    /// Server-side cap on the per-request deadline.
+    pub request_deadline: Duration,
+    /// Max classify requests in flight before 429.
+    pub queue_limit: usize,
+    /// Per-connection read/write timeout.
+    pub io_timeout: Duration,
+    /// Max concurrent connections per server before refusing with 503.
+    pub max_conns: usize,
+    /// Max JSON body size on the data plane.
+    pub max_body: usize,
+    /// Max `.aotckpt` upload size on the management plane.
+    pub max_upload: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            mgmt_addr: None,
+            request_deadline: Duration::from_secs(30),
+            queue_limit: 256,
+            io_timeout: Duration::from_secs(10),
+            max_conns: 256,
+            max_body: 1 << 20,
+            max_upload: 1 << 30,
+        }
+    }
+}
+
+/// State shared by accept loops, connection threads and route handlers.
+pub(crate) struct ServerInner {
+    pub(crate) coordinator: Arc<Coordinator>,
+    pub(crate) cfg: ServerConfig,
+    pub(crate) draining: AtomicBool,
+    pub(crate) shutdown_requested: AtomicBool,
+    pub(crate) inflight: AtomicUsize,
+    pub(crate) conns: AtomicUsize,
+    pub(crate) upload_seq: AtomicUsize,
+}
+
+pub struct Server {
+    inner: Arc<ServerInner>,
+    data_addr: SocketAddr,
+    mgmt_addr: Option<SocketAddr>,
+    stop_accept: Arc<AtomicBool>,
+    accept_handles: Vec<JoinHandle<()>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind both planes and start accepting.
+    pub fn bind(coordinator: Arc<Coordinator>, cfg: ServerConfig) -> Result<Server> {
+        let data_listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding data plane on {}", cfg.addr))?;
+        data_listener.set_nonblocking(true)?;
+        let data_addr = data_listener.local_addr()?;
+        let mgmt_listener = match &cfg.mgmt_addr {
+            Some(addr) => {
+                let l = TcpListener::bind(addr)
+                    .with_context(|| format!("binding management plane on {addr}"))?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+            None => None,
+        };
+        let mgmt_addr = match &mgmt_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+
+        let inner = Arc::new(ServerInner {
+            coordinator,
+            cfg,
+            draining: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            conns: AtomicUsize::new(0),
+            upload_seq: AtomicUsize::new(0),
+        });
+        let stop_accept = Arc::new(AtomicBool::new(false));
+        let conn_handles = Arc::new(Mutex::new(Vec::new()));
+
+        let mut accept_handles = Vec::new();
+        let planes = std::iter::once((data_listener, Plane::Data, "aotpt-accept-data"))
+            .chain(mgmt_listener.map(|l| (l, Plane::Mgmt, "aotpt-accept-mgmt")));
+        for (listener, plane, name) in planes {
+            let inner = Arc::clone(&inner);
+            let stop = Arc::clone(&stop_accept);
+            let handles = Arc::clone(&conn_handles);
+            accept_handles.push(
+                std::thread::Builder::new()
+                    .name(name.to_string())
+                    .spawn(move || accept_loop(listener, inner, stop, plane, handles))?,
+            );
+        }
+
+        Ok(Server {
+            inner,
+            data_addr,
+            mgmt_addr,
+            stop_accept,
+            accept_handles,
+            conn_handles,
+        })
+    }
+
+    pub fn data_addr(&self) -> SocketAddr {
+        self.data_addr
+    }
+
+    pub fn mgmt_addr(&self) -> Option<SocketAddr> {
+        self.mgmt_addr
+    }
+
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.inner.coordinator
+    }
+
+    /// Has `POST /mgmt/shutdown` been received?
+    pub fn shutdown_requested(&self) -> bool {
+        self.inner.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Graceful drain: stop accepting, flush every admitted request,
+    /// join all threads.  Returns the final metrics snapshot — the
+    /// queue-depth gauge must read 0 in it.
+    pub fn drain(mut self) -> MetricsSnapshot {
+        self.inner.draining.store(true, Ordering::SeqCst);
+        self.stop_accept.store(true, Ordering::SeqCst);
+        for handle in self.accept_handles.drain(..) {
+            let _ = handle.join();
+        }
+        // Answer everything already admitted; new submits get 503.
+        self.inner.coordinator.drain();
+        let handles: Vec<JoinHandle<()>> = {
+            let mut guard = self.conn_handles.lock().unwrap();
+            guard.drain(..).collect()
+        };
+        for handle in handles {
+            let _ = handle.join();
+        }
+        self.inner.coordinator.metrics().snapshot()
+    }
+}
+
+/// Decrements the live-connection gauge when a connection thread exits,
+/// panic or not.
+struct ConnGuard(Arc<ServerInner>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    inner: Arc<ServerInner>,
+    stop: Arc<AtomicBool>,
+    plane: Plane,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if inner.draining.load(Ordering::SeqCst) {
+                    refuse(stream, "server is draining");
+                    continue;
+                }
+                if inner.conns.load(Ordering::SeqCst) >= inner.cfg.max_conns {
+                    refuse(stream, "too many connections");
+                    continue;
+                }
+                inner.conns.fetch_add(1, Ordering::SeqCst);
+                let conn_inner = Arc::clone(&inner);
+                let spawned = std::thread::Builder::new()
+                    .name("aotpt-conn".to_string())
+                    .spawn(move || {
+                        let _guard = ConnGuard(Arc::clone(&conn_inner));
+                        serve_conn(stream, conn_inner, plane);
+                    });
+                match spawned {
+                    Ok(handle) => {
+                        let mut handles = conn_handles.lock().unwrap();
+                        handles.retain(|h| !h.is_finished());
+                        handles.push(handle);
+                    }
+                    Err(_) => {
+                        inner.conns.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Turn away a connection before it gets a thread.
+fn refuse(mut stream: TcpStream, msg: &str) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let reply = Reply::error(503, msg).with_header("retry-after", "1");
+    let _ = write_reply(&mut stream, &reply, true);
+}
+
+fn serve_conn(mut stream: TcpStream, inner: Arc<ServerInner>, plane: Plane) {
+    // Sockets accepted from a nonblocking listener inherit nonblocking
+    // mode on some platforms; force blocking-with-timeouts semantics.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(inner.cfg.io_timeout));
+    let _ = stream.set_write_timeout(Some(inner.cfg.io_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut carry: Vec<u8> = Vec::new();
+    loop {
+        let head = match http::read_head(&mut stream, &mut carry) {
+            Ok(Some(head)) => head,
+            Ok(None) => return,
+            Err(err) => {
+                let _ = write_reply(&mut stream, &Reply::error(err.status, &err.message), true);
+                return;
+            }
+        };
+        let close = head.wants_close() || inner.draining.load(Ordering::SeqCst);
+        match routes::dispatch(&inner, &head, &mut stream, &mut carry, plane) {
+            Ok(reply) => {
+                if write_reply(&mut stream, &reply, close).is_err() || close {
+                    return;
+                }
+            }
+            Err(err) => {
+                // Framing is unknown (body unread / head truncated):
+                // answer and close.
+                let _ = write_reply(&mut stream, &Reply::error(err.status, &err.message), true);
+                return;
+            }
+        }
+    }
+}

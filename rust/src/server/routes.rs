@@ -1,0 +1,425 @@
+//! Route table + handlers for both planes (DESIGN.md §15).
+//!
+//! The data plane exposes exactly `POST /v1/classify` (plus `/healthz`);
+//! everything operational — metrics, adapter lifecycle, shutdown — lives
+//! on the management plane so a public-facing data listener never
+//! carries control authority.
+//!
+//! Handlers return `Ok(Reply)` for request-level failures (the body was
+//! fully consumed, the connection stays usable) and `Err(HttpError)`
+//! only when the connection framing is no longer trustworthy.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use crate::coordinator::Request;
+use crate::json::{self, Json};
+use crate::peft::TaskP;
+use crate::tensor::ckpt;
+
+use super::http::{self, HttpError, Reply, RequestHead};
+use super::{Plane, ServerInner};
+
+/// Cap for bodies on routes that ignore them (we still must consume the
+/// bytes to keep keep-alive framing intact).
+const DRAIN_BODY_CAP: usize = 64 * 1024;
+
+pub(crate) fn dispatch(
+    inner: &ServerInner,
+    head: &RequestHead,
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    plane: Plane,
+) -> Result<Reply, HttpError> {
+    let body_len = head.content_length()?;
+    match (plane, head.method.as_str(), head.path.as_str()) {
+        (_, "GET", "/healthz") => {
+            drain_body(stream, carry, body_len)?;
+            Ok(Reply::text(200, "ok\n"))
+        }
+        (Plane::Data, "POST", "/v1/classify") => classify(inner, head, stream, carry, body_len),
+        (Plane::Mgmt, "GET", "/metrics") => {
+            drain_body(stream, carry, body_len)?;
+            Ok(metrics_reply(inner, head))
+        }
+        (Plane::Mgmt, "GET", "/mgmt/adapters") => {
+            drain_body(stream, carry, body_len)?;
+            Ok(list_adapters(inner))
+        }
+        (Plane::Mgmt, "POST", "/mgmt/adapters") => {
+            register_adapter(inner, head, stream, carry, body_len)
+        }
+        (Plane::Mgmt, "DELETE", "/mgmt/adapters") => {
+            drain_body(stream, carry, body_len)?;
+            Ok(unregister_adapter(inner, head))
+        }
+        (Plane::Mgmt, "POST", "/mgmt/adapters/pin") => {
+            drain_body(stream, carry, body_len)?;
+            Ok(pin_adapter(inner, head))
+        }
+        (Plane::Mgmt, "POST", "/mgmt/shutdown") => {
+            drain_body(stream, carry, body_len)?;
+            inner.shutdown_requested.store(true, Ordering::SeqCst);
+            let mut doc = Json::obj();
+            doc.set("status", Json::Str("draining".into()));
+            Ok(Reply::json(200, &doc))
+        }
+        // Known paths with the wrong method: 405 + `allow`.
+        (_, _, "/healthz") => method_not_allowed(stream, carry, body_len, head, "GET"),
+        (Plane::Data, _, "/v1/classify") => {
+            method_not_allowed(stream, carry, body_len, head, "POST")
+        }
+        (Plane::Mgmt, _, "/metrics") => method_not_allowed(stream, carry, body_len, head, "GET"),
+        (Plane::Mgmt, _, "/mgmt/adapters") => {
+            method_not_allowed(stream, carry, body_len, head, "GET, POST, DELETE")
+        }
+        (Plane::Mgmt, _, "/mgmt/adapters/pin") => {
+            method_not_allowed(stream, carry, body_len, head, "POST")
+        }
+        (Plane::Mgmt, _, "/mgmt/shutdown") => {
+            method_not_allowed(stream, carry, body_len, head, "POST")
+        }
+        _ => {
+            drain_body(stream, carry, body_len)?;
+            Ok(Reply::error(
+                404,
+                &format!("no route for {} {}", head.method, head.path),
+            ))
+        }
+    }
+}
+
+fn method_not_allowed(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    body_len: usize,
+    head: &RequestHead,
+    allow: &'static str,
+) -> Result<Reply, HttpError> {
+    drain_body(stream, carry, body_len)?;
+    Ok(
+        Reply::error(405, &format!("{} not allowed on {}", head.method, head.path))
+            .with_header("allow", allow),
+    )
+}
+
+/// Consume and discard a request body so the next keep-alive request
+/// starts at a frame boundary.
+fn drain_body(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    len: usize,
+) -> Result<(), HttpError> {
+    if len == 0 {
+        return Ok(());
+    }
+    let mut sink = std::io::sink();
+    http::read_body_into(stream, carry, len, DRAIN_BODY_CAP, &mut sink)
+}
+
+// ---------------------------------------------------------------- data plane
+
+/// In-flight admission token.  Bounds concurrent requests *per server*
+/// ahead of the coordinator queue so overload turns into a fast 429
+/// instead of a pile of blocked connection threads.
+struct InflightGuard<'a> {
+    inner: &'a ServerInner,
+}
+
+impl<'a> InflightGuard<'a> {
+    fn admit(inner: &'a ServerInner) -> Option<InflightGuard<'a>> {
+        let limit = inner.cfg.queue_limit;
+        inner
+            .inflight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < limit).then_some(n + 1)
+            })
+            .ok()
+            .map(|_| InflightGuard { inner })
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.inner.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn classify(
+    inner: &ServerInner,
+    head: &RequestHead,
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    body_len: usize,
+) -> Result<Reply, HttpError> {
+    let body = http::read_body(stream, carry, body_len, inner.cfg.max_body)?;
+    // Body fully consumed — everything below is a request-level reply.
+    let text = match std::str::from_utf8(&body) {
+        Ok(t) => t,
+        Err(_) => return Ok(Reply::error(400, "body is not valid UTF-8")),
+    };
+    let doc = match json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return Ok(Reply::error(400, &format!("bad JSON body: {e}"))),
+    };
+    let request = match Request::from_json(&doc) {
+        Ok(r) => r,
+        Err(e) => return Ok(Reply::error(400, &e)),
+    };
+    let deadline = match request_deadline(inner, &doc) {
+        Ok(d) => d,
+        Err(e) => return Ok(Reply::error(400, &e)),
+    };
+    let _guard = match InflightGuard::admit(inner) {
+        Some(g) => g,
+        None => {
+            return Ok(Reply::error(
+                429,
+                &format!("server at capacity ({} requests in flight)", inner.cfg.queue_limit),
+            )
+            .with_header("retry-after", "1"))
+        }
+    };
+    let rx = match inner.coordinator.submit(request) {
+        Ok(rx) => rx,
+        Err(e) => return Ok(submit_error_reply(&e.to_string())),
+    };
+    match rx.recv_timeout(deadline) {
+        Ok(Ok(response)) => Ok(Reply::json(200, &response.to_json())),
+        Ok(Err(e)) => Ok(submit_error_reply(&e.to_string())),
+        Err(RecvTimeoutError::Timeout) => Ok(Reply::error(
+            504,
+            &format!("deadline exceeded after {}ms", deadline.as_millis()),
+        )),
+        Err(RecvTimeoutError::Disconnected) => {
+            Ok(Reply::error(500, "coordinator dropped the request"))
+        }
+    }
+}
+
+/// Effective deadline: client `timeout_ms`, clamped by the server cap.
+fn request_deadline(inner: &ServerInner, doc: &Json) -> Result<Duration, String> {
+    let cap = inner.cfg.request_deadline;
+    match doc.get("timeout_ms") {
+        None => Ok(cap),
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .ok_or_else(|| "timeout_ms must be a number".to_string())?;
+            if !ms.is_finite() || ms < 1.0 {
+                return Err(format!("timeout_ms must be >= 1, got {ms}"));
+            }
+            Ok(Duration::from_millis(ms as u64).min(cap))
+        }
+    }
+}
+
+/// Map a coordinator error message onto the HTTP error table
+/// (DESIGN.md §15): unknown task → 404, lifecycle refusals → 503 with
+/// retry-after, admission/shape rejections → 400, the rest → 500.
+fn submit_error_reply(msg: &str) -> Reply {
+    if msg.contains("unknown task") {
+        Reply::error(404, msg)
+    } else if msg.contains("draining") || msg.contains("shut down") || msg.contains("worker exited")
+    {
+        Reply::error(503, msg).with_header("retry-after", "1")
+    } else if msg.contains("length") || msg.contains("empty") || msg.contains("bucket") {
+        Reply::error(400, msg)
+    } else {
+        Reply::error(500, msg)
+    }
+}
+
+// ---------------------------------------------------------- management plane
+
+fn metrics_reply(inner: &ServerInner, head: &RequestHead) -> Reply {
+    let snap = inner.coordinator.metrics().snapshot();
+    let wants_json = head.query_param("format") == Some("json")
+        || head
+            .header("accept")
+            .is_some_and(|a| a.contains("application/json"));
+    if wants_json {
+        Reply::json(200, &snap.to_json())
+    } else {
+        Reply::text(200, format!("{}\n", snap.render()))
+    }
+}
+
+fn list_adapters(inner: &ServerInner) -> Reply {
+    let registry = inner.coordinator.registry();
+    let mut tasks = Json::Arr(Vec::new());
+    for info in registry.pstore().task_infos() {
+        let mut t = Json::obj();
+        t.set("name", Json::Str(info.name.clone()));
+        t.set("pinned", Json::Bool(info.pinned));
+        t.set("tier", Json::Str(info.tier.to_string()));
+        t.set("dtype", Json::Str(info.dtype.to_string()));
+        t.set("resident_bytes", Json::Num(info.resident_bytes as f64));
+        if let Ok(state) = registry.get(&info.name) {
+            t.set("classes", Json::Num(state.classes as f64));
+        }
+        tasks.push(t);
+    }
+    let mut doc = Json::obj();
+    doc.set("tasks", tasks);
+    Reply::json(200, &doc)
+}
+
+fn valid_task_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 128
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-')
+}
+
+/// Required, validated `?name=` parameter.
+fn task_name_param(head: &RequestHead) -> Result<String, String> {
+    match head.query_param("name") {
+        Some(name) if valid_task_name(name) => Ok(name.to_string()),
+        Some(name) => Err(format!(
+            "invalid task name {name:?} (want [A-Za-z0-9._-]{{1,128}})"
+        )),
+        None => Err("missing required query parameter `name`".to_string()),
+    }
+}
+
+/// Temp file for a streamed `.aotckpt` upload; removed on drop.
+struct TempUpload {
+    path: PathBuf,
+}
+
+impl TempUpload {
+    fn new(inner: &ServerInner) -> TempUpload {
+        let seq = inner.upload_seq.fetch_add(1, Ordering::SeqCst);
+        TempUpload {
+            path: std::env::temp_dir().join(format!(
+                "aotpt-upload-{}-{seq}.aotckpt",
+                std::process::id()
+            )),
+        }
+    }
+}
+
+impl Drop for TempUpload {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// `POST /mgmt/adapters?name=X[&pin=true]` — body is an `.aotckpt`
+/// checkpoint holding `p` `[l,V,d]`, `head_w` `[d,c]`, `head_b` `[c]`.
+/// Registers (or hot-replaces) the task while serving continues.
+fn register_adapter(
+    inner: &ServerInner,
+    head: &RequestHead,
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    body_len: usize,
+) -> Result<Reply, HttpError> {
+    let name = match task_name_param(head) {
+        Ok(name) => name,
+        // Bad name: reject without reading the (possibly huge) body; the
+        // connection-level error path closes the socket for us.
+        Err(msg) => return Err(HttpError::new(400, msg)),
+    };
+    if body_len == 0 {
+        return Ok(Reply::error(400, "empty body; expected an .aotckpt checkpoint"));
+    }
+    let tmp = TempUpload::new(inner);
+    {
+        let file = std::fs::File::create(&tmp.path)
+            .map_err(|e| HttpError::new(500, format!("cannot stage upload: {e}")))?;
+        let mut sink = std::io::BufWriter::new(file);
+        http::read_body_into(stream, carry, body_len, inner.cfg.max_upload, &mut sink)?;
+        sink.flush()
+            .map_err(|e| HttpError::new(500, format!("cannot stage upload: {e}")))?;
+    }
+    let tensors = match ckpt::load(&tmp.path) {
+        Ok(t) => t,
+        Err(e) => return Ok(Reply::error(400, &format!("bad checkpoint: {e}"))),
+    };
+    let (p, head_w, head_b) = match (
+        tensors.get("p"),
+        tensors.get("head_w"),
+        tensors.get("head_b"),
+    ) {
+        (Some(p), Some(w), Some(b)) => (p, w, b),
+        _ => {
+            return Ok(Reply::error(
+                400,
+                "checkpoint must contain tensors `p`, `head_w` and `head_b`",
+            ))
+        }
+    };
+    let registry = inner.coordinator.registry();
+    let task_p = match TaskP::from_tensor(
+        registry.layers(),
+        registry.vocab(),
+        registry.d_model(),
+        p,
+    ) {
+        Ok(t) => t,
+        Err(e) => return Ok(Reply::error(400, &format!("bad `p` tensor: {e}"))),
+    };
+    let replaced = registry.get(&name).is_ok();
+    let classes = head_b.len();
+    if let Err(e) = registry.register_fused(&name, task_p, head_w, head_b) {
+        return Ok(Reply::error(400, &e.to_string()));
+    }
+    let pin = matches!(head.query_param("pin"), Some("true") | Some("1") | Some("on"));
+    if pin {
+        if let Err(e) = registry.pin_task(&name, true) {
+            return Ok(Reply::error(500, &format!("registered but pin failed: {e}")));
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("task", Json::Str(name));
+    doc.set("classes", Json::Num(classes as f64));
+    doc.set("pinned", Json::Bool(pin));
+    doc.set("replaced", Json::Bool(replaced));
+    Ok(Reply::json(200, &doc))
+}
+
+fn unregister_adapter(inner: &ServerInner, head: &RequestHead) -> Reply {
+    let name = match task_name_param(head) {
+        Ok(name) => name,
+        Err(msg) => return Reply::error(400, &msg),
+    };
+    match inner.coordinator.registry().unregister(&name) {
+        Ok(()) => {
+            let mut doc = Json::obj();
+            doc.set("unregistered", Json::Str(name));
+            Reply::json(200, &doc)
+        }
+        Err(e) => Reply::error(404, &e.to_string()),
+    }
+}
+
+/// `POST /mgmt/adapters/pin?name=X[&state=on|off]` (default `on`).
+fn pin_adapter(inner: &ServerInner, head: &RequestHead) -> Reply {
+    let name = match task_name_param(head) {
+        Ok(name) => name,
+        Err(msg) => return Reply::error(400, &msg),
+    };
+    let state = match head.query_param("state").unwrap_or("on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => {
+            return Reply::error(400, &format!("bad pin state {other:?} (want on|off)"));
+        }
+    };
+    match inner.coordinator.registry().pin_task(&name, state) {
+        Ok(()) => {
+            let mut doc = Json::obj();
+            doc.set("task", Json::Str(name));
+            doc.set("pinned", Json::Bool(state));
+            Reply::json(200, &doc)
+        }
+        Err(e) => Reply::error(404, &e.to_string()),
+    }
+}

@@ -1,0 +1,40 @@
+//! Async-signal-safe SIGTERM/SIGINT latch for graceful drain.
+//!
+//! Dependency-free: on unix we call `signal(2)` directly through the C
+//! ABI and the handler only stores to an `AtomicBool` (the one thing a
+//! signal handler may safely do).  The serve loop polls [`triggered`]
+//! and runs the drain itself, outside signal context.  On non-unix
+//! targets installation is a no-op and shutdown comes from the
+//! management endpoint only.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sys {
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+    extern "C" {
+        pub fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_signum: i32) {
+    TRIGGERED.store(true, Ordering::SeqCst);
+}
+
+/// Install the latch for SIGTERM and SIGINT.  Idempotent.
+pub fn install() {
+    #[cfg(unix)]
+    unsafe {
+        sys::signal(sys::SIGTERM, on_signal);
+        sys::signal(sys::SIGINT, on_signal);
+    }
+}
+
+/// Has a termination signal arrived since install?
+pub fn triggered() -> bool {
+    TRIGGERED.load(Ordering::SeqCst)
+}

@@ -1,0 +1,211 @@
+//! Regression tests for the shutdown/accounting bug sweep: every
+//! admitted request is answered exactly once, the queue-depth gauge
+//! settles to 0 on every exit path, and a panicking worker/backend turns
+//! into request errors instead of hung clients.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use aotpt::coordinator::{
+    Backend, BatchBuffers, BatchPlan, Bucket, Coordinator, CoordinatorConfig, HostBackend,
+    Request, TaskRegistry,
+};
+use aotpt::peft::TaskP;
+use aotpt::tensor::Tensor;
+use aotpt::util::Pcg64;
+
+const LAYERS: usize = 2;
+const VOCAB: usize = 64;
+const D_MODEL: usize = 8;
+const CLASSES: usize = 2;
+
+fn registry(n_tasks: usize) -> TaskRegistry {
+    let registry = TaskRegistry::new(LAYERS, VOCAB, D_MODEL, CLASSES);
+    let mut rng = Pcg64::new(7);
+    for i in 0..n_tasks {
+        let table = TaskP::new(
+            LAYERS,
+            VOCAB,
+            D_MODEL,
+            rng.normal_vec(LAYERS * VOCAB * D_MODEL, 0.3),
+        )
+        .unwrap();
+        let head_w =
+            Tensor::from_f32(&[D_MODEL, CLASSES], rng.normal_vec(D_MODEL * CLASSES, 0.2));
+        let head_b = Tensor::from_f32(&[CLASSES], vec![0.0; CLASSES]);
+        registry.register_fused(&format!("task{i}"), table, &head_w, &head_b).unwrap();
+    }
+    registry
+}
+
+fn coordinator(backend: Arc<dyn Backend>, n_tasks: usize) -> Coordinator {
+    Coordinator::with_backend(
+        registry(n_tasks),
+        vec![Bucket { batch: 4, seq: 16 }],
+        CLASSES,
+        CoordinatorConfig {
+            model: "host".into(),
+            linger_ms: 1,
+            signature: "aot".into(),
+            ..Default::default()
+        },
+        backend,
+    )
+    .unwrap()
+}
+
+fn ids(seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::new(seed);
+    (0..6).map(|_| rng.range(0, VOCAB as i64) as i32).collect()
+}
+
+/// HostBackend with a fixed stall per batch — long enough that a burst
+/// of submits piles up in the queue behind the first batch.
+struct StalledBackend {
+    stall: Duration,
+    batches: AtomicUsize,
+}
+
+impl Backend for StalledBackend {
+    fn execute(&self, plan: &BatchPlan, bufs: &BatchBuffers) -> aotpt::Result<Vec<f32>> {
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(self.stall);
+        HostBackend.execute(plan, bufs)
+    }
+
+    fn name(&self) -> &'static str {
+        "stalled-host"
+    }
+}
+
+struct PanickingBackend;
+
+impl Backend for PanickingBackend {
+    fn execute(&self, _plan: &BatchPlan, _bufs: &BatchBuffers) -> aotpt::Result<Vec<f32>> {
+        panic!("synthetic backend crash");
+    }
+
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+}
+
+/// The admitted-then-worker-exits race: hard shutdown while a burst is
+/// queued behind a stalled execute.  Every receiver must still get an
+/// answer (success or "shut down") and the gauge must settle to 0.
+#[test]
+fn hard_shutdown_answers_residual_queue_and_settles_gauge() {
+    let backend = Arc::new(StalledBackend {
+        stall: Duration::from_millis(150),
+        batches: AtomicUsize::new(0),
+    });
+    let c = coordinator(backend, 2);
+    let mut receivers = Vec::new();
+    for i in 0..12u64 {
+        let rx = c
+            .submit(Request { task: format!("task{}", i % 2), ids: ids(i) })
+            .unwrap();
+        receivers.push(rx);
+    }
+    // Let the worker dequeue the first batch and stall inside execute,
+    // then pull the rug out while the rest is still queued.
+    std::thread::sleep(Duration::from_millis(40));
+    c.shutdown();
+    let mut answered = 0;
+    for rx in receivers {
+        // Every admitted request is answered — no hung receiver.  The
+        // generous timeout only bounds a deadlock; normally this is
+        // immediate because shutdown() joined the worker already.
+        let result = rx.recv_timeout(Duration::from_secs(10)).expect("reply arrives");
+        answered += 1;
+        if let Err(e) = result {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("shut down") || msg.contains("dropped"),
+                "unexpected shutdown error: {msg}"
+            );
+        }
+    }
+    assert_eq!(answered, 12);
+    assert_eq!(c.metrics().snapshot().queue_depth, 0, "gauge leaked");
+}
+
+/// Graceful drain under load: the backlog is flushed, every reply is a
+/// success, and the gauge reads 0.
+#[test]
+fn drain_flushes_backlog_with_all_successes() {
+    let backend = Arc::new(StalledBackend {
+        stall: Duration::from_millis(30),
+        batches: AtomicUsize::new(0),
+    });
+    let c = coordinator(Arc::clone(&backend) as Arc<dyn Backend>, 2);
+    let mut receivers = Vec::new();
+    for i in 0..10u64 {
+        let rx = c
+            .submit(Request { task: format!("task{}", i % 2), ids: ids(100 + i) })
+            .unwrap();
+        receivers.push(rx);
+    }
+    c.drain();
+    for rx in receivers {
+        let response = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("reply arrives")
+            .expect("drain answers with success");
+        assert_eq!(response.logits.len(), CLASSES);
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.requests, 10);
+    assert_eq!(snap.queue_depth, 0);
+    assert!(backend.batches.load(Ordering::SeqCst) >= 1);
+    // Drain is terminal: new submits are refused, not queued forever.
+    assert!(c.submit(Request { task: "task0".into(), ids: ids(1) }).is_err());
+}
+
+/// A worker that panics after dequeue (backend panic) must fail the
+/// request instead of hanging the client — and the coordinator keeps
+/// answering subsequent requests.
+#[test]
+fn backend_panic_fails_requests_instead_of_hanging() {
+    let c = coordinator(Arc::new(PanickingBackend), 1);
+    for i in 0..3u64 {
+        let err = c.classify("task0", ids(i)).expect_err("panicking backend errors");
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    }
+    assert_eq!(c.metrics().snapshot().queue_depth, 0);
+    c.shutdown();
+}
+
+/// Deadline-aware receive: a stalled execute turns into a deadline error
+/// for the caller, and the (eventually produced) reply is dropped
+/// harmlessly with the gauge still settling once.
+#[test]
+fn classify_deadline_times_out_on_stalled_execute() {
+    let backend = Arc::new(StalledBackend {
+        stall: Duration::from_millis(300),
+        batches: AtomicUsize::new(0),
+    });
+    let c = coordinator(backend, 1);
+    let err = c
+        .classify_deadline("task0", ids(5), Some(Duration::from_millis(20)))
+        .expect_err("deadline fires first");
+    assert!(format!("{err:#}").contains("deadline exceeded"), "{err:#}");
+    // The batch is still in flight; drain flushes it and the gauge
+    // settles even though the receiver is gone.
+    c.drain();
+    assert_eq!(c.metrics().snapshot().queue_depth, 0);
+}
+
+/// Submitting after shutdown is a fast error, not a hang.
+#[test]
+fn submit_after_shutdown_errors() {
+    let c = coordinator(Arc::new(HostBackend), 1);
+    assert!(c.classify("task0", ids(2)).is_ok());
+    c.shutdown();
+    let err = c
+        .submit(Request { task: "task0".into(), ids: ids(3) })
+        .expect_err("shut down coordinator refuses work");
+    assert!(format!("{err:#}").contains("shut down"), "{err:#}");
+    assert_eq!(c.metrics().snapshot().queue_depth, 0);
+}

@@ -1,0 +1,456 @@
+//! Integration: the HTTP serving front end over a raw `TcpStream`
+//! client — framing edge cases, the error-code table, deadline/overload
+//! behavior, bit-exactness vs in-process classify, the management plane
+//! round trip, and graceful drain under load.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use aotpt::coordinator::{
+    Backend, BatchBuffers, BatchPlan, Bucket, Coordinator, CoordinatorConfig, HostBackend,
+    TaskRegistry,
+};
+use aotpt::json::{self, Json};
+use aotpt::peft::TaskP;
+use aotpt::server::{Server, ServerConfig};
+use aotpt::tensor::{ckpt, Tensor};
+use aotpt::util::Pcg64;
+
+const LAYERS: usize = 2;
+const VOCAB: usize = 64;
+const D_MODEL: usize = 8;
+const CLASSES: usize = 2;
+
+fn registry(n_tasks: usize) -> TaskRegistry {
+    let registry = TaskRegistry::new(LAYERS, VOCAB, D_MODEL, CLASSES);
+    let mut rng = Pcg64::new(11);
+    for i in 0..n_tasks {
+        let table = TaskP::new(
+            LAYERS,
+            VOCAB,
+            D_MODEL,
+            rng.normal_vec(LAYERS * VOCAB * D_MODEL, 0.3),
+        )
+        .unwrap();
+        let head_w =
+            Tensor::from_f32(&[D_MODEL, CLASSES], rng.normal_vec(D_MODEL * CLASSES, 0.2));
+        let head_b = Tensor::from_f32(&[CLASSES], vec![0.0; CLASSES]);
+        registry.register_fused(&format!("task{i}"), table, &head_w, &head_b).unwrap();
+    }
+    registry
+}
+
+fn coordinator(backend: Arc<dyn Backend>, n_tasks: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::with_backend(
+            registry(n_tasks),
+            vec![Bucket { batch: 4, seq: 16 }],
+            CLASSES,
+            CoordinatorConfig {
+                model: "host".into(),
+                linger_ms: 1,
+                signature: "aot".into(),
+                ..Default::default()
+            },
+            backend,
+        )
+        .unwrap(),
+    )
+}
+
+fn test_config() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        mgmt_addr: Some("127.0.0.1:0".into()),
+        request_deadline: Duration::from_secs(5),
+        io_timeout: Duration::from_secs(2),
+        ..ServerConfig::default()
+    }
+}
+
+fn server(backend: Arc<dyn Backend>, n_tasks: usize) -> Server {
+    Server::bind(coordinator(backend, n_tasks), test_config()).unwrap()
+}
+
+struct StalledBackend {
+    stall: Duration,
+    batches: AtomicUsize,
+}
+
+impl StalledBackend {
+    fn new(stall_ms: u64) -> Arc<StalledBackend> {
+        Arc::new(StalledBackend {
+            stall: Duration::from_millis(stall_ms),
+            batches: AtomicUsize::new(0),
+        })
+    }
+}
+
+impl Backend for StalledBackend {
+    fn execute(&self, plan: &BatchPlan, bufs: &BatchBuffers) -> aotpt::Result<Vec<f32>> {
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(self.stall);
+        HostBackend.execute(plan, bufs)
+    }
+
+    fn name(&self) -> &'static str {
+        "stalled-host"
+    }
+}
+
+// ------------------------------------------------------------ raw client
+
+struct HttpResponse {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl HttpResponse {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        json::parse(std::str::from_utf8(&self.body).expect("UTF-8 body")).expect("JSON body")
+    }
+}
+
+/// Send raw bytes, read the (connection-close) response to EOF, parse.
+fn raw_round_trip(addr: SocketAddr, raw: &[u8]) -> HttpResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    stream.write_all(raw).expect("send");
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).expect("read response");
+    parse_response(&buf)
+}
+
+fn parse_response(buf: &[u8]) -> HttpResponse {
+    let head_end = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response head terminator");
+    let head = std::str::from_utf8(&buf[..head_end]).expect("UTF-8 head");
+    let mut lines = head.lines();
+    let status_line = lines.next().expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    HttpResponse { status, headers, body: buf[head_end + 4..].to_vec() }
+}
+
+/// One request/response on a fresh connection (`connection: close`).
+fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&[u8]>) -> HttpResponse {
+    let body = body.unwrap_or(b"");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: test\r\nconnection: close\r\ncontent-length: {}\r\n\r\n",
+        body.len()
+    );
+    let mut raw = head.into_bytes();
+    raw.extend_from_slice(body);
+    raw_round_trip(addr, &raw)
+}
+
+fn classify_body(task: &str, ids: &[i32], timeout_ms: Option<u64>) -> Vec<u8> {
+    let ids = ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+    let timeout = timeout_ms.map(|t| format!(",\"timeout_ms\":{t}")).unwrap_or_default();
+    format!("{{\"task\":\"{task}\",\"ids\":[{ids}]{timeout}}}").into_bytes()
+}
+
+fn ids(seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::new(seed);
+    (0..6).map(|_| rng.range(0, VOCAB as i64) as i32).collect()
+}
+
+// ------------------------------------------------------------------- tests
+
+#[test]
+fn healthz_on_both_planes() {
+    let server = server(Arc::new(HostBackend), 1);
+    for addr in [server.data_addr(), server.mgmt_addr().unwrap()] {
+        let resp = request(addr, "GET", "/healthz", None);
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"ok\n");
+    }
+}
+
+#[test]
+fn classify_over_http_matches_in_process_bit_exactly() {
+    let server = server(Arc::new(HostBackend), 2);
+    let input = ids(42);
+    let expected = server.coordinator().classify("task1", input.clone()).unwrap();
+    let resp = request(
+        server.data_addr(),
+        "POST",
+        "/v1/classify",
+        Some(&classify_body("task1", &input, None)),
+    );
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let doc = resp.json();
+    assert_eq!(doc.get("task").and_then(|t| t.as_str()), Some("task1"));
+    let logits: Vec<f32> = doc
+        .get("logits")
+        .and_then(|l| l.as_arr())
+        .expect("logits array")
+        .iter()
+        .map(|x| x.as_f64().expect("numeric logit") as f32)
+        .collect();
+    assert_eq!(logits.len(), expected.logits.len());
+    // f32 -> f64 -> shortest-repr decimal -> f64 -> f32 is lossless, so
+    // the HTTP path must reproduce in-process logits bit for bit.
+    for (h, e) in logits.iter().zip(&expected.logits) {
+        assert_eq!(h.to_bits(), e.to_bits(), "{h} vs {e}");
+    }
+    assert_eq!(
+        doc.get("argmax").and_then(|a| a.as_f64()).map(|a| a as usize),
+        expected.argmax()
+    );
+}
+
+#[test]
+fn error_table_on_the_data_plane() {
+    let server = server(Arc::new(HostBackend), 1);
+    let addr = server.data_addr();
+
+    // Malformed request line.
+    let resp = raw_round_trip(addr, b"NOT-HTTP\r\n\r\n");
+    assert_eq!(resp.status, 400);
+
+    // Unsupported protocol version.
+    let resp = raw_round_trip(addr, b"GET /healthz SPDY/3\r\n\r\n");
+    assert_eq!(resp.status, 505);
+
+    // Oversized head: never reaches a terminator before the cap.
+    let mut raw = b"GET /healthz HTTP/1.1\r\n".to_vec();
+    let filler = format!("x-filler: {}\r\n", "y".repeat(4000));
+    for _ in 0..6 {
+        raw.extend_from_slice(filler.as_bytes());
+    }
+    let resp = raw_round_trip(addr, &raw);
+    assert_eq!(resp.status, 431);
+
+    // Truncated body: declared 64 bytes, delivered 9, then EOF.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    stream
+        .write_all(b"POST /v1/classify HTTP/1.1\r\ncontent-length: 64\r\n\r\n{\"task\":\"")
+        .unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    assert_eq!(parse_response(&buf).status, 400);
+
+    // Bad JSON, wrong shapes, unknown task, wrong method.
+    let resp = request(addr, "POST", "/v1/classify", Some(b"{not json"));
+    assert_eq!(resp.status, 400);
+    let resp = request(addr, "POST", "/v1/classify", Some(b"{\"task\":\"task0\"}"));
+    assert_eq!(resp.status, 400);
+    let resp = request(addr, "POST", "/v1/classify", Some(&classify_body("nope", &ids(1), None)));
+    assert_eq!(resp.status, 404);
+    let resp = request(addr, "PUT", "/v1/classify", None);
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("POST"));
+    let resp = request(addr, "GET", "/no/such/route", None);
+    assert_eq!(resp.status, 404);
+
+    // Management routes are absent from the data plane.
+    let resp = request(addr, "GET", "/metrics", None);
+    assert_eq!(resp.status, 404);
+    let resp = request(addr, "POST", "/mgmt/shutdown", None);
+    assert_eq!(resp.status, 404);
+}
+
+#[test]
+fn deadline_maps_to_504() {
+    let server = server(StalledBackend::new(500), 1);
+    let resp = request(
+        server.data_addr(),
+        "POST",
+        "/v1/classify",
+        Some(&classify_body("task0", &ids(3), Some(20))),
+    );
+    assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
+    let msg = resp.json();
+    assert!(
+        msg.get("error").and_then(|e| e.as_str()).unwrap().contains("deadline exceeded"),
+        "{msg:?}"
+    );
+}
+
+#[test]
+fn overload_maps_to_429_with_retry_after() {
+    let mut cfg = test_config();
+    cfg.queue_limit = 1;
+    let server =
+        Server::bind(coordinator(StalledBackend::new(400) as Arc<dyn Backend>, 1), cfg).unwrap();
+    let addr = server.data_addr();
+    let slow = std::thread::spawn(move || {
+        request(addr, "POST", "/v1/classify", Some(&classify_body("task0", &ids(4), None)))
+    });
+    // Let the slow request occupy the single admission slot.
+    std::thread::sleep(Duration::from_millis(100));
+    let resp =
+        request(addr, "POST", "/v1/classify", Some(&classify_body("task0", &ids(5), None)));
+    assert_eq!(resp.status, 429, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert_eq!(slow.join().unwrap().status, 200);
+}
+
+#[test]
+fn metrics_scrape_text_and_json() {
+    let server = server(Arc::new(HostBackend), 1);
+    let resp = request(
+        server.data_addr(),
+        "POST",
+        "/v1/classify",
+        Some(&classify_body("task0", &ids(6), None)),
+    );
+    assert_eq!(resp.status, 200);
+    let mgmt = server.mgmt_addr().unwrap();
+
+    let text = request(mgmt, "GET", "/metrics", None);
+    assert_eq!(text.status, 200);
+    let rendered = String::from_utf8(text.body).unwrap();
+    assert!(rendered.contains("requests=1"), "{rendered}");
+
+    let as_json = request(mgmt, "GET", "/metrics?format=json", None);
+    assert_eq!(as_json.status, 200);
+    let doc = as_json.json();
+    assert_eq!(doc.path("requests").and_then(|r| r.as_usize()), Some(1));
+    assert_eq!(doc.path("queue_depth").and_then(|q| q.as_usize()), Some(0));
+    assert!(doc.path("adapter.kernel").is_some());
+}
+
+#[test]
+fn mgmt_adapter_register_pin_unregister_round_trip() {
+    let server = server(Arc::new(HostBackend), 1);
+    let mgmt = server.mgmt_addr().unwrap();
+    let data = server.data_addr();
+
+    // Build a real .aotckpt upload body.
+    let mut rng = Pcg64::new(99);
+    let mut tensors = BTreeMap::new();
+    tensors.insert(
+        "p".to_string(),
+        Tensor::from_f32(
+            &[LAYERS, VOCAB, D_MODEL],
+            rng.normal_vec(LAYERS * VOCAB * D_MODEL, 0.3),
+        ),
+    );
+    tensors.insert(
+        "head_w".to_string(),
+        Tensor::from_f32(&[D_MODEL, CLASSES], rng.normal_vec(D_MODEL * CLASSES, 0.2)),
+    );
+    tensors.insert("head_b".to_string(), Tensor::from_f32(&[CLASSES], vec![0.25, -0.25]));
+    let path = std::env::temp_dir()
+        .join(format!("aotpt-server-test-upload-{}.aotckpt", std::process::id()));
+    ckpt::save(&path, &tensors).unwrap();
+    let upload = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // Register (+pin) via streamed upload.
+    let resp = request(mgmt, "POST", "/mgmt/adapters?name=uploaded&pin=true", Some(&upload));
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let doc = resp.json();
+    assert_eq!(doc.get("task").and_then(|t| t.as_str()), Some("uploaded"));
+    assert_eq!(doc.get("classes").and_then(|c| c.as_usize()), Some(CLASSES));
+    assert_eq!(doc.get("replaced").and_then(|r| r.as_bool()), Some(false));
+    assert_eq!(doc.get("pinned").and_then(|p| p.as_bool()), Some(true));
+
+    // Listed, pinned, and servable.
+    let listing = request(mgmt, "GET", "/mgmt/adapters", None).json();
+    let tasks = listing.get("tasks").and_then(|t| t.as_arr()).unwrap();
+    let uploaded = tasks
+        .iter()
+        .find(|t| t.get("name").and_then(|n| n.as_str()) == Some("uploaded"))
+        .expect("uploaded task listed");
+    assert_eq!(uploaded.get("pinned").and_then(|p| p.as_bool()), Some(true));
+    assert_eq!(uploaded.get("classes").and_then(|c| c.as_usize()), Some(CLASSES));
+    let resp =
+        request(data, "POST", "/v1/classify", Some(&classify_body("uploaded", &ids(7), None)));
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+
+    // Replace is reported as such.
+    let resp = request(mgmt, "POST", "/mgmt/adapters?name=uploaded", Some(&upload));
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().get("replaced").and_then(|r| r.as_bool()), Some(true));
+
+    // Unpin, unregister, and confirm it is gone end to end.
+    let resp = request(mgmt, "POST", "/mgmt/adapters/pin?name=uploaded&state=off", None);
+    assert_eq!(resp.status, 200);
+    let resp = request(mgmt, "DELETE", "/mgmt/adapters?name=uploaded", None);
+    assert_eq!(resp.status, 200);
+    let resp = request(mgmt, "DELETE", "/mgmt/adapters?name=uploaded", None);
+    assert_eq!(resp.status, 404);
+    let resp =
+        request(data, "POST", "/v1/classify", Some(&classify_body("uploaded", &ids(7), None)));
+    assert_eq!(resp.status, 404);
+
+    // Upload edge cases: empty body, garbage bytes, missing name.
+    let resp = request(mgmt, "POST", "/mgmt/adapters?name=empty", Some(b""));
+    assert_eq!(resp.status, 400);
+    let resp = request(mgmt, "POST", "/mgmt/adapters?name=garbage", Some(b"not a ckpt"));
+    assert_eq!(resp.status, 400);
+    let resp = request(mgmt, "POST", "/mgmt/adapters", Some(&upload));
+    assert_eq!(resp.status, 400);
+}
+
+#[test]
+fn shutdown_endpoint_latches_drain_request() {
+    let server = server(Arc::new(HostBackend), 1);
+    assert!(!server.shutdown_requested());
+    let resp = request(server.mgmt_addr().unwrap(), "POST", "/mgmt/shutdown", None);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().get("status").and_then(|s| s.as_str()), Some("draining"));
+    assert!(server.shutdown_requested());
+}
+
+#[test]
+fn drain_while_serving_loses_no_replies() {
+    let server = server(StalledBackend::new(80) as Arc<dyn Backend>, 2);
+    let addr = server.data_addr();
+    let mut clients = Vec::new();
+    for i in 0..8u64 {
+        clients.push(std::thread::spawn(move || {
+            request(
+                addr,
+                "POST",
+                "/v1/classify",
+                Some(&classify_body(&format!("task{}", i % 2), &ids(50 + i), None)),
+            )
+        }));
+    }
+    // Let the burst get admitted, then drain underneath it.
+    std::thread::sleep(Duration::from_millis(60));
+    let snapshot = server.drain();
+    let mut served = 0;
+    for client in clients {
+        let resp = client.join().unwrap();
+        // Every client gets a definitive answer: a successful classify,
+        // or an explicit drain refusal for stragglers that submitted
+        // after admission closed.
+        assert!(
+            resp.status == 200 || resp.status == 503,
+            "unexpected status {}: {}",
+            resp.status,
+            String::from_utf8_lossy(&resp.body)
+        );
+        if resp.status == 200 {
+            served += 1;
+        }
+    }
+    assert!(served >= 1, "drain answered nothing successfully");
+    assert_eq!(snapshot.queue_depth, 0, "drain leaked queue depth");
+}
